@@ -1,0 +1,80 @@
+"""Analytical serving-latency model driven by the roofline terms.
+
+This container has no H100s/TPUs to time, so Tables 5–10 are reproduced
+*analytically*: per-token/per-prefill cost = compute term + HBM term +
+sync term, with the sync term carrying the dense-vs-PT difference
+(count × (latency + bytes/link_bw)).  The model is deliberately simple —
+its purpose is to show the PT effect (fewer, smaller syncs => lower TTFT
+/ TPOT, biggest at small batch), not to predict absolute H100 numbers.
+
+Per-sync launch/latency overhead defaults to 8 µs (NCCL/ICI small-message
+latency order); chips = 8 (one track per chip for n=8 PT — the paper's
+8×H100 setup mapped onto 8 TPU chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.common import hw
+from repro.common.types import ModelConfig
+from repro.core.track import dense_tp_sync_points, pt_sync_points
+from repro.roofline.analysis import model_n_params
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeHW:
+    chips: int = 8
+    peak: float = hw.PEAK_FLOPS_BF16
+    hbm: float = hw.HBM_BW
+    link: float = hw.ICI_BW
+    sync_latency: float = 8e-6
+
+
+def _syncs(cfg: ModelConfig) -> int:
+    if cfg.pt is not None:
+        return pt_sync_points(cfg.n_layers, cfg.pt.block_depth,
+                              cfg.pt.fuse_final)
+    return dense_tp_sync_points(cfg.n_layers)
+
+
+def _sync_time(cfg: ModelConfig, tokens: int, h: ServeHW) -> float:
+    n = _syncs(cfg)
+    width = cfg.d_model             # PT configs carry d_track here
+    bytes_per = tokens * width * 2
+    ring = 2 * (h.chips - 1) / h.chips
+    return n * (h.sync_latency + ring * bytes_per / h.link)
+
+
+def prefill_time(cfg: ModelConfig, input_len: int, batch: int = 1,
+                 h: ServeHW = ServeHW()) -> float:
+    n_active = model_n_params(cfg, active=True)
+    flops = 2.0 * n_active * input_len * batch
+    # attention quadratic term (full heads across tracks)
+    attn = 2.0 * 2.0 * cfg.n_layers * (input_len ** 2) / 2 * (
+        cfg.n_heads * cfg.head_dim) * batch
+    compute = (flops + attn) / (h.chips * h.peak)
+    weights = 2.0 * model_n_params(cfg) / (h.chips * h.hbm)
+    return compute + weights + _sync_time(cfg, input_len * batch, h)
+
+
+def decode_token_time(cfg: ModelConfig, context: int, batch: int = 1,
+                      h: ServeHW = ServeHW()) -> float:
+    n_active = model_n_params(cfg, active=True)
+    flops = 2.0 * n_active * batch
+    compute = flops / (h.chips * h.peak)
+    # bandwidth: weights once per step + KV cache read per sequence
+    kv_per_tok = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim * 2
+    n_tracks = cfg.pt.n_tracks if cfg.pt is not None else 1
+    mem = (2.0 * model_n_params(cfg)
+           + batch * context * kv_per_tok * n_tracks) / (h.chips * h.hbm)
+    return compute + mem + _sync_time(cfg, batch, h)
+
+
+def throughput(cfg: ModelConfig, input_len: int, output_len: int,
+               batch: int = 256, h: ServeHW = ServeHW()) -> float:
+    """Output tokens/sec in throughput mode (batched)."""
+    t_prefill = prefill_time(cfg, input_len, batch, h)
+    t_decode = output_len * decode_token_time(
+        cfg, input_len + output_len // 2, batch, h)
+    return batch * output_len / (t_prefill + t_decode)

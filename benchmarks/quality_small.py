@@ -1,0 +1,69 @@
+"""Tables 2–4 analogue at CPU scale: train a small dense model and PT
+variants (D ∈ {2,4,8}, same parameter budget, same recipe/data) on the
+synthetic LM task and compare loss trajectories.
+
+The paper's finding at 6B–30B/400–800B tokens is that PT matches dense
+quality; at this scale we verify the weaker but testable statement that
+PT models train stably to a loss close to dense under an identical
+recipe.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import pt_paper
+from repro.core.track import pt_ify
+from repro.data.pipeline import DataConfig, DataLoader
+from repro.launch import steps as steps_lib
+from repro.common.pytree import count_params
+
+
+def train_one(cfg, steps: int, batch: int = 8, seq: int = 64,
+              lr: float = 3e-3, log=print):
+    fns = steps_lib.model_fns(cfg)
+    par = steps_lib.build_parallelism(cfg, "train", None)
+    step_fn, opt_init, _ = steps_lib.make_train_step(
+        cfg, par, microbatches=1, peak_lr=lr, warmup=max(5, steps // 10),
+        total_steps=steps)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    opt = opt_init(params)
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    loader = DataLoader(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                   global_batch=batch, seed=1))
+    losses = []
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(loader).items()}
+        params, opt, m = jit_step(params, opt, b)
+        if i % max(1, steps // 10) == 0 or i == steps - 1:
+            losses.append(float(m["loss"]))
+    return losses, count_params(params)
+
+
+def main(quick: bool = False) -> dict:
+    steps = 60 if quick else 300
+    base = pt_paper.reduced_dense().replace(n_layers=8, d_model=128,
+                                            n_heads=8, n_kv_heads=2,
+                                            d_ff=352, vocab_size=512)
+    results = {}
+    t0 = time.time()
+    losses, n = train_one(base, steps)
+    results["dense"] = {"loss": losses, "params": n}
+    print(f"dense,{n},{losses[0]:.4f},{losses[-1]:.4f}")
+    for D in (2, 4, 8):
+        cfg = pt_ify(base, 4, D, width_mult=16)
+        losses, n = train_one(cfg, steps)
+        results[f"pt_d{D}"] = {"loss": losses, "params": n}
+        print(f"pt_d{D},{n},{losses[0]:.4f},{losses[-1]:.4f}")
+    results["wall_s"] = time.time() - t0
+    dense_final = results["dense"]["loss"][-1]
+    for D in (2, 4, 8):
+        gap = results[f"pt_d{D}"]["loss"][-1] - dense_final
+        print(f"# pt_d{D} final-loss gap vs dense: {gap:+.4f}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

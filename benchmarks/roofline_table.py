@@ -1,0 +1,83 @@
+"""Render the dry-run artifacts (artifacts/dryrun/*.json) into the
+§Dry-run and §Roofline markdown tables for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List, Optional
+
+ART = Path("artifacts/dryrun")
+
+
+def load(mesh: str = "single") -> List[dict]:
+    rows = []
+    for f in sorted(ART.glob(f"*__{mesh}.json")):
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def _fmt_bytes(b: float) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(mesh: str = "single") -> str:
+    rows = load(mesh)
+    out = ["| arch | shape | status | dev | args GiB/chip | temp GiB/chip "
+           "| HLO GFLOP/chip | collective GiB/chip |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | |")
+            continue
+        rf = r["roofline"]
+        coll = rf["collectives"].get("total", 0.0)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {rf['n_devices']} "
+            f"| {_fmt_bytes(r['memory']['argument_bytes'])} "
+            f"| {_fmt_bytes(r['memory']['temp_bytes'])} "
+            f"| {rf['compute_s'] * 197e3:.1f} "
+            f"| {_fmt_bytes(coll)} |")
+    return "\n".join(out)
+
+
+def roofline_table(mesh: str = "single") -> str:
+    rows = load(mesh)
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL_FLOPS | useful/HLO | roofline frac | "
+           "what would move the bottleneck |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rf['compute_s']:.3e} | {rf['memory_s']:.3e} "
+            f"| {rf['collective_s']:.3e} | {rf['dominant']} "
+            f"| {rf['model_flops']:.2e} | {rf['useful_flops_ratio']:.2f} "
+            f"| {rf['roofline_fraction']:.3f} | {advice(rf)} |")
+    return "\n".join(out)
+
+
+def advice(rf: dict) -> str:
+    dom = rf["dominant"]
+    if dom == "collective":
+        big = max((k for k, v in rf["collectives"].items()
+                   if not k.endswith("count") and k != "total"),
+                  key=lambda k: rf["collectives"][k], default="?")
+        return f"cut {big} traffic (overlap/reshard/quantize)"
+    if dom == "memory":
+        if rf["useful_flops_ratio"] < 0.6:
+            return "less recompute (remat policy) + fuse fp32 upcasts"
+        return "raise arithmetic intensity (larger microbatch/blocks)"
+    return "already compute-bound: close useful/HLO gap"
+
+
+def main(quick: bool = False) -> str:
+    t = roofline_table("single")
+    print(t)
+    return t
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Benchmark entry point: one section per paper table/figure plus the
+kernel microbenches.  Prints ``name,us_per_call,derived`` CSV lines per
+the harness contract.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _bench(fn, *args, reps: int = 3, warmup: int = 1, **kw) -> float:
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args, **kw)
+        if hasattr(r, "block_until_ready"):
+            r.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def kernel_microbench() -> list:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    rows = []
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 256, 4, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 256, 4, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 256, 4, 64))
+    us = _bench(lambda: ops.flash_attention(q, k, v, block_q=128,
+                                            block_k=128))
+    ref_us = _bench(lambda: ref.flash_attention_ref(q, k, v))
+    rows.append(("kernel.flash_attention[2x256x4x64]", us,
+                 f"ref={ref_us:.0f}us(interpret-mode)"))
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 128, 256))
+    s = jax.random.normal(jax.random.PRNGKey(4), (256,)) * 0.1
+    us = _bench(lambda: ops.rmsnorm(x, s))
+    rows.append(("kernel.rmsnorm[8x128x256]", us, ""))
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(5),
+                                         (2, 128, 64, 8)))
+    b = jax.random.normal(jax.random.PRNGKey(6), (2, 128, 64, 8))
+    h0 = jnp.zeros((2, 64, 8))
+    us = _bench(lambda: ops.ssm_scan(a, b, h0, chunk=64, block_d=32))
+    rows.append(("kernel.ssm_scan[2x128x64x8]", us, ""))
+    return rows
+
+
+def model_step_bench() -> list:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import reduced_config
+    from repro.data.pipeline import DataConfig, sample_batch
+    from repro.launch import steps as S
+    rows = []
+    for arch in ("tinyllama-1.1b", "deepseek-v3-671b", "falcon-mamba-7b"):
+        cfg = reduced_config(arch)
+        fns = S.model_fns(cfg)
+        par = S.build_parallelism(cfg, "train", None)
+        step, opt_init, _ = S.make_train_step(cfg, par, microbatches=1)
+        params = fns["init"](jax.random.PRNGKey(0), cfg)
+        opt = opt_init(params)
+        batch = {k: jnp.asarray(v) for k, v in sample_batch(
+            DataConfig(cfg.vocab_size, 64, 4), 0).items()}
+        jit = jax.jit(step)
+        us = _bench(lambda: jit(params, opt, batch)[2]["loss"], reps=3)
+        rows.append((f"train_step.{arch}-reduced[b4s64]", us, ""))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="long quality run + measured serving")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    print("name,us_per_call,derived")
+    for name, us, derived in kernel_microbench():
+        print(f"{name},{us:.0f},{derived}")
+    for name, us, derived in model_step_bench():
+        print(f"{name},{us:.0f},{derived}")
+
+    print("\n# --- paper §2.2: sync-point reduction (Table-1 models) ---")
+    from benchmarks import sync_counts
+    sync_counts.main(quick=quick)
+
+    print("\n# --- Tables 6/9 + 7/10 analogue: TTFT / TPOT (analytical) ---")
+    from benchmarks import serving_latency
+    serving_latency.main(quick=quick)
+
+    print("\n# --- Tables 5/8 analogue: throughput mode (analytical) ---")
+    from benchmarks import throughput
+    throughput.main(quick=quick)
+
+    print("\n# --- Tables 2-4 analogue: dense vs PT quality (small) ---")
+    from benchmarks import quality_small
+    quality_small.main(quick=quick)
+
+
+if __name__ == "__main__":
+    main()

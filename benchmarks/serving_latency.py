@@ -1,0 +1,96 @@
+"""Tables 6/7/9/10 analogue: TTFT and TPOT, dense-30B vs PT-30B
+(D ∈ {2,4,8}), over the paper's input-length grid — from the analytical
+roofline latency model (no GPUs here; see latency_model.py).
+
+``--measure`` additionally times the real engine on reduced models
+(CPU wall-clock): the relative dense-vs-PT effect at tiny scale.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.latency_model import decode_token_time, prefill_time
+from repro.configs import get_config
+
+INPUT_LENS = (1024, 2048, 4096, 8192, 16384, 63488)
+
+
+def ttft_table() -> list:
+    models = {"dense": get_config("dense-30b")}
+    for d in (2, 4, 8):
+        models[f"pt_d{d}"] = get_config(f"pt-30b-d{d}")
+    rows = []
+    print("input_len," + ",".join(f"{m}_ttft_ms" for m in models))
+    for L in INPUT_LENS:
+        row = {"input_len": L}
+        for name, cfg in models.items():
+            row[name] = prefill_time(cfg, L, batch=1) * 1e3
+        rows.append(row)
+        print(f"{L}," + ",".join(f"{row[m]:.2f}" for m in models))
+    return rows
+
+
+def tpot_table() -> list:
+    models = {"dense": get_config("dense-30b")}
+    for d in (2, 4, 8):
+        models[f"pt_d{d}"] = get_config(f"pt-30b-d{d}")
+    rows = []
+    print("input_len," + ",".join(f"{m}_tpot_ms" for m in models))
+    for L in INPUT_LENS:
+        row = {"input_len": L}
+        for name, cfg in models.items():
+            row[name] = decode_token_time(cfg, L, batch=1) * 1e3
+        rows.append(row)
+        print(f"{L}," + ",".join(f"{row[m]:.3f}" for m in models))
+    return rows
+
+
+def measured(quick: bool = True) -> dict:
+    """CPU wall-clock TTFT/TPOT through the real engine, reduced models."""
+    import jax
+    import numpy as np
+    from repro.launch import steps as steps_lib
+    from repro.serving.engine import Engine
+
+    out = {}
+    for name in ("dense-30b", "pt-30b-d8"):
+        from repro.configs import reduced_config
+        cfg = reduced_config(name)
+        fns = steps_lib.model_fns(cfg)
+        params = fns["init"](jax.random.PRNGKey(0), cfg)
+        eng = Engine(cfg, params, max_slots=2, max_seq_len=96)
+        rng = np.random.default_rng(0)
+        reqs = [eng.submit(rng.integers(1, cfg.vocab_size, 32).tolist(),
+                           16) for _ in range(4)]
+        eng.run()
+        out[name] = {
+            "ttft_ms": float(np.median([r.ttft for r in reqs]) * 1e3),
+            "tpot_ms": float(np.median([r.tpot for r in reqs]) * 1e3),
+        }
+        print(f"measured,{name},{out[name]['ttft_ms']:.1f},"
+              f"{out[name]['tpot_ms']:.2f}")
+    return out
+
+
+def main(quick: bool = False) -> dict:
+    print("# TTFT (ms), analytical roofline model, batch=1, 8 chips")
+    t1 = ttft_table()
+    print("# TPOT (ms), analytical roofline model, batch=1, 8 chips")
+    t2 = tpot_table()
+    res = {"ttft": t1, "tpot": t2}
+    if not quick:
+        res["measured"] = measured()
+    return res
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--measure", action="store_true")
+    ap.add_argument("--metric", default="both")
+    args = ap.parse_args()
+    if args.metric in ("ttft", "both"):
+        ttft_table()
+    if args.metric in ("tpot", "both"):
+        tpot_table()
+    if args.measure:
+        measured()

@@ -1,0 +1,50 @@
+"""Paper §2.2 claim: sync points drop from 2L (Megatron TP) to L/D.
+
+Reproduces the '16x reduction at D=8' headline, plus the per-sync byte
+volume reduction from the narrower track width (d_track vs d_dense).
+The same counts are verified against compiled HLO in
+tests/test_multidevice.py::test_pt_sync_points_in_compiled_hlo.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.track import (dense_tp_sync_points, pt_sync_points,
+                              sync_bytes_per_point, sync_reduction)
+
+
+def rows(batch: int = 1, seq: int = 4096):
+    out = []
+    for size in ("6b", "13b", "30b"):
+        dense = get_config(f"dense-{size}")
+        L = dense.n_layers
+        dense_syncs = dense_tp_sync_points(L)
+        dense_bytes = dense_syncs * sync_bytes_per_point(batch, seq,
+                                                         dense.d_model)
+        for D in (2, 4, 8):
+            pt = get_config(f"pt-{size}-d{D}")
+            syncs = pt_sync_points(L, D)
+            red = sync_reduction(L, D)
+            ptb = syncs * sync_bytes_per_point(batch, seq, pt.d_model)
+            out.append({
+                "model": size, "D": D, "L": L,
+                "dense_syncs": dense_syncs, "pt_syncs": syncs,
+                "reduction": red,
+                "dense_sync_bytes": dense_bytes, "pt_sync_bytes": ptb,
+                "bytes_reduction": dense_bytes / ptb,
+            })
+    return out
+
+
+def main(quick: bool = False) -> list:
+    rs = rows()
+    print("model,D,dense_syncs,pt_syncs,sync_reduction,bytes_reduction")
+    for r in rs:
+        print(f"{r['model']},{r['D']},{r['dense_syncs']},{r['pt_syncs']},"
+              f"{r['reduction']:.1f},{r['bytes_reduction']:.2f}")
+    d8 = [r for r in rs if r["D"] == 8][0]
+    assert d8["reduction"] == 16.0, "paper's 16x claim"
+    return rs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Tables 5/8 analogue: output tokens/sec in throughput mode
+(batch 256), dense-30B vs PT-30B over the paper's (input, output) grid —
+analytical model; plus measured CPU engine throughput on reduced models.
+"""
+from __future__ import annotations
+
+from benchmarks.latency_model import throughput
+from repro.configs import get_config
+
+GRID = ((1024, 128), (1024, 4096), (2048, 128), (2048, 4096),
+        (4096, 128), (4096, 4096))
+
+
+def table() -> list:
+    models = {"dense": get_config("dense-30b")}
+    for d in (2, 4, 8):
+        models[f"pt_d{d}"] = get_config(f"pt-30b-d{d}")
+    rows = []
+    print("input_len,output_len," + ",".join(f"{m}_tok_s" for m in models))
+    for i, o in GRID:
+        row = {"input_len": i, "output_len": o}
+        for name, cfg in models.items():
+            row[name] = throughput(cfg, i, o, batch=256)
+        rows.append(row)
+        print(f"{i},{o}," + ",".join(f"{row[m]:.0f}" for m in models))
+    return rows
+
+
+def measured_engine(quick: bool = True) -> dict:
+    import time
+    import jax
+    import numpy as np
+    from repro.configs import reduced_config
+    from repro.launch import steps as steps_lib
+    from repro.serving.engine import Engine
+
+    out = {}
+    for name in ("dense-30b", "pt-30b-d8"):
+        cfg = reduced_config(name)
+        fns = steps_lib.model_fns(cfg)
+        params = fns["init"](jax.random.PRNGKey(0), cfg)
+        eng = Engine(cfg, params, max_slots=4, max_seq_len=80)
+        rng = np.random.default_rng(0)
+        for _ in range(8):
+            eng.submit(rng.integers(1, cfg.vocab_size, 32).tolist(), 16)
+        t0 = time.time()
+        eng.run()
+        wall = time.time() - t0
+        out[name] = 8 * 16 / wall
+        print(f"measured,{name},{out[name]:.1f} tok/s")
+    return out
+
+
+def main(quick: bool = False) -> dict:
+    print("# throughput (output tok/s), analytical, batch=256, 8 chips")
+    rows = table()
+    res = {"analytical": rows}
+    if not quick:
+        res["measured"] = measured_engine()
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""End-to-end training driver: a ~100M-parameter Parallel-Track model
+(4 tracks × 16 layers, d_track 384) trained for a few hundred steps on
+the synthetic LM pipeline, with checkpointing + resume.
+
+  PYTHONPATH=src python examples/train_pt_100m.py --steps 300
+  (rerun the same command to resume from the last checkpoint)
+"""
+import argparse
+
+from repro.common.types import LayerSpec, ModelConfig, PTConfig
+from repro.launch.train import train_loop
+
+
+def config_100m() -> ModelConfig:
+    return ModelConfig(
+        name="pt-100m", family="pt",
+        n_layers=16, d_model=384, n_heads=4, n_kv_heads=2, d_ff=1536,
+        vocab_size=8192, head_dim=96, dtype="float32",
+        pt=PTConfig(n_tracks=4, block_depth=4),
+        layer_specs={"full": LayerSpec(mixer="gqa", mlp="swiglu")},
+        pattern_unit=("full",),
+        attn_chunk_q=128, attn_chunk_k=128,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/pt100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = config_100m()
+    out = train_loop(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                     microbatches=2, peak_lr=1e-3, log_every=10)
+    losses = out["losses"]
+    print(f"loss: {losses[0][1]:.4f} (step {losses[0][0]}) -> "
+          f"{losses[-1][1]:.4f} (step {losses[-1][0]})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Target-hardware constants: TPU v5e (per brief)."""
+
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (effective per chip)
+HBM_BYTES = 16 * 2 ** 30        # 16 GiB per chip
+
+CHIPS_PER_POD = 256

@@ -1,0 +1,71 @@
+"""Small pytree helpers used across the framework (no flax dependency)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def count_params(tree: Pytree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(tree)))
+
+
+def param_bytes(tree: Pytree) -> int:
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(tree)))
+
+
+def tree_paths(tree: Pytree) -> Iterator[Tuple[str, Any]]:
+    """Yield ('a/b/c', leaf) pairs with '/'-joined string paths."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        yield "/".join(_key_str(k) for k in path), leaf
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree: Pytree) -> Pytree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = [fn("/".join(_key_str(k) for k in path), leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def cast_floating(tree: Pytree, dtype) -> Pytree:
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def tree_zeros_like(tree: Pytree, dtype=None) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape, dtype or l.dtype), tree)
+
+
+def tree_defs_equal(a: Pytree, b: Pytree) -> bool:
+    ta = jax.tree_util.tree_structure(a)
+    tb = jax.tree_util.tree_structure(b)
+    if ta != tb:
+        return False
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        if la.shape != lb.shape or la.dtype != lb.dtype:
+            return False
+    return True

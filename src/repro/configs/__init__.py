@@ -1,0 +1,88 @@
+"""Config registry: ``--arch <id>`` lookup for the 10 assigned
+architectures plus the paper's own dense/PT families.
+
+  get_config(name)      — full-size config (dry-run / roofline only)
+  reduced_config(name)  — small same-family config (CPU smoke tests)
+  arch_cells(name)      — the (shape) cells this arch runs in the matrix
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+from repro.common.types import ALL_SHAPES, SHAPES_BY_NAME, ModelConfig, ShapeSpec
+
+from repro.configs import (deepseek_v2_236b, deepseek_v3_671b,
+                           falcon_mamba_7b, gemma2_2b, gemma3_4b,
+                           nemotron_4_15b, pt_paper, qwen2_vl_72b,
+                           recurrentgemma_9b, tinyllama_1_1b, whisper_medium)
+
+_ASSIGNED: Dict[str, Tuple[Callable[[], ModelConfig],
+                           Callable[[], ModelConfig]]] = {
+    "qwen2-vl-72b": (qwen2_vl_72b.config, qwen2_vl_72b.reduced),
+    "whisper-medium": (whisper_medium.config, whisper_medium.reduced),
+    "recurrentgemma-9b": (recurrentgemma_9b.config, recurrentgemma_9b.reduced),
+    "gemma2-2b": (gemma2_2b.config, gemma2_2b.reduced),
+    "tinyllama-1.1b": (tinyllama_1_1b.config, tinyllama_1_1b.reduced),
+    "nemotron-4-15b": (nemotron_4_15b.config, nemotron_4_15b.reduced),
+    "gemma3-4b": (gemma3_4b.config, gemma3_4b.reduced),
+    "falcon-mamba-7b": (falcon_mamba_7b.config, falcon_mamba_7b.reduced),
+    "deepseek-v3-671b": (deepseek_v3_671b.config, deepseek_v3_671b.reduced),
+    "deepseek-v2-236b": (deepseek_v2_236b.config, deepseek_v2_236b.reduced),
+}
+
+# the paper's own models (PT technique + dense baselines)
+_PAPER: Dict[str, Callable[[], ModelConfig]] = {
+    "dense-6b": pt_paper.dense_6b,
+    "dense-13b": pt_paper.dense_13b,
+    "dense-30b": pt_paper.dense_30b,
+    "pt-6b-d2": lambda: pt_paper.pt_6b(2),
+    "pt-6b-d4": lambda: pt_paper.pt_6b(4),
+    "pt-6b-d8": lambda: pt_paper.pt_6b(8),
+    "pt-13b-d2": lambda: pt_paper.pt_13b(2),
+    "pt-13b-d4": lambda: pt_paper.pt_13b(4),
+    "pt-13b-d8": lambda: pt_paper.pt_13b(8),
+    "pt-30b-d2": lambda: pt_paper.pt_30b(2),
+    "pt-30b-d4": lambda: pt_paper.pt_30b(4),
+    "pt-30b-d8": lambda: pt_paper.pt_30b(8),
+}
+
+ARCH_NAMES: List[str] = list(_ASSIGNED)
+PAPER_NAMES: List[str] = list(_PAPER)
+ALL_NAMES: List[str] = ARCH_NAMES + PAPER_NAMES
+
+# long_500k needs sub-quadratic decode state; pure full-attention archs
+# skip it (documented in DESIGN.md §Shape/cell skips).
+_LONG_OK = {"falcon-mamba-7b", "recurrentgemma-9b", "gemma2-2b", "gemma3-4b"}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name in _ASSIGNED:
+        return _ASSIGNED[name][0]()
+    if name in _PAPER:
+        return _PAPER[name]()
+    raise KeyError(f"unknown arch {name!r}; known: {ALL_NAMES}")
+
+
+def reduced_config(name: str) -> ModelConfig:
+    if name in _ASSIGNED:
+        return _ASSIGNED[name][1]()
+    if name.startswith("dense-"):
+        return pt_paper.reduced_dense()
+    if name.startswith("pt-"):
+        return pt_paper.reduced_pt()
+    raise KeyError(name)
+
+
+def arch_cells(name: str) -> List[ShapeSpec]:
+    """Shape cells this arch participates in (the 40-cell matrix rows)."""
+    cells = []
+    for s in ALL_SHAPES:
+        if s.name == "long_500k" and name not in _LONG_OK:
+            continue
+        cells.append(s)
+    return cells
+
+
+def matrix_cells() -> List[Tuple[str, ShapeSpec]]:
+    """All baseline dry-run cells over the 10 assigned archs."""
+    return [(a, s) for a in ARCH_NAMES for s in arch_cells(a)]

@@ -1,0 +1,96 @@
+"""Flash-decode as a Pallas TPU kernel: one query token per sequence
+against a long KV cache, GQA-aware (KV read once per KV head, applied to
+all G query heads in the group).
+
+Grid (B, KH, n_s) with the cache-sequence dim iterated sequentially
+(online softmax in VMEM scratch).  Per-slot valid lengths come in as a
+[B] input so ragged continuous-batching batches mask correctly.  The
+cache block (cs × hd) is the unit of HBM→VMEM streaming — decode is
+bandwidth-bound, and this kernel reads each cache byte exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_s: int, n_s: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    s_start = si * block_s
+
+    @pl.when(s_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # [G, hd]
+        k = k_ref[0, 0].astype(jnp.float32)               # [cs, hd]
+        v = v_ref[0, 0].astype(jnp.float32)               # [cs, dv]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, cs]
+        cols = s_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+
+    @pl.when(si == n_s - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, *, block_s: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """q: [B, H, hd]; caches: [B, S, KH, hd]; lengths: [B] valid rows.
+    Returns [B, H, hd]."""
+    B, S, KH, hd = k_cache.shape
+    H = q.shape[1]
+    dv = v_cache.shape[-1]
+    G = H // KH
+    block_s = min(block_s, S)
+    if S % block_s:
+        raise ValueError(f"cache len {S} must tile {block_s}")
+    n_s = S // block_s
+    qr = q.reshape(B, KH, G, hd)
+    kr = k_cache.transpose(0, 2, 1, 3)                    # [B, KH, S, hd]
+    vr = v_cache.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, scale=hd ** -0.5,
+                               block_s=block_s, n_s=n_s)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KH, n_s),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, n, s: (b,)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, n, s: (b, n, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda b, n, s: (b, n, s, 0)),
+            pl.BlockSpec((1, 1, block_s, dv), lambda b, n, s: (b, n, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dv), lambda b, n, s: (b, n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qr, kr, vr)
+    return out.reshape(B, H, dv)

@@ -1,0 +1,47 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``INTERPRET`` is True in this container (CPU: the kernel bodies execute
+as pure JAX for correctness validation); on a real TPU it flips to False
+and the same call sites compile to Mosaic kernels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssm_scan as _ss
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "softcap",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    softcap: Optional[float] = None,
+                    block_q: int = 256, block_k: int = 256):
+    return _fa.flash_attention(q, k, v, causal=causal, softcap=softcap,
+                               block_q=block_q, block_k=block_k,
+                               interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_s: int = 512):
+    return _da.decode_attention(q, k_cache, v_cache, lengths,
+                                block_s=block_s, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d"))
+def ssm_scan(a, b, h0, *, chunk: int = 256, block_d: int = 0):
+    return _ss.ssm_scan(a, b, h0, chunk=chunk, block_d=block_d,
+                        interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256):
+    return _rn.rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                       interpret=INTERPRET)

@@ -1,0 +1,82 @@
+"""Chunked linear recurrence h_t = a_t ⊙ h_{t-1} + b_t as a Pallas TPU
+kernel (the Mamba/RG-LRU inner loop).
+
+Grid (B, n_feature_blocks, n_chunks): the chunk dim is sequential; the
+carry h lives in VMEM scratch across chunks, so HBM sees each (a, b)
+element exactly once and h only at chunk granularity — the TPU-native
+replacement for the CUDA selective-scan kernel.  Within a chunk the
+recurrence is a VPU fori_loop over time (elementwise; no MXU needed).
+
+VMEM per step: 2 · (chunk · bd · ds) fp32 + carry ≈ 4 MB at
+chunk=256, bd=64, ds=16.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, o_ref, hlast_ref, h_scr, *,
+            chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)          # [chunk, bd, ds]
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        o_ref[0, t] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        hlast_ref[0] = h.astype(hlast_ref.dtype)
+
+
+def ssm_scan(a: jax.Array, b: jax.Array, h0: jax.Array, *,
+             chunk: int = 256, block_d: int = 0,
+             interpret: bool = True):
+    """a, b: [B, S, di, ds]; h0: [B, di, ds] -> (h [B,S,di,ds] fp32,
+    h_last [B,di,ds] fp32)."""
+    B, S, di, ds = a.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        raise ValueError(f"S={S} must tile chunk={chunk}")
+    bd = block_d or min(di, 128)
+    if di % bd:
+        raise ValueError(f"d_inner={di} must tile block_d={bd}")
+    n_chunks = S // chunk
+    n_d = di // bd
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    h, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, n_d, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd, ds), lambda b_, d, c: (b_, c, d, 0)),
+            pl.BlockSpec((1, chunk, bd, ds), lambda b_, d, c: (b_, c, d, 0)),
+            pl.BlockSpec((1, bd, ds), lambda b_, d, c: (b_, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bd, ds), lambda b_, d, c: (b_, c, d, 0)),
+            pl.BlockSpec((1, bd, ds), lambda b_, d, c: (b_, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di, ds), jnp.float32),
+            jax.ShapeDtypeStruct((B, di, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, ds), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return h, h_last

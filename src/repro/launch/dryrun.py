@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell against the production mesh using ShapeDtypeStruct stand-ins —
+no allocation.  Proves the distribution config is coherent: sharding
+mismatches, compile-time OOM and unsupported collectives all fail here.
+
+Per cell it records memory_analysis, cost_analysis and the collective
+schedule (bytes by op, parsed from the compiled HLO) into a JSON artifact
+consumed by the §Roofline report.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out artifacts/dryrun
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import SHAPES_BY_NAME, ShapeSpec
+from repro.configs import ALL_NAMES, ARCH_NAMES, arch_cells, get_config
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh, make_pt_mesh
+from repro.runtime import sharding as sh_lib
+
+
+def _mesh_for(cfg, multi_pod: bool):
+    if cfg.pt is not None:
+        return make_pt_mesh(multi_pod=multi_pod, n_tracks=cfg.pt.n_tracks,
+                            inner_tp=2)
+    return make_production_mesh(multi_pod=multi_pod)
+
+
+def lower_cell(arch: str, shape: ShapeSpec, multi_pod: bool,
+               microbatches: int = 0, fsdp=None, extra_cfg=None,
+               seq_shard: bool = False):
+    """Lower + compile one cell.  Returns (compiled, lowered, meta)."""
+    cfg = get_config(arch)
+    if extra_cfg:
+        cfg = cfg.replace(**extra_cfg)
+    mesh = _mesh_for(cfg, multi_pod)
+    kind = shape.kind
+    use_fsdp = steps_lib.wants_fsdp(cfg, kind) if fsdp is None else fsdp
+    par = steps_lib.build_parallelism(cfg, kind, mesh, fsdp=use_fsdp,
+                                      seq_shard=seq_shard)
+    # weights keep TP sharding in every mode; only ACTIVATION rules differ
+    par_w = steps_lib.build_parallelism(cfg, "train", mesh, fsdp=use_fsdp)
+
+    p_specs = steps_lib.param_specs(cfg)
+    p_sh = sh_lib.param_shardings(p_specs, cfg, par_w)
+
+    if kind == "train":
+        step, opt_init, opt_name = steps_lib.make_train_step(
+            cfg, par, microbatches=microbatches)
+        o_specs = jax.eval_shape(opt_init, p_specs)
+        o_sh = sh_lib.opt_state_shardings(o_specs, cfg, par)
+        b_specs = steps_lib.batch_specs(cfg, shape)
+        b_sh = sh_lib.batch_shardings(b_specs, cfg, par)
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(p_specs, o_specs, b_specs)
+        meta = {"optimizer": opt_name,
+                "microbatches": microbatches
+                or steps_lib.cfg_default_microbatches(cfg)}
+    elif kind == "prefill":
+        step = steps_lib.make_prefill_step(cfg, par)
+        # prefill cache comes out in decode layout (kv_seq sharded)
+        par_dec = steps_lib.build_parallelism(cfg, "decode", mesh)
+        c_specs = jax.eval_shape(
+            lambda p, b: step(p, b), p_specs,
+            steps_lib.batch_specs(cfg, shape))
+        logits_sh = jax.sharding.NamedSharding(
+            mesh, par.spec("batch", "vocab", shape=c_specs[0].shape))
+        cache_sh = sh_lib.cache_shardings(c_specs[1], cfg, par_dec)
+        b_specs = steps_lib.batch_specs(cfg, shape)
+        b_sh = sh_lib.batch_shardings(b_specs, cfg, par)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                         out_shardings=(logits_sh, cache_sh))
+        lowered = jitted.lower(p_specs, b_specs)
+        meta = {}
+    else:  # decode
+        par = steps_lib.build_parallelism(cfg, "decode", mesh)
+        step = steps_lib.make_serve_step(cfg, par)
+        d = steps_lib.decode_specs(cfg, shape)
+        c_sh = sh_lib.cache_shardings(d["cache"], cfg, par)
+        tok_sh = sh_lib.batch_shardings(
+            {"tokens": d["tokens"], "pos": d["pos"]}, cfg, par)
+        logits_spec = jax.eval_shape(step, p_specs, d["cache"], d["tokens"],
+                                     d["pos"])[0]
+        logits_sh = jax.sharding.NamedSharding(
+            mesh, par.spec("batch", "vocab", shape=logits_spec.shape))
+        jitted = jax.jit(step, in_shardings=(p_sh, c_sh, tok_sh["tokens"],
+                                             tok_sh["pos"]),
+                         out_shardings=(logits_sh, c_sh),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(p_specs, d["cache"], d["tokens"], d["pos"])
+        meta = {}
+
+    compiled = lowered.compile()
+    meta.update({"arch": arch, "shape": shape.name,
+                 "mesh": "multi" if multi_pod else "single",
+                 "mesh_shape": dict(mesh.shape),
+                 "devices": mesh.devices.size,
+                 "fsdp": use_fsdp, "kind": kind})
+    return compiled, lowered, meta
+
+
+def run_cell(arch: str, shape: ShapeSpec, multi_pod: bool, out_dir: Path,
+             microbatches: int = 0, seq_shard: bool = False) -> dict:
+    from repro.roofline import analysis as roof
+    t0 = time.time()
+    record: dict = {"arch": arch, "shape": shape.name,
+                    "mesh": "multi" if multi_pod else "single"}
+    try:
+        compiled, lowered, meta = lower_cell(arch, shape, multi_pod,
+                                             microbatches=microbatches,
+                                             seq_shard=seq_shard)
+        record.update(meta)
+        record["compile_s"] = round(time.time() - t0, 1)
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        record["cost"] = {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float)) and (
+                              "flops" in k or "bytes accessed" in k
+                              or k == "optimal_seconds")}
+        cfg = get_config(arch)
+        record["roofline"] = roof.analyze(compiled, cfg, shape,
+                                          multi_pod=multi_pod,
+                                          microbatches=record.get(
+                                              "microbatches", 1))
+        record["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record failures per cell
+        record["status"] = "fail"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    record["wall_s"] = round(time.time() - t0, 1)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fn = out_dir / f"{arch}__{shape.name}__{record['mesh']}.json"
+    fn.write_text(json.dumps(record, indent=1))
+    status = record["status"]
+    err = ("" if status == "ok" else " :: " + record.get("error", ""))
+    print(f"[{status:4s}] {arch:22s} {shape.name:12s} "
+          f"{record['mesh']:6s} {record['wall_s']:7.1f}s{err}", flush=True)
+    return record
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape name or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="full 34-cell matrix (+ paper PT cells)")
+    ap.add_argument("--paper", action="store_true",
+                    help="include paper dense/PT models")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    cells = []
+    archs = ARCH_NAMES if (args.all or args.arch in (None, "all")) \
+        else [args.arch]
+    if args.paper:
+        archs = list(archs) + ["dense-30b", "pt-30b-d2", "pt-30b-d4",
+                               "pt-30b-d8"]
+    for a in archs:
+        if args.shape and args.shape != "all":
+            shapes = [SHAPES_BY_NAME[args.shape]]
+        else:
+            try:
+                shapes = arch_cells(a)
+            except Exception:
+                from repro.common.types import ALL_SHAPES
+                shapes = [s for s in ALL_SHAPES if s.name != "long_500k"]
+        for s in shapes:
+            cells.append((a, s))
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for a, s in cells:
+        for mp in meshes:
+            rec = run_cell(a, s, mp, out, microbatches=args.microbatches,
+                           seq_shard=args.seq_shard)
+            n_fail += rec["status"] != "ok"
+    print(f"done: {len(cells) * len(meshes)} cells, {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,48 @@
+"""Production meshes.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods = 512 chips as (pod=2, data=16, model=16).
+PT view:    the paper's track mapping — one track per device group:
+            (data=32, track=8) single-pod / (pod=2, data=32, track=8).
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS *before* any jax import).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def _mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_pt_mesh(*, multi_pod: bool = False, n_tracks: int = 8,
+                 inner_tp: int = 1) -> Mesh:
+    """The paper's deployment: one track per device (group).  256 chips
+    per pod => data = 256 / (n_tracks · inner_tp)."""
+    chips = 256
+    data = chips // (n_tracks * inner_tp)
+    if multi_pod:
+        if inner_tp > 1:
+            return _mesh((2, data, n_tracks, inner_tp),
+                         ("pod", "data", "track", "tp"))
+        return _mesh((2, data, n_tracks), ("pod", "data", "track"))
+    if inner_tp > 1:
+        return _mesh((data, n_tracks, inner_tp), ("data", "track", "tp"))
+    return _mesh((data, n_tracks), ("data", "track"))
+
+
+def make_host_mesh(*, data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many (CPU) devices exist — tests."""
+    return _mesh((data, model), ("data", "model"))

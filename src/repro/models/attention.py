@@ -1,0 +1,339 @@
+"""GQA attention: chunked (flash-style) prefill/train path + decode path.
+
+Layout conventions
+------------------
+- activations: x [B, S, d_stream]
+- q weights   : [d_stream, H, hd];  k/v: [d_stream, KH, hd];  o: [H, hd, d_stream]
+- full cache  : k/v [B, S_max, KH, hd]   (RoPE already applied to k)
+- ring cache  : k/v [B, W, KH, hd] for sliding-window layers; slot = pos % W
+
+The train/prefill path unrolls over q chunks in Python (static slice
+bounds => causal/windowed block *skipping*, real FLOP savings in the HLO)
+and scans over k sub-chunks with an online-softmax carry (bounded memory).
+Scores/accumulators are fp32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import LayerSpec, ModelConfig
+from repro.models import rope as rope_lib
+from repro.models.norms import rmsnorm, rmsnorm_init
+from repro.runtime.parallel import Parallelism, NO_PARALLEL
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def attention_init(key, d_stream: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, *, qk_norm: bool = False,
+                   dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s_in = 1.0 / jnp.sqrt(d_stream)
+    s_out = 1.0 / jnp.sqrt(n_heads * head_dim)
+    p = {
+        "wq": (jax.random.normal(kq, (d_stream, n_heads, head_dim), jnp.float32) * s_in).astype(dtype),
+        "wk": (jax.random.normal(kk, (d_stream, n_kv_heads, head_dim), jnp.float32) * s_in).astype(dtype),
+        "wv": (jax.random.normal(kv, (d_stream, n_kv_heads, head_dim), jnp.float32) * s_in).astype(dtype),
+        "wo": (jax.random.normal(ko, (n_heads, head_dim, d_stream), jnp.float32) * s_out).astype(dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(head_dim, jnp.float32)
+        p["k_norm"] = rmsnorm_init(head_dim, jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _softcap(scores: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def _rope_tables(spec: LayerSpec, cfg: ModelConfig, positions: jax.Array,
+                 head_dim: int):
+    """positions: [B, S] (rope) or [3, B, S] (mrope). Returns cos,sin [B,S,hd/2]."""
+    if spec.rope == "none":
+        return None
+    theta = cfg.rope_theta
+    if spec.rope == "local_rope":
+        theta = cfg.local_rope_theta
+    if spec.rope == "mrope":
+        if positions.ndim == 2:      # text-only fallback: 3 identical streams
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return rope_lib.mrope_cos_sin(positions, head_dim, theta,
+                                      cfg.mrope_sections)
+    if positions.ndim == 3:          # mrope-shaped positions on a rope layer
+        positions = positions[0]
+    return rope_lib.rope_cos_sin(positions, head_dim, theta)
+
+
+def _expand_kv(k: jax.Array, n_heads: int, par: Parallelism,
+               seq_dim: Optional[str] = None) -> jax.Array:
+    """[B, S, KH, hd] -> [B, S, H, hd] by static gather (GQA head map)."""
+    kh = k.shape[2]
+    idx = jnp.arange(n_heads, dtype=jnp.int32) // (n_heads // kh)
+    out = jnp.take(k, idx, axis=2)
+    return par.cs(out, "batch", seq_dim, "heads", None)
+
+
+def _project_qkv(params, x, spec: LayerSpec, cfg: ModelConfig,
+                 positions, par: Parallelism):
+    """Project + qk-norm + rope.  x: [B,S,d] -> q [B,S,H,hd], k/v [B,S,KH,hd]."""
+    hd = params["wq"].shape[-1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = par.cs(q, "batch", None, "heads", None)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, eps=cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, eps=cfg.norm_eps)
+    tables = _rope_tables(spec, cfg, positions, hd)
+    if tables is not None:
+        cos, sin = tables
+        q = rope_lib.apply_rope(q, cos, sin)
+        k = rope_lib.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# chunked causal/windowed attention (train + prefill)
+# ---------------------------------------------------------------------------
+
+def _chunk_sizes(s_q: int, s_k: int, cfg: ModelConfig) -> Tuple[int, int]:
+    cq = cfg.attn_chunk_q if s_q % cfg.attn_chunk_q == 0 else s_q
+    ck = cfg.attn_chunk_k if s_k % cfg.attn_chunk_k == 0 else s_k
+    return cq, ck
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        q_start: int = 0,
+                        chunk_q: int = 512, chunk_k: int = 1024,
+                        par: Parallelism = NO_PARALLEL) -> jax.Array:
+    """Online-softmax attention with static causal/window block skipping.
+
+    q: [B, Sq, H, hd]; k/v: [B, Sk, H, hd] (kv already expanded to H heads).
+    q token i has absolute position q_start + i; k token j has position j.
+    Python-unrolled q chunks => per-chunk static k ranges (block skipping).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    dv = v.shape[-1]                                 # may differ (MLA)
+    scale = hd ** -0.5
+    cq = chunk_q if Sq % chunk_q == 0 else Sq
+    ck = chunk_k if Sk % chunk_k == 0 else Sk
+    nq = Sq // cq
+    out_chunks = []
+    for i in range(nq):
+        q_lo = q_start + i * cq                      # abs pos of first q row
+        q_hi = q_start + (i + 1) * cq - 1            # abs pos of last q row
+        # static k range for this q chunk
+        k_hi = min(Sk, q_hi + 1) if causal else Sk
+        k_lo = 0
+        if window is not None:
+            k_lo = max(0, q_lo - window + 1)
+        # round to ck multiples (static)
+        k_lo = (k_lo // ck) * ck
+        k_hi = min(Sk, ((k_hi + ck - 1) // ck) * ck)
+        if k_hi <= k_lo:
+            out_chunks.append(jnp.zeros((B, cq, H, dv), q.dtype))
+            continue
+        qi = q[:, i * cq:(i + 1) * cq].astype(jnp.float32) * scale  # [B,cq,H,hd]
+        ks = k[:, k_lo:k_hi]
+        vs = v[:, k_lo:k_hi]
+        nk = (k_hi - k_lo) // ck
+        ks = ks.reshape(B, nk, ck, H, hd)
+        vs = vs.reshape(B, nk, ck, H, dv)
+        q_pos = q_lo + jnp.arange(cq, dtype=jnp.int32)
+
+        def body(carry, inputs):
+            m, l, acc = carry
+            j, k_c, v_c = inputs
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, k_c.astype(jnp.float32))
+            s = _softcap(s, softcap)
+            k_pos = k_lo + j * ck + jnp.arange(ck, dtype=jnp.int32)
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, v_c.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, H, cq, dv), jnp.float32)
+        if nk == 1:
+            (m, l, acc), _ = body((m0, l0, a0),
+                                  (jnp.int32(0), ks[:, 0], vs[:, 0]))
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                body, (m0, l0, a0),
+                (jnp.arange(nk, dtype=jnp.int32),
+                 jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0)))
+        l = jnp.maximum(l, 1e-37)
+        o = (acc / l[..., None]).astype(q.dtype)     # [B,H,cq,hd]
+        out_chunks.append(jnp.moveaxis(o, 1, 2))     # [B,cq,H,hd]
+    out = out_chunks[0] if nq == 1 else jnp.concatenate(out_chunks, axis=1)
+    return par.cs(out, "batch", None, "heads", None)
+
+
+# ---------------------------------------------------------------------------
+# public: prefill / train forward
+# ---------------------------------------------------------------------------
+
+def attention_apply(params, x: jax.Array, *, spec: LayerSpec,
+                    cfg: ModelConfig, positions: jax.Array,
+                    par: Parallelism = NO_PARALLEL,
+                    return_cache: bool = False):
+    """Causal self-attention over x: [B, S, d].  Returns (out, cache|None).
+
+    cache (when requested) is (k, v) with RoPE applied; for windowed layers
+    it is a ring buffer of size W = spec.window, else [B, S, KH, hd].
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, spec, cfg, positions, par)
+    H = q.shape[2]
+    kf = _expand_kv(k, H, par)
+    vf = _expand_kv(v, H, par)
+    if cfg.use_pallas and spec.window is None and par.mesh is None:
+        from repro.kernels import ops as kops
+        ctx = kops.flash_attention(q, kf, vf, causal=spec.causal,
+                                   softcap=spec.attn_logit_softcap)
+    else:
+        ctx = blockwise_attention(
+            q, kf, vf, causal=spec.causal, window=spec.window,
+            softcap=spec.attn_logit_softcap,
+            chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k, par=par)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+    out = par.cs(out, "batch", "seq", "d_model")
+    cache = None
+    if return_cache:
+        if spec.window is not None and spec.window < S:
+            cache = (_to_ring(k, S, spec.window), _to_ring(v, S, spec.window))
+        else:
+            cache = (k, v)
+    return out, cache
+
+
+def _to_ring(k: jax.Array, s: int, w: int) -> jax.Array:
+    """Keep the last w positions of k [B,S,KH,hd] in ring order (slot=p%w)."""
+    j = jnp.arange(w, dtype=jnp.int32)
+    src = (s - 1) - ((s - 1 - j) % w)                # latest pos with pos%w==j
+    valid = src >= 0
+    ring = jnp.take(k, jnp.clip(src, 0, s - 1), axis=1)
+    return jnp.where(valid[None, :, None, None], ring, 0)
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def attention_decode(params, x: jax.Array, cache: Tuple[jax.Array, jax.Array],
+                     *, spec: LayerSpec, cfg: ModelConfig,
+                     pos: jax.Array, par: Parallelism = NO_PARALLEL):
+    """x: [B, 1, d]; cache k/v: [B, S_cache, KH, hd]; pos: [B] int32 (index
+    of the new token).  Returns (out [B,1,d], updated cache).
+
+    For windowed layers the cache is a ring buffer (S_cache == window) and
+    the new k/v is written at slot pos % W; otherwise at slot pos.
+    """
+    B = x.shape[0]
+    positions = pos[:, None]                          # [B,1]
+    if spec.rope == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, B, 1))
+    q, k_new, v_new = _project_qkv(params, x, spec, cfg, positions, par)
+    q = q[:, 0]                                       # [B,H,hd]
+    H = q.shape[1]
+    k_cache, v_cache = cache
+    S_cache = k_cache.shape[1]
+    KH = k_cache.shape[2]
+    G = H // KH
+    ring = spec.window is not None and S_cache <= spec.window
+    slot = (pos % S_cache) if ring else pos
+    k_cache = _scatter_cache(k_cache, k_new[:, 0], slot, par)
+    v_cache = _scatter_cache(v_cache, v_new[:, 0], slot, par)
+
+    # grouped GQA einsum: the cache is contracted directly per KV head —
+    # no G-fold expansion is materialized, and preferred_element_type
+    # gives fp32 accumulation without an fp32 copy of the cache.
+    scale = q.shape[-1] ** -0.5
+    qg = (q * scale).astype(k_cache.dtype).reshape(B, KH, G, -1)
+    s = jnp.einsum("bngd,bsnd->bngs", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = _softcap(s, spec.attn_logit_softcap)
+    j = jnp.arange(S_cache, dtype=jnp.int32)
+    if ring:
+        # absolute position stored in slot j at time `pos`
+        p_j = pos[:, None] - ((pos[:, None] - j[None, :]) % S_cache)
+        mask = (p_j >= 0) & (p_j >= pos[:, None] - spec.window + 1)
+    else:
+        mask = j[None, :] <= pos[:, None]
+        if spec.window is not None:
+            mask &= j[None, :] > pos[:, None] - spec.window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    s = par.cs(s, "batch", None, None, "kv_seq")
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    ctx = jnp.einsum("bngs,bsnd->bngd", (p / l).astype(v_cache.dtype),
+                     v_cache, preferred_element_type=jnp.float32)
+    ctx = ctx.reshape(B, H, -1).astype(x.dtype)
+    out = jnp.einsum("bhk,hkd->bd", ctx, params["wo"])[:, None]
+    out = par.cs(out, "batch", None, "d_model")
+    return out, (k_cache, v_cache)
+
+
+def _scatter_cache(cache: jax.Array, new: jax.Array, slot: jax.Array,
+                   par: Parallelism) -> jax.Array:
+    """Write new [B,KH,hd] into cache [B,S,KH,hd] at per-row slot [B]."""
+    upd = cache.at[jnp.arange(cache.shape[0]), slot].set(
+        new.astype(cache.dtype))
+    return par.cs(upd, "batch", "kv_seq", "kv_heads", None)
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attention_apply(params, x: jax.Array, enc_kv, *,
+                          cfg: ModelConfig, par: Parallelism = NO_PARALLEL):
+    """x: [B, S, d]; enc_kv = (k, v) [B, S_enc, KH, hd] precomputed from the
+    encoder (no causal mask, no rope)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q = par.cs(q, "batch", None, "heads", None)
+    k, v = enc_kv
+    H = q.shape[2]
+    kf = _expand_kv(k, H, par)
+    vf = _expand_kv(v, H, par)
+    ctx = blockwise_attention(q, kf, vf, causal=False, window=None,
+                              softcap=None, chunk_q=cfg.attn_chunk_q,
+                              chunk_k=cfg.attn_chunk_k, par=par)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+    return par.cs(out, "batch", None, "d_model")
+
+
+def cross_kv(params, enc_states: jax.Array, par: Parallelism = NO_PARALLEL):
+    """Project encoder states once: [B, S_enc, d] -> (k, v)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_states, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_states, params["wv"])
+    return k, v

@@ -1,0 +1,159 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3).
+
+Train/prefill: decompress the latent KV and run standard chunked attention.
+Decode: "absorbed" form — scores and context are computed directly against
+the compressed cache (c_kv, k_rope), so the per-token cache is just
+kv_lora_rank + qk_rope_head_dim floats (no per-head KV).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import LayerSpec, ModelConfig
+from repro.models import rope as rope_lib
+from repro.models.attention import NEG_INF, _softcap, blockwise_attention
+from repro.models.norms import rmsnorm, rmsnorm_init
+from repro.runtime.parallel import Parallelism, NO_PARALLEL
+
+
+def _init(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def mla_init(key, cfg: ModelConfig, d_stream: int, dtype=jnp.float32):
+    m = cfg.mla
+    H = cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    p = {}
+    if m.q_lora_rank > 0:
+        p["w_dq"] = _init(ks[0], (d_stream, m.q_lora_rank), d_stream, dtype)
+        p["q_norm"] = rmsnorm_init(m.q_lora_rank)
+        p["w_uq"] = _init(ks[1], (m.q_lora_rank, H, qk), m.q_lora_rank, dtype)
+    else:
+        p["w_uq"] = _init(ks[1], (d_stream, H, qk), d_stream, dtype)
+    p["w_dkv"] = _init(ks[2], (d_stream, m.kv_lora_rank + m.qk_rope_head_dim),
+                       d_stream, dtype)
+    p["kv_norm"] = rmsnorm_init(m.kv_lora_rank)
+    p["w_uk"] = _init(ks[3], (m.kv_lora_rank, H, m.qk_nope_head_dim),
+                      m.kv_lora_rank, dtype)
+    p["w_uv"] = _init(ks[4], (m.kv_lora_rank, H, m.v_head_dim),
+                      m.kv_lora_rank, dtype)
+    p["wo"] = _init(ks[5], (H, m.v_head_dim, d_stream), H * m.v_head_dim, dtype)
+    return p
+
+
+def _q_proj(params, x, cfg: ModelConfig, positions, par: Parallelism):
+    """x: [B,S,d] -> q_nope [B,S,H,nope], q_rope [B,S,H,rope] (rope applied)."""
+    m = cfg.mla
+    if m.q_lora_rank > 0:
+        cq = x @ params["w_dq"]
+        cq = rmsnorm(params["q_norm"], cq, eps=cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["w_uq"])
+    q = par.cs(q, "batch", None, "heads", None)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = q[..., m.qk_nope_head_dim:]
+    if positions.ndim == 3:
+        positions = positions[0]
+    cos, sin = rope_lib.rope_cos_sin(positions, m.qk_rope_head_dim,
+                                     cfg.rope_theta)
+    q_rope = rope_lib.apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _kv_latent(params, x, cfg: ModelConfig, positions, par: Parallelism):
+    """x: [B,S,d] -> c_kv [B,S,kv_lora] (normed), k_rope [B,S,rope] (rope'd)."""
+    m = cfg.mla
+    ckr = x @ params["w_dkv"]
+    c_kv = rmsnorm(params["kv_norm"], ckr[..., : m.kv_lora_rank],
+                   eps=cfg.norm_eps)
+    k_rope = ckr[..., m.kv_lora_rank:]
+    if positions.ndim == 3:
+        positions = positions[0]
+    cos, sin = rope_lib.rope_cos_sin(positions, m.qk_rope_head_dim,
+                                     cfg.rope_theta)
+    k_rope = rope_lib.apply_rope(k_rope[..., None, :], cos, sin)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_apply(params, x: jax.Array, *, spec: LayerSpec, cfg: ModelConfig,
+              positions: jax.Array, par: Parallelism = NO_PARALLEL,
+              return_cache: bool = False):
+    """Causal MLA over x [B,S,d]. Cache = (c_kv, k_rope) compressed."""
+    m = cfg.mla
+    H = cfg.n_heads
+    q_nope, q_rope = _q_proj(params, x, cfg, positions, par)
+    c_kv, k_rope = _kv_latent(params, x, cfg, positions, par)
+    # decompress K/V per head for the chunked-attention path
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhv->bshv", c_kv, params["w_uv"])
+    k_nope = par.cs(k_nope, "batch", None, "heads", None)
+    v = par.cs(v, "batch", None, "heads", None)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_rope.shape[:2] + (H, m.qk_rope_head_dim))],
+        axis=-1)
+    ctx = blockwise_attention(q, k, v, causal=True, window=spec.window,
+                              softcap=spec.attn_logit_softcap,
+                              chunk_q=cfg.attn_chunk_q,
+                              chunk_k=cfg.attn_chunk_k, par=par)
+    out = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"])
+    out = par.cs(out, "batch", "seq", "d_model")
+    cache = (c_kv, k_rope) if return_cache else None
+    return out, cache
+
+
+def mla_decode(params, x: jax.Array, cache: Tuple[jax.Array, jax.Array], *,
+               spec: LayerSpec, cfg: ModelConfig, pos: jax.Array,
+               par: Parallelism = NO_PARALLEL):
+    """Absorbed MLA decode. x: [B,1,d]; cache (c_kv [B,S,r], k_rope [B,S,rr]).
+
+    q̃ = q_nope·W_uk lives in latent space; scores/context contract against
+    the compressed cache directly (flash-decode over the 'model'-sharded
+    cache sequence dim).
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    positions = pos[:, None]
+    q_nope, q_rope = _q_proj(params, x, cfg, positions, par)   # [B,1,H,*]
+    c_new, kr_new = _kv_latent(params, x, cfg, positions, par)
+    c_cache, kr_cache = cache
+    S = c_cache.shape[1]
+    bidx = jnp.arange(B)
+    c_cache = c_cache.at[bidx, pos].set(c_new[:, 0].astype(c_cache.dtype))
+    kr_cache = kr_cache.at[bidx, pos].set(kr_new[:, 0].astype(kr_cache.dtype))
+    c_cache = par.cs(c_cache, "batch", "kv_seq", None)
+    kr_cache = par.cs(kr_cache, "batch", "kv_seq", None)
+
+    # fp32 accumulation via preferred_element_type — the compressed cache
+    # is contracted in its storage dtype (no fp32 cache copy)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_abs = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0],
+                       params["w_uk"],
+                       preferred_element_type=jnp.float32)     # [B,H,r]
+    s = (jnp.einsum("bhr,bsr->bhs", q_abs.astype(c_cache.dtype), c_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhk,bsk->bhs", q_rope[:, 0].astype(kr_cache.dtype),
+                      kr_cache,
+                      preferred_element_type=jnp.float32)) * scale
+    s = _softcap(s, spec.attn_logit_softcap)
+    mask = jnp.arange(S, dtype=jnp.int32)[None, :] <= pos[:, None]
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    s = par.cs(s, "batch", None, "kv_seq")
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - mx)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    ctx_c = jnp.einsum("bhs,bsr->bhr", (p / l).astype(c_cache.dtype),
+                       c_cache, preferred_element_type=jnp.float32)
+    v_heads = jnp.einsum("bhr,rhv->bhv", ctx_c.astype(x.dtype),
+                         params["w_uv"],
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bhv,hvd->bd", v_heads, params["wo"])[:, None]
+    out = par.cs(out, "batch", None, "d_model")
+    return out, (c_cache, kr_cache)

@@ -1,0 +1,56 @@
+"""Normalization layers (functional; params are plain dicts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    # gemma-style (1+scale) handled in apply via `plus_one`
+    return {"scale": jnp.zeros((d,), dtype=dtype)}
+
+
+def rmsnorm(params, x: jax.Array, *, eps: float = 1e-6,
+            plus_one: bool = True) -> jax.Array:
+    """RMSNorm computed in fp32, cast back to x.dtype.
+
+    ``plus_one``: weight parameterized as (1 + scale), zeros-init => identity.
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    w = 1.0 + scale if plus_one else scale
+    return (xf * w).astype(dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype),
+            "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(params, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = xf * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def norm_init(kind: str, d: int, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return rmsnorm_init(d, dtype)
+    if kind == "layernorm":
+        return layernorm_init(d, dtype)
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+def apply_norm(kind: str, params, x: jax.Array, *, eps: float) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(params, x, eps=eps)
+    if kind == "layernorm":
+        return layernorm(params, x, eps=eps)
+    raise ValueError(f"unknown norm {kind!r}")

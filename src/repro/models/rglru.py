@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Same chunked-associative-scan strategy as the Mamba mixer (d_state == 1).
+The gate projections are block-diagonal as in the paper; with
+n_blocks == n_heads the block dim shards cleanly over the 'model' axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ModelConfig
+from repro.models.ssm import _causal_conv, _chunked_linear_scan
+from repro.runtime.parallel import Parallelism, NO_PARALLEL
+
+
+def _init(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)).astype(dtype)
+
+
+def _nb(cfg: ModelConfig) -> int:
+    r = cfg.rglru
+    return r.n_blocks if r.n_blocks else cfg.n_heads
+
+
+def rglru_init(key, cfg: ModelConfig, d_stream: int, dtype=jnp.float32):
+    r = cfg.rglru
+    di, dc = r.d_inner, r.d_conv
+    nb = _nb(cfg)
+    bd = di // nb
+    ks = jax.random.split(key, 8)
+    # Λ init so that a = exp(-c softplus(Λ)) is in ~(0.9, 0.999)
+    lam = jax.random.uniform(ks[5], (di,), jnp.float32, 0.0, 1.0)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam * (0.999 - 0.9) + 0.9) / r.c))
+    return {
+        "w_rec": _init(ks[0], (d_stream, di), d_stream, dtype),
+        "w_gate": _init(ks[1], (d_stream, di), d_stream, dtype),
+        "conv_w": _init(ks[2], (dc, di), dc, jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "wa": _init(ks[3], (nb, bd, bd), bd, jnp.float32),
+        "ba": jnp.zeros((di,), jnp.float32),
+        "wi": _init(ks[4], (nb, bd, bd), bd, jnp.float32),
+        "bi": jnp.zeros((di,), jnp.float32),
+        "lam": lam,
+        "w_out": _init(ks[6], (di, d_stream), di, dtype),
+    }
+
+
+def _block_diag(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """u: [B,S,di]; w: [nb, bd, bd] -> [B,S,di] (fp32)."""
+    nb, bd, _ = w.shape
+    shp = u.shape
+    ur = u.reshape(shp[:-1] + (nb, bd)).astype(jnp.float32)
+    out = jnp.einsum("...nk,nkj->...nj", ur, w)
+    return out.reshape(shp) + b
+
+
+def _gates(params, xc: jax.Array, cfg: ModelConfig):
+    """a_t (fp32) and gated input multiplier sqrt(1-a^2), input gate."""
+    r = cfg.rglru
+    rec = jax.nn.sigmoid(_block_diag(xc, params["wa"], params["ba"]))
+    inp = jax.nn.sigmoid(_block_diag(xc, params["wi"], params["bi"]))
+    log_a = -r.c * jax.nn.softplus(params["lam"]) * rec
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))          # sqrt(1 - a^2)
+    return a, mult, inp
+
+
+def rglru_apply(params, x: jax.Array, *, cfg: ModelConfig,
+                par: Parallelism = NO_PARALLEL, return_cache: bool = False,
+                h0=None):
+    """x: [B,S,d] -> (out, cache). cache=(conv_state [B,dc-1,di], h [B,di])."""
+    r = cfg.rglru
+    B, S, _ = x.shape
+    u = x @ params["w_rec"]
+    u = par.cs(u, "batch", None, "d_inner")
+    gate = jax.nn.gelu((x @ params["w_gate"]).astype(jnp.float32),
+                       approximate=True).astype(x.dtype)
+    gate = par.cs(gate, "batch", None, "d_inner")
+    xc = _causal_conv(u, params["conv_w"], params["conv_b"]).astype(x.dtype)
+    a, mult, inp = _gates(params, xc, cfg)
+    b = mult * (inp * xc.astype(jnp.float32))
+    if h0 is None:
+        h0 = jnp.zeros((B, r.d_inner), jnp.float32)
+    h, h_last = _chunked_linear_scan(a, b, h0.astype(jnp.float32), r.chunk)
+    out = (h.astype(x.dtype) * gate) @ params["w_out"]
+    out = par.cs(out, "batch", None, "d_model")
+    cache = None
+    if return_cache:
+        dc = params["conv_w"].shape[0]
+        conv_state = u[:, S - (dc - 1):] if S >= dc - 1 else jnp.pad(
+            u, ((0, 0), (dc - 1 - S, 0), (0, 0)))
+        cache = (conv_state.astype(x.dtype), h_last)
+    return out, cache
+
+
+def rglru_decode(params, x: jax.Array, cache, *, cfg: ModelConfig,
+                 par: Parallelism = NO_PARALLEL):
+    """x: [B,1,d]; cache=(conv_state, h [B,di])."""
+    conv_state, h = cache
+    u = x[:, 0] @ params["w_rec"]
+    u = par.cs(u, "batch", "d_inner")
+    gate = jax.nn.gelu((x[:, 0] @ params["w_gate"]).astype(jnp.float32),
+                       approximate=True).astype(x.dtype)
+    window = jnp.concatenate([conv_state, u[:, None]], axis=1)
+    xc = (jnp.einsum("bci,ci->bi", window.astype(jnp.float32),
+                     params["conv_w"]) + params["conv_b"]).astype(x.dtype)
+    a, mult, inp = _gates(params, xc, cfg)
+    h = a * h + mult * (inp * xc.astype(jnp.float32))
+    out = ((h.astype(x.dtype) * gate) @ params["w_out"])[:, None]
+    out = par.cs(out, "batch", None, "d_model")
+    return out, (window[:, 1:], h)

@@ -1,0 +1,79 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+Convention: head_dim split into pairs (x[..., :h/2], x[..., h/2:]) —
+"half rotation" layout (llama / gemma / qwen).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape [head_dim // 2] (fp32)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for integer positions.
+
+    positions: [...] int32 -> cos, sin: [..., head_dim // 2] fp32.
+    """
+    inv = rope_freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate. x: [..., n_heads, head_dim]; cos/sin broadcastable to
+    [..., 1, head_dim//2] (a heads axis is inserted here)."""
+    dtype = x.dtype
+    half = x.shape[-1] // 2
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+def mrope_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                  sections: Sequence[int]) -> Tuple[jax.Array, jax.Array]:
+    """Qwen2-VL multimodal RoPE.
+
+    positions: [3, ...] (temporal, height, width) int32.
+    sections: per-axis number of *pairs*; sum(sections) == head_dim // 2.
+    Frequency slots are assigned to (t, h, w) position streams per section.
+    Returns cos/sin [..., head_dim // 2].
+    """
+    if sum(sections) != head_dim // 2:
+        raise ValueError("mrope sections must sum to head_dim // 2")
+    inv = rope_freqs(head_dim, theta)                       # [half]
+    # section id per frequency slot
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.asarray(sections), total_repeat_length=head_dim // 2)
+    # gather the right positional stream per slot: pos [3, ...] -> [..., half]
+    pos = jnp.moveaxis(positions, 0, -1).astype(jnp.float32)  # [..., 3]
+    pos_per_slot = pos[..., sec_id]                           # [..., half]
+    ang = pos_per_slot * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def positions_default(batch: int, seq: int, offset: jax.Array | int = 0
+                      ) -> jax.Array:
+    """[B, S] int32 positions starting at offset (scalar or [B])."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :]
+    if isinstance(offset, int):
+        return jnp.broadcast_to(pos + offset, (batch, seq))
+    return pos + offset[:, None].astype(jnp.int32)
+
+
+def mrope_positions_default(batch: int, seq: int, offset: jax.Array | int = 0
+                            ) -> jax.Array:
+    """Text-only default M-RoPE positions: all three streams equal. [3,B,S]."""
+    p = positions_default(batch, seq, offset)
+    return jnp.broadcast_to(p[None], (3, batch, seq))

@@ -1,0 +1,6 @@
+"""Optimizers (from scratch, no optax): AdamW (+fp32 master), Adafactor,
+global-norm clipping, warmup-cosine schedule, gradient compression."""
+from repro.optim.adafactor import adafactor_init, adafactor_update
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.common import (ADAFACTOR_THRESHOLD, clip_by_global_norm,
+                                make_optimizer, warmup_cosine)

@@ -1,0 +1,67 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moments, no first
+moment, no master copy.  The memory-frugal optimizer used for the MoE
+giants (671B fp32 Adam state does not fit 512 × 16 GB; factored stats are
+O(rows + cols)).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params) -> Dict[str, Any]:
+    def stat(l):
+        if _factored(l.shape):
+            return {"vr": jnp.zeros(l.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(l.shape[:-2] + l.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(l.shape, jnp.float32)}
+
+    return {"step": jnp.zeros((), jnp.int32),
+            "stats": jax.tree_util.tree_map(stat, params)}
+
+
+def adafactor_update(grads, state, params, lr, *, decay: float = 0.8,
+                     eps1: float = 1e-30, eps2: float = 1e-3,
+                     clip_threshold: float = 1.0
+                     ) -> Tuple[Any, Dict[str, Any]]:
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)
+
+    def upd(g, st, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps1
+        if _factored(g.shape):
+            vr = beta * st["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * st["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps1)
+            r = (vr / denom)[..., None]
+            u = g * jax.lax.rsqrt(r * vc[..., None, :] + eps1)
+            new_st = {"vr": vr, "vc": vc}
+        else:
+            v = beta * st["v"] + (1 - beta) * g2
+            u = g * jax.lax.rsqrt(v + eps1)
+            new_st = {"v": v}
+        # update clipping by RMS
+        rms = jnp.sqrt(jnp.mean(u * u) + eps1)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        scale = jnp.maximum(eps2, jnp.sqrt(jnp.mean(
+            p.astype(jnp.float32) ** 2)))        # relative step size
+        pf = p.astype(jnp.float32) - lr * scale * u
+        return {"__upd__": (new_st, pf.astype(p.dtype))}
+
+    is_stat = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    is_upd = lambda x: isinstance(x, dict) and "__upd__" in x
+    pairs = jax.tree_util.tree_map(upd, grads, state["stats"], params,
+                                   is_leaf=is_stat)
+    stats = jax.tree_util.tree_map(lambda d: d["__upd__"][0], pairs,
+                                   is_leaf=is_upd)
+    new_params = jax.tree_util.tree_map(lambda d: d["__upd__"][1], pairs,
+                                        is_leaf=is_upd)
+    return new_params, {"step": step, "stats": stats}

@@ -1,0 +1,61 @@
+"""AdamW with fp32 master weights for bf16 params (mixed-precision).
+
+State: {step, m, v, master?}.  m/v are fp32.  When params are bf16 a
+fp32 master copy is kept and updated; params are the bf16 cast of the
+master.  All ops are pure jnp — the state shards like the params
+(ZeRO-style via the same PartitionSpecs).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_bf16(tree) -> bool:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return any(l.dtype == jnp.bfloat16 for l in leaves)
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape, jnp.float32), t)
+    state = {"step": jnp.zeros((), jnp.int32),
+             "m": zeros(params), "v": zeros(params)}
+    if _is_bf16(params):
+        state["master"] = jax.tree_util.tree_map(
+            lambda l: l.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(grads, state, params, lr, *, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1) -> Tuple[Any, Dict[str, Any]]:
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+    master = state.get("master", params)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * pf)
+        return {"__upd__": (m, v, pf)}
+
+    is_upd = lambda x: isinstance(x, dict) and "__upd__" in x
+    flat = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], master)
+    pick = lambda i: jax.tree_util.tree_map(lambda d: d["__upd__"][i], flat,
+                                            is_leaf=is_upd)
+    m, v, new_master = pick(0), pick(1), pick(2)
+    new_params = jax.tree_util.tree_map(
+        lambda nm, p: nm.astype(p.dtype), new_master, params)
+    new_state = {"step": step, "m": m, "v": v}
+    if "master" in state:
+        new_state["master"] = new_master
+    return new_params, new_state

@@ -1,0 +1,42 @@
+"""Shared optimizer utilities: clipping, schedules, and the optimizer
+factory used by the train step (AdamW below ~30B params, Adafactor for
+the giants)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ModelConfig
+from repro.optim.adafactor import adafactor_init, adafactor_update
+from repro.optim.adamw import adamw_init, adamw_update
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = peak_lr * t / max(1, warmup)
+    frac = jnp.clip((t - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(math.pi * frac)))
+    return jnp.where(t < warmup, warm, cos)
+
+
+ADAFACTOR_THRESHOLD = 30e9     # params above this use Adafactor
+
+
+def make_optimizer(cfg: ModelConfig, n_params: int
+                   ) -> Tuple[Callable, Callable, str]:
+    """Returns (init_fn(params), update_fn(grads, state, params, lr), name)."""
+    if n_params >= ADAFACTOR_THRESHOLD:
+        return adafactor_init, adafactor_update, "adafactor"
+    return adamw_init, adamw_update, "adamw"

@@ -1,0 +1,52 @@
+"""Gradient compression for cross-pod reduction: bf16 cast and top-k
+sparsification with error feedback.
+
+At 512+ chips the gradient all-reduce over the (slow) cross-pod links is
+a scaling bottleneck; compressing the pod-boundary traffic 2× (bf16) to
+~20× (top-k + error feedback) is the standard trick.  Both schemes keep a
+residual so the compression error is re-injected next step (convergence-
+preserving; Stich et al. 2018).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def bf16_compress(grads: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.bfloat16) if jnp.issubdtype(
+            g.dtype, jnp.floating) else g, grads)
+
+
+def topk_compress(grads: Any, residual: Any, frac: float = 0.05
+                  ) -> Tuple[Any, Any]:
+    """Keep the top-|frac| entries of (grad + residual) per leaf; the rest
+    becomes the next residual (error feedback).  Returns (sparse_grads,
+    new_residual) — sparse grads are dense tensors with zeros (the wire
+    savings come from the collective operating on value+index pairs on a
+    real fabric; here we model the semantics, and benchmarks account the
+    bytes as 2·frac·|g|)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        k = max(1, int(frac * gf.size))
+        flat = jnp.abs(gf).reshape(-1)
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        mask = (jnp.abs(gf) >= thresh).astype(jnp.float32)
+        sent = gf * mask
+        return sent.astype(g.dtype), gf - sent
+
+    flat = jax.tree_util.tree_map(
+        lambda g, r: {"__c__": one(g, r)}, grads, residual)
+    is_c = lambda x: isinstance(x, dict) and "__c__" in x
+    sent = jax.tree_util.tree_map(lambda d: d["__c__"][0], flat, is_leaf=is_c)
+    new_res = jax.tree_util.tree_map(lambda d: d["__c__"][1], flat,
+                                     is_leaf=is_c)
+    return sent, new_res
+
+
+def zero_residual(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,183 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+  compute    = FLOPs_per_chip / peak_FLOP/s
+  memory     = HBM bytes_per_chip / HBM_bw
+  collective = wire bytes_per_chip / ICI link bw
+
+cost_analysis() on the SPMD executable reports the *per-device* program,
+so its flops/bytes are already per chip.  Collective bytes come from the
+HLO parser (roofline.hlo).  MODEL_FLOPS uses 6·N·D for training and
+2·N·D for inference (N_active for MoE); the ratio MODEL_FLOPS/HLO_FLOPs
+exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.common import hw
+from repro.common.types import ModelConfig, ShapeSpec
+from repro.roofline import hlo as hlo_lib
+
+
+def model_n_params(cfg: ModelConfig, active: bool = False) -> float:
+    """Approximate parameter count from the config (no init needed).
+    active=True counts MoE routed experts at top_k/E utilization."""
+    d = cfg.d_model
+    n = float(cfg.vocab_size * d)                     # embed
+    if not cfg.tie_embeddings:
+        n += cfg.vocab_size * d
+    n_tracks = cfg.pt.n_tracks if cfg.pt is not None else 1
+    for nm in cfg.layer_names:
+        spec = cfg.spec(nm)
+        # mixer
+        if spec.mixer == "gqa":
+            n += d * cfg.n_heads * cfg.head_dim * 2
+            n += d * cfg.n_kv_heads * cfg.head_dim * 2
+            if spec.cross_attn:
+                n += d * cfg.n_heads * cfg.head_dim * 2
+                n += d * cfg.n_kv_heads * cfg.head_dim * 2
+        elif spec.mixer == "mla":
+            m = cfg.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            if m.q_lora_rank:
+                n += d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * qk
+            else:
+                n += d * cfg.n_heads * qk
+            n += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+            n += m.kv_lora_rank * cfg.n_heads * (
+                m.qk_nope_head_dim + m.v_head_dim)
+            n += cfg.n_heads * m.v_head_dim * d
+        elif spec.mixer == "mamba":
+            s = cfg.ssm
+            dtr = s.dt_rank or -(-d // 16)
+            n += d * 2 * s.d_inner + s.d_inner * (dtr + 2 * s.d_state)
+            n += dtr * s.d_inner + s.d_inner * d + s.d_inner * s.d_state
+        elif spec.mixer == "rglru":
+            r = cfg.rglru
+            nb = r.n_blocks or cfg.n_heads
+            n += d * r.d_inner * 2 + r.d_inner * d
+            n += 2 * nb * (r.d_inner // nb) ** 2
+        # mlp
+        if spec.mlp in ("swiglu", "geglu"):
+            n += 3 * d * cfg.d_ff
+        elif spec.mlp in ("gelu", "sqrelu", "relu"):
+            n += 2 * d * cfg.d_ff
+        elif spec.mlp == "moe":
+            m = cfg.moe
+            e = m.top_k if active else m.n_routed_experts
+            n += 3 * d * m.d_expert * (e + m.n_shared_experts)
+            n += d * m.n_routed_experts
+    if cfg.encdec is not None:
+        enc = cfg.encdec.n_enc_layers
+        n += enc * (d * cfg.n_heads * cfg.head_dim * 2
+                    + d * cfg.n_kv_heads * cfg.head_dim * 2
+                    + 2 * d * cfg.d_ff)
+    return n * n_tracks
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """6·N·D (train) / 2·N·D (inference), N_active for MoE."""
+    n_active = model_n_params(cfg, active=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch                       # one token per seq
+    return 2.0 * n_active * tokens
+
+
+def cache_bytes(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Global decode-cache bytes from the config (2-byte elements)."""
+    B, S = shape.global_batch, shape.seq_len
+    n_tracks = cfg.pt.n_tracks if cfg.pt is not None else 1
+    total = 0.0
+    for nm in cfg.layer_names:
+        spec = cfg.spec(nm)
+        if spec.mixer == "gqa":
+            s = S if spec.window is None else min(S, spec.window)
+            total += 2 * B * s * cfg.n_kv_heads * cfg.head_dim * 2
+        elif spec.mixer == "mla":
+            total += B * S * (cfg.mla.kv_lora_rank
+                              + cfg.mla.qk_rope_head_dim) * 2
+        elif spec.mixer == "mamba":
+            total += B * cfg.ssm.d_inner * (cfg.ssm.d_state * 4 + 3 * 2)
+        elif spec.mixer == "rglru":
+            total += B * cfg.rglru.d_inner * (4 + 3 * 2)
+    return total * n_tracks
+
+
+def useful_bytes_per_chip(cfg: ModelConfig, shape: ShapeSpec,
+                          n_dev: int) -> float:
+    """Napkin lower bound on required HBM traffic per chip per step —
+    the denominator-free 'useful' side of the memory roofline.
+
+    train:   3 passes over params (fwd read, bwd read, optimizer rmw)
+             + ~8 activation tensors/layer (fwd+bwd+remat)
+    prefill: 1 param pass + cache write + ~4 activation tensors/layer
+    decode:  1 param pass + cache read (the two classic decode terms)
+    """
+    p_bytes = 2.0 * model_n_params(cfg)
+    d = cfg.d_model * (cfg.pt.n_tracks if cfg.pt is not None else 1)
+    L = cfg.n_layers
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        acts = tokens * d * L * 2.0 * 8
+        return (3 * p_bytes + acts) / n_dev
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        acts = tokens * d * L * 2.0 * 4
+        return (p_bytes + acts + cache_bytes(cfg, shape)) / n_dev
+    return (p_bytes + cache_bytes(cfg, shape)) / n_dev
+
+
+def analyze(compiled, cfg: ModelConfig, shape: ShapeSpec, *,
+            multi_pod: bool = False, microbatches: int = 1) -> Dict:
+    n_dev = hw.CHIPS_PER_POD * (2 if multi_pod else 1)
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    text = compiled.as_text()
+    # loop-expanded totals from the HLO itself (cost_analysis does not
+    # expand while bodies — see module docstring)
+    totals = hlo_lib.analyze_text(text, n_dev)
+    flops_chip = totals["flops"]
+    bytes_chip = totals["traffic_bytes"]
+    copy_chip = totals.get("copy_bytes", 0.0)
+    coll = {k: v for k, v in totals.items()
+            if k not in ("flops", "traffic_bytes", "copy_bytes")}
+
+    compute_s = flops_chip / hw.PEAK_FLOPS_BF16
+    memory_s = bytes_chip / hw.HBM_BW
+    collective_s = coll.get("total", 0.0) / hw.ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    hlo_flops_global = flops_chip * n_dev
+    ratio = mf / hlo_flops_global if hlo_flops_global else 0.0
+    bound = max(terms.values())
+    useful_compute_s = (mf / n_dev) / hw.PEAK_FLOPS_BF16
+    useful_mem_s = useful_bytes_per_chip(cfg, shape, n_dev) / hw.HBM_BW
+    # fraction of roofline: the time the workload's *required* resource
+    # use would take at peak, over the achieved bound.  Compute-bound
+    # cells score useful-FLOPs/peak; bandwidth-bound cells (decode!)
+    # score required-bytes/peak-BW.
+    useful_s = max(useful_compute_s, useful_mem_s)
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": ratio,
+        "useful_compute_s": useful_compute_s,
+        "useful_memory_s": useful_mem_s,
+        "roofline_fraction": (useful_s / bound) if bound else 0.0,
+        "collectives": {k: v for k, v in coll.items()},
+        # CPU-backend loop-state copies (TPU aliases these in place);
+        # reported separately, not in the memory term
+        "copy_bytes_chip": copy_chip,
+        "cost_analysis_flops_chip": float(cost.get("flops", 0.0)),
+        "n_devices": n_dev,
+    }

@@ -1,0 +1,91 @@
+"""Elastic re-mesh + straggler detection — the fault-tolerance runtime.
+
+On a real cluster the launcher monitors host heartbeats; when a host
+fails mid-run the job restarts on the survivors: ``plan_mesh`` picks the
+largest valid (data, model) grid for the remaining chips, and the trainer
+restores the last checkpoint with the new shardings (checkpoint.restore
+takes arbitrary shardings — resharding is a device_put).  On CPU these
+paths are driven by unit tests with virtual device counts.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def plan_mesh(n_devices: int, *, model_parallel: int,
+              min_data: int = 1) -> Tuple[int, int]:
+    """Largest (data, model) grid for the surviving chips.
+
+    Keeps the model axis intact (params are sharded over it) and shrinks
+    the data axis — the standard recovery move: losing a host reduces
+    throughput, not the ability to fit the model.  If fewer than
+    model_parallel chips survive, degrade model parallelism to the largest
+    power-of-two divisor that fits.
+    """
+    mp = model_parallel
+    while mp > 1 and (n_devices < mp or mp * min_data > n_devices):
+        mp //= 2
+    data = max(min_data, n_devices // mp)
+    return data, mp
+
+
+def build_mesh(devices: Sequence, data: int, model: int) -> Mesh:
+    import numpy as np
+    dev = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(dev, ("data", "model"),
+                axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+@dataclass
+class StragglerMonitor:
+    """Per-step timing outlier detection.
+
+    Feed per-host step durations; hosts slower than
+    median × threshold for ``patience`` consecutive steps are flagged —
+    the launcher's signal to drain/replace the host.
+    """
+
+    threshold: float = 1.5
+    patience: int = 3
+    _strikes: Dict[str, int] = field(default_factory=dict)
+    history: List[Dict[str, float]] = field(default_factory=list)
+
+    def observe(self, step_times: Dict[str, float]) -> List[str]:
+        self.history.append(dict(step_times))
+        med = statistics.median(step_times.values())
+        flagged = []
+        for host, t in step_times.items():
+            if med > 0 and t > self.threshold * med:
+                self._strikes[host] = self._strikes.get(host, 0) + 1
+            else:
+                self._strikes[host] = 0
+            if self._strikes[host] >= self.patience:
+                flagged.append(host)
+        return flagged
+
+
+@dataclass
+class RetryPolicy:
+    """Launcher-side retry-with-backoff around the train loop."""
+
+    max_restarts: int = 5
+    backoff_s: float = 1.0
+
+    def run(self, fn, on_restart=None):
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except (jax.errors.JaxRuntimeError, RuntimeError, OSError) as e:
+                attempt += 1
+                if attempt > self.max_restarts:
+                    raise
+                if on_restart is not None:
+                    on_restart(attempt, e)
+                time.sleep(self.backoff_s * attempt)

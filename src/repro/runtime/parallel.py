@@ -1,0 +1,160 @@
+"""Parallelism context: logical-axis sharding rules applied as constraints.
+
+The model code names *logical* dimensions ('batch', 'heads', 'd_ff', ...)
+and calls ``par.cs(x, 'batch', 'seq', 'd_model')``.  The Parallelism object
+maps logical names to mesh axes per the active rule set and inserts
+``with_sharding_constraint`` — or is a no-op when no mesh is active (CPU
+smoke tests).  Divisibility is checked so the same rules work for every
+(arch × shape) cell: an axis that does not divide the dimension is dropped
+rather than erroring.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisSpec = Union[None, str, Tuple[str, ...]]
+
+
+# Default rule sets.  'train' shards the token batch over (pod, data) and
+# model-internal dims over 'model' (Megatron TP).  'decode' additionally
+# shards the KV-cache sequence dim over 'model' (split-KV flash-decode) so
+# 32k–500k caches fit and decode attention parallelizes over chips.
+TRAIN_RULES: Mapping[str, AxisSpec] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "d_model": None,
+    "d_ff": "model",
+    "d_inner": "model",
+    "vocab": "model",
+    "experts": ("data", "model"),   # combined EP axis (256-way for MoE giants)
+    "kv_lora": None,
+    "track": "track",
+    "tp": "tp",
+    "fsdp": None,          # set to 'data' to FSDP-shard params over data
+}
+
+# Decode: the KV-cache sequence dim is sharded over 'model' (split-KV,
+# flash-decode style) — this is the only way 32k–500k caches fit and it
+# parallelizes the bandwidth-bound cache read.  Head-dims of *activations*
+# are replicated (q is tiny at decode); weights stay TP-sharded, so XLA
+# inserts a small all-gather after the q projection and small all-reduces
+# after the S-contraction and the out-projection.
+DECODE_RULES: Mapping[str, AxisSpec] = dict(
+    TRAIN_RULES,
+    kv_seq="model",
+    heads=None,
+    kv_heads=None,
+)
+
+
+@dataclass(frozen=True)
+class Parallelism:
+    """Mesh + logical→physical axis rules.  ``mesh=None`` => no-op."""
+
+    mesh: Optional[Mesh] = None
+    rules: Mapping[str, AxisSpec] = field(default_factory=lambda: dict(TRAIN_RULES))
+
+    # ------------------------------------------------------------------
+    def axis_size(self, axes: AxisSpec) -> int:
+        if self.mesh is None or axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape.get(a, 1)
+        return n
+
+    def _resolve(self, name: Optional[str]) -> AxisSpec:
+        if name is None:
+            return None
+        axes = self.rules.get(name, None)
+        if axes is None:
+            return None
+        if isinstance(axes, str):
+            axes = (axes,)
+        # keep only axes present in the mesh
+        axes = tuple(a for a in axes if self.mesh is not None
+                     and a in self.mesh.shape)
+        if not axes:
+            return None
+        return axes
+
+    def spec(self, *dims: Optional[str], shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for logical dims, dropping non-dividing axes."""
+        entries = []
+        used: set = set()
+        for i, name in enumerate(dims):
+            axes = self._resolve(name)
+            if axes is None:
+                entries.append(None)
+                continue
+            axes = tuple(a for a in axes if a not in used)
+            if shape is not None:
+                # longest prefix of axes whose product divides the dim
+                kept: list = []
+                prod = 1
+                for a in axes:
+                    na = self.mesh.shape[a]
+                    if shape[i] % (prod * na) == 0:
+                        kept.append(a)
+                        prod *= na
+                    else:
+                        break
+                axes = tuple(kept)
+            if not axes:
+                entries.append(None)
+            else:
+                used.update(axes)
+                entries.append(axes if len(axes) > 1 else axes[0])
+        return P(*entries)
+
+    def cs(self, x: jax.Array, *dims: Optional[str]) -> jax.Array:
+        """with_sharding_constraint on logical dims (no-op without mesh)."""
+        if self.mesh is None:
+            return x
+        if len(dims) != x.ndim:
+            raise ValueError(f"cs: {len(dims)} dims for rank-{x.ndim} array")
+        spec = self.spec(*dims, shape=x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def sharding(self, *dims: Optional[str],
+                 shape: Optional[Sequence[int]] = None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*dims, shape=shape))
+
+    def with_rules(self, **kw: AxisSpec) -> "Parallelism":
+        r = dict(self.rules)
+        r.update(kw)
+        return replace(self, rules=r)
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        """Mesh axes carrying the token batch (pod, data when present)."""
+        axes = self._resolve("batch")
+        return axes or ()
+
+    @property
+    def model_axes(self) -> Tuple[str, ...]:
+        axes = self._resolve("heads")
+        return axes or ()
+
+
+NO_PARALLEL = Parallelism(mesh=None)
+
+
+def decode_parallelism(mesh: Optional[Mesh]) -> Parallelism:
+    return Parallelism(mesh=mesh, rules=dict(DECODE_RULES))
+
+
+def train_parallelism(mesh: Optional[Mesh]) -> Parallelism:
+    return Parallelism(mesh=mesh, rules=dict(TRAIN_RULES))

@@ -1,0 +1,235 @@
+"""Parameter / cache / input sharding rules for every (arch × shape × mesh).
+
+Param leaves are matched by the last two components of their pytree path
+('mixer/wq', 'mlp/wo', ...) to a tuple of *logical* core dims; leading
+stacking dims ([R] for the scanned unit, [R, D, n_tracks] for PT blocks)
+are padded with None — except the track dim, which maps to the 'track'
+mesh axis for PT models.  Logical → physical resolution (and divisibility
+fallback) is delegated to Parallelism.spec.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.types import ModelConfig, ShapeSpec
+from repro.runtime.parallel import Parallelism
+
+FSDP = "fsdp"          # resolves to 'data' when rules['fsdp'] == 'data'
+
+# last-two-path-component -> logical dims of the *core* (unstacked) shape
+_PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # attention
+    "mixer/wq": (FSDP, "heads", None),
+    "mixer/wk": (FSDP, "kv_heads", None),
+    "mixer/wv": (FSDP, "kv_heads", None),
+    "mixer/wo": ("heads", None, FSDP),
+    "cross/wq": (FSDP, "heads", None),
+    "cross/wk": (FSDP, "kv_heads", None),
+    "cross/wv": (FSDP, "kv_heads", None),
+    "cross/wo": ("heads", None, FSDP),
+    # MLA
+    "mixer/w_dq": (FSDP, None),
+    "mixer/w_uq": (None, "heads", None),
+    "mixer/w_dkv": (FSDP, None),
+    "mixer/w_uk": (None, "heads", None),
+    "mixer/w_uv": (None, "heads", None),
+    # dense MLP
+    "mlp/wi_gate": (FSDP, "d_ff"),
+    "mlp/wi_up": (FSDP, "d_ff"),
+    "mlp/wo": ("d_ff", FSDP),
+    # MoE (must match moe._param_specs; 'experts' resolves to the EP axes)
+    "mlp/router": (None, None),
+    "mlp/e_bias": (None,),
+    "mlp/w_gate": ("experts", None, None),
+    "mlp/w_up": ("experts", None, None),
+    "mlp/w_down": ("experts", None, None),
+    "mlp/ws_gate": (None, "d_ff"),
+    "mlp/ws_up": (None, "d_ff"),
+    "mlp/ws_down": ("d_ff", None),
+    # mamba
+    "mixer/in_proj": (FSDP, "d_inner"),
+    "mixer/conv_w": (None, "d_inner"),
+    "mixer/conv_b": ("d_inner",),
+    "mixer/x_proj": ("d_inner", None),
+    "mixer/dt_w": (None, "d_inner"),
+    "mixer/dt_bias": ("d_inner",),
+    "mixer/A_log": ("d_inner", None),
+    "mixer/D": ("d_inner",),
+    "mixer/out_proj": ("d_inner", FSDP),
+    # rglru
+    "mixer/w_rec": (FSDP, "d_inner"),
+    "mixer/w_gate": (FSDP, "d_inner"),
+    "mixer/wa": ("d_inner", None, None),
+    "mixer/ba": ("d_inner",),
+    "mixer/wi": ("d_inner", None, None),
+    "mixer/bi": ("d_inner",),
+    "mixer/lam": ("d_inner",),
+    "mixer/w_out": ("d_inner", FSDP),
+    # embeddings / head
+    "/embed": ("vocab", FSDP),
+    "/head": (FSDP, "vocab"),
+}
+
+_NORM_NAMES = ("scale", "bias")
+
+
+def _leaf_dims(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    core = _leaf_core(path)
+    if core is None:
+        return (None,) * ndim
+    lead = ndim - len(core)
+    if lead < 0:        # rule longer than leaf: bail to replicated
+        return (None,) * ndim
+    return (None,) * lead + tuple("fsdp" if d == FSDP else d for d in core)
+
+
+def _is_pt_tracked(path: str) -> bool:
+    return path.startswith("blocks/") or path.startswith("tail/")
+
+
+def param_pspec(path: str, leaf, cfg: ModelConfig,
+                par: Parallelism) -> P:
+    dims = list(_leaf_dims(path, leaf.ndim))
+    if cfg.pt is not None and _is_pt_tracked(path):
+        # blocks leaves: [R, D, n_tracks, core...]; tail: [rem, n, core...]
+        core = _leaf_core(path)
+        track_pos = leaf.ndim - (len(core) if core else leaf.ndim) - 1
+        if track_pos >= 0:
+            dims[track_pos] = "track"
+    return par.spec(*dims, shape=leaf.shape)
+
+
+def _leaf_core(path: str) -> Optional[Tuple[Optional[str], ...]]:
+    parts = path.split("/")
+    base = parts[-1]
+    parent = parts[-2] if len(parts) > 1 else ""
+    if base in _NORM_NAMES:
+        return (None,)
+    key = f"{parent}/{base}"
+    if key in _PARAM_RULES:
+        return _PARAM_RULES[key]
+    if f"/{base}" in _PARAM_RULES:
+        return _PARAM_RULES[f"/{base}"]
+    return None
+
+
+def param_shardings(params_tree, cfg: ModelConfig, par: Parallelism):
+    """NamedShardings (or None without a mesh) matching the param tree."""
+    if par.mesh is None:
+        return jax.tree_util.tree_map(lambda _: None, params_tree)
+    from repro.common.pytree import map_with_path
+    return map_with_path(
+        lambda path, leaf: NamedSharding(par.mesh,
+                                         param_pspec(path, leaf, cfg, par)),
+        params_tree)
+
+
+# ---------------------------------------------------------------------------
+# caches and step inputs
+# ---------------------------------------------------------------------------
+
+def cache_pspec(path: str, leaf, cfg: ModelConfig, par: Parallelism) -> P:
+    """Decode-cache leaves.  KV caches: [*, B, S, KH, hd] / MLA [*, B, S, r]
+    / states [*, B, ...].  Batch -> (pod,data); cache seq -> 'model'
+    (split-KV).  Identified positionally by rank-from-right; PT caches
+    additionally carry a track dim right before the core dims, sharded
+    over 'track'."""
+    nd = leaf.ndim
+    dims: list = [None] * nd
+    core = 0
+    # heuristics by rank-from-right, per mixer cache layouts
+    if nd >= 4 and leaf.shape[-1] == cfg.head_dim:       # kv cache [...,B,S,KH,hd]
+        dims[-4], dims[-3], dims[-2] = "batch", "kv_seq", "kv_heads"
+        core = 4
+    elif nd >= 3 and cfg.mla is not None and leaf.shape[-1] in (
+            cfg.mla.kv_lora_rank, cfg.mla.qk_rope_head_dim):
+        dims[-3], dims[-2] = "batch", "kv_seq"           # [...,B,S,r]
+        core = 3
+    elif cfg.ssm is not None and nd >= 3 and leaf.shape[-2:] == (
+            cfg.ssm.d_inner, cfg.ssm.d_state):
+        dims[-3], dims[-2] = "batch", "d_inner"          # [...,B,di,ds]
+        core = 3
+    elif nd >= 2:
+        # conv state [...,B,dc-1,di] vs recurrent state [...,B,di]
+        di = (cfg.rglru.d_inner if cfg.rglru is not None
+              else (cfg.ssm.d_inner if cfg.ssm is not None else -1))
+        dc = (cfg.rglru.d_conv if cfg.rglru is not None
+              else (cfg.ssm.d_conv if cfg.ssm is not None else -1))
+        if leaf.shape[-1] == di:
+            dims[-1] = "d_inner"
+            if nd >= 3 and leaf.shape[-2] == dc - 1:
+                dims[-3] = "batch"           # conv state
+                core = 3
+            else:
+                dims[-2] = "batch"           # recurrent state
+                core = 2
+    if (cfg.pt is not None and core and nd > core
+            and leaf.shape[nd - core - 1] == cfg.pt.n_tracks):
+        dims[nd - core - 1] = "track"        # per-track caches
+    return par.spec(*dims, shape=leaf.shape)
+
+
+def cache_shardings(cache_tree, cfg: ModelConfig, par: Parallelism):
+    if par.mesh is None:
+        return jax.tree_util.tree_map(lambda _: None, cache_tree)
+    from repro.common.pytree import map_with_path
+    return map_with_path(
+        lambda path, leaf: NamedSharding(par.mesh,
+                                         cache_pspec(path, leaf, cfg, par)),
+        cache_tree)
+
+
+def opt_state_shardings(state_tree, cfg: ModelConfig, par: Parallelism):
+    """Optimizer-state shardings: m/v/master mirror the param rules
+    (ZeRO-style); adafactor factored stats inherit the param spec with the
+    reduced dim dropped; counters replicated."""
+    if par.mesh is None:
+        return jax.tree_util.tree_map(lambda _: None, state_tree)
+    from repro.common.pytree import map_with_path
+
+    def one(path: str, leaf):
+        parts = path.split("/")
+        head, rest = parts[0], "/".join(parts[1:])
+        if head in ("m", "v", "master"):
+            return NamedSharding(par.mesh, param_pspec(rest, leaf, cfg, par))
+        if head == "stats":
+            stat = parts[-1]
+            ppath = "/".join(parts[1:-1])
+            dims = list(_leaf_dims(ppath, leaf.ndim + 1))
+            if stat == "vr":        # mean over last dim
+                dims = dims[:-1]
+            elif stat == "vc":      # mean over second-to-last dim
+                dims = dims[:-2] + dims[-1:]
+            else:                   # 'v': full shape
+                dims = list(_leaf_dims(ppath, leaf.ndim))
+            if cfg.pt is not None and _is_pt_tracked(ppath):
+                core = _leaf_core(ppath)
+                if core is not None:
+                    tp = (leaf.ndim + 1) - len(core) - 1
+                    if 0 <= tp < len(dims):
+                        dims[tp] = "track"
+            return NamedSharding(par.mesh, par.spec(*dims, shape=leaf.shape))
+        return NamedSharding(par.mesh, P())
+
+    return map_with_path(one, state_tree)
+
+
+def batch_shardings(batch_tree, cfg: ModelConfig, par: Parallelism):
+    """Token/embeds/position inputs: batch-sharded over (pod, data)."""
+    if par.mesh is None:
+        return jax.tree_util.tree_map(lambda _: None, batch_tree)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(par.mesh, P())
+        if leaf.ndim >= 2 and leaf.shape[0] == 3:        # mrope positions
+            dims = (None, "batch") + (None,) * (leaf.ndim - 2)
+        else:
+            dims = ("batch",) + (None,) * (leaf.ndim - 1)
+        return NamedSharding(par.mesh, par.spec(*dims, shape=leaf.shape))
+
+    return jax.tree_util.tree_map(one, batch_tree)

@@ -1,0 +1,76 @@
+"""KV-cache utilities for serving: padding prefill caches to engine
+capacity and per-slot insertion for continuous batching."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import LayerSpec, ModelConfig
+
+
+def _pad_seq(x: jax.Array, axis: int, new_len: int) -> jax.Array:
+    cur = x.shape[axis]
+    if cur >= new_len:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, new_len - cur)
+    return jnp.pad(x, pad)
+
+
+def _pad_layer(cache: Any, spec: LayerSpec, cfg: ModelConfig,
+               new_len: int) -> Any:
+    """Pad one layer's cache (possibly [R]-stacked) to new_len positions."""
+    if spec.mixer == "gqa":
+        if spec.cross_attn:
+            (k, v), enc = cache
+        else:
+            k, v = cache
+        if spec.window is not None and k.shape[-3] >= spec.window:
+            out = (k, v)                       # ring buffer: fixed size
+        else:
+            tgt = new_len if spec.window is None else min(new_len, spec.window)
+            out = (_pad_seq(k, -3, tgt), _pad_seq(v, -3, tgt))
+        return (out, enc) if spec.cross_attn else out
+    if spec.mixer == "mla":
+        c, kr = cache
+        return (_pad_seq(c, -2, new_len), _pad_seq(kr, -2, new_len))
+    return cache                               # mamba / rglru: O(1) state
+
+
+def pad_cache(cache: Dict[str, Any], cfg: ModelConfig,
+              new_len: int) -> Dict[str, Any]:
+    """Pad a prefill cache out to capacity ``new_len`` for decode."""
+    out = {"prefix": tuple(
+        _pad_layer(c, cfg.spec(nm), cfg, new_len)
+        for c, nm in zip(cache["prefix"], cfg.pattern_prefix))}
+    out["unit"] = tuple(
+        _pad_layer(c, cfg.spec(nm), cfg, new_len)
+        for c, nm in zip(cache["unit"], cfg.pattern_unit))
+    out["suffix"] = tuple(
+        _pad_layer(c, cfg.spec(nm), cfg, new_len)
+        for c, nm in zip(cache["suffix"], cfg.pattern_suffix))
+    return out
+
+
+def insert_sequence(dst: Any, src: Any, slot: int, cfg: ModelConfig) -> Any:
+    """Copy one sequence's cache (batch size 1 in src) into batch slot
+    ``slot`` of the engine cache ``dst``.  Sequence dims must already match
+    (pad first).  Works leaf-wise: batch is the first axis after any
+    leading [R]/stacking dims — identified by matching dst/src ranks."""
+    def put(d, s):
+        # batch axis = first axis where src has size 1 and shapes else match
+        axis = None
+        for i in range(d.ndim):
+            if s.shape[i] == 1 and d.shape[i] != 1:
+                axis = i
+                break
+        if axis is None:
+            return d
+        idx = [slice(None)] * d.ndim
+        start = [0] * d.ndim
+        start[axis] = slot
+        return jax.lax.dynamic_update_slice(d, s.astype(d.dtype),
+                                            tuple(start))
+    return jax.tree_util.tree_map(put, dst, src)

@@ -1,0 +1,168 @@
+"""Continuous-batching serving engine.
+
+Slot-based scheduler over a fixed decode batch: prefill admits queued
+requests into free slots (cache insertion at the slot index), every
+``step()`` advances ALL active slots one token with the single jitted
+decode function, and finished sequences free their slot immediately —
+new requests join without draining the batch (continuous batching).
+
+Prefill compiles per distinct prompt length (exact-length prefill keeps
+ring-buffer caches correct); decode compiles once.  TTFT/TPOT per request
+are recorded for the serving benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.types import ModelConfig
+from repro.launch import steps as steps_lib
+from repro.runtime.parallel import NO_PARALLEL
+from repro.serving.cache import insert_sequence, pad_cache
+from repro.serving.sampler import SampleParams, sample
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    params: SampleParams = dataclasses.field(default_factory=SampleParams)
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_submit
+
+    @property
+    def tpot(self) -> float:
+        n = max(1, len(self.output) - 1)
+        return (self.t_done - self.t_first) / n
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
+                 max_seq_len: int = 256, par=NO_PARALLEL, seed: int = 0):
+        if cfg.encdec is not None:
+            raise ValueError("engine serves decoder-only models")
+        self.cfg = cfg
+        self.params = params
+        self.par = par
+        self.max_slots = max_slots
+        self.max_seq_len = max_seq_len
+        self.fns = steps_lib.model_fns(cfg)
+        self.key = jax.random.PRNGKey(seed)
+
+        self.cache = self.fns["init_cache"](cfg, max_slots, max_seq_len)
+        self.pos = np.zeros((max_slots,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self.queue: deque[Request] = deque()
+        self._next_rid = 0
+        self._decode = jax.jit(
+            lambda p, c, t, pos: self.fns["decode"](p, c, t, pos, cfg, par))
+        self._prefill_cache: Dict[int, Callable] = {}
+        self.steps_run = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int = 32,
+               eos_id: Optional[int] = None,
+               params: SampleParams = SampleParams()) -> Request:
+        req = Request(self._next_rid, list(prompt), max_new_tokens, eos_id,
+                      params)
+        req.t_submit = time.time()
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    def _prefill_fn(self, length: int):
+        if length not in self._prefill_cache:
+            cfg, par = self.cfg, self.par
+
+            def prefill(params, tokens):
+                logits, cache, _ = self.fns["forward"](
+                    params, {"inputs": tokens}, cfg, par, mode="prefill")
+                return logits[:, -1], cache
+
+            self._prefill_cache[length] = jax.jit(prefill)
+        return self._prefill_cache[length]
+
+    def _admit(self) -> None:
+        for slot in range(self.max_slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            L = len(req.prompt)
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache = self._prefill_fn(L)(self.params, tokens)
+            cache = pad_cache(cache, self.cfg, self.max_seq_len)
+            self.cache = insert_sequence(self.cache, cache, slot, self.cfg)
+            self.key, k = jax.random.split(self.key)
+            tok = int(sample(logits, k, req.params)[0])
+            req.output.append(tok)
+            req.t_first = time.time()
+            self.pos[slot] = L
+            self.slot_req[slot] = req
+            self._maybe_finish(slot, tok)
+
+    def _maybe_finish(self, slot: int, tok: int) -> None:
+        req = self.slot_req[slot]
+        if req is None:
+            return
+        if (len(req.output) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id)):
+            req.t_done = time.time()
+            self.slot_req[slot] = None
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Admit + one decode step for all active slots.  Returns the
+        number of active slots advanced."""
+        self._admit()
+        active = [s for s in range(self.max_slots)
+                  if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        # feed each active slot its last sampled token; idle slots get 0
+        tokens = np.zeros((self.max_slots,), np.int32)
+        for s in active:
+            tokens[s] = self.slot_req[s].output[-1]
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(self.pos))
+        self.key, k = jax.random.split(self.key)
+        ks = jax.random.split(k, self.max_slots)
+        for s in active:
+            req = self.slot_req[s]
+            tok = int(sample(logits[s:s + 1], ks[s], req.params)[0])
+            req.output.append(tok)
+            self.pos[s] += 1
+            self._maybe_finish(s, tok)
+        self.steps_run += 1
+        return len(active)
+
+    def run(self, max_steps: int = 10000) -> None:
+        """Drain queue + slots."""
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.slot_req):
+                return
+            if self.step() == 0 and not self.queue:
+                return
+
+    # ------------------------------------------------------------------
+    def generate(self, prompts: List[List[int]], max_new_tokens: int = 32,
+                 params: SampleParams = SampleParams()) -> List[List[int]]:
+        reqs = [self.submit(p, max_new_tokens, params=params)
+                for p in prompts]
+        self.run()
+        return [r.output for r in reqs]

@@ -1,0 +1,34 @@
+"""Token samplers: greedy / temperature / top-k / top-p (batched)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleParams:
+    temperature: float = 0.0          # 0 => greedy
+    top_k: int = 0                    # 0 => no top-k filter
+    top_p: float = 1.0                # 1 => no nucleus filter
+
+
+def sample(logits: jax.Array, key: jax.Array,
+           params: SampleParams = SampleParams()) -> jax.Array:
+    """logits: [B, V] -> tokens [B] int32."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / params.temperature
+    if params.top_k > 0:
+        kth = jax.lax.top_k(logits, params.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    if params.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < params.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

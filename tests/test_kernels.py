@@ -1,0 +1,102 @@
+"""Pallas-kernel sweeps: shapes × dtypes, assert_allclose vs the ref.py
+pure-jnp oracles (interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+_TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("B,S,H,hd", [(1, 128, 2, 32), (2, 256, 4, 64),
+                                      (1, 512, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, S, H, hd, dtype, causal):
+    q = _rand(0, (B, S, H, hd), dtype)
+    k = _rand(1, (B, S, H, hd), dtype)
+    v = _rand(2, (B, S, H, hd), dtype)
+    o = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    r = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = _TOL[dtype]
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_softcap():
+    q = _rand(0, (2, 128, 2, 64), jnp.float32)
+    k = _rand(1, (2, 128, 2, 64), jnp.float32)
+    v = _rand(2, (2, 128, 2, 64), jnp.float32)
+    o = ops.flash_attention(q, k, v, causal=True, softcap=30.0,
+                            block_q=64, block_k=64)
+    r = ref.flash_attention_ref(q, k, v, causal=True, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,KH,G,hd", [(2, 256, 2, 2, 32),
+                                         (1, 512, 1, 4, 64),
+                                         (3, 128, 4, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, S, KH, G, hd, dtype):
+    H = KH * G
+    q = _rand(0, (B, H, hd), dtype)
+    k = _rand(1, (B, S, KH, hd), dtype)
+    v = _rand(2, (B, S, KH, hd), dtype)
+    lengths = jnp.asarray([S // 2 + 7 * i % (S // 2) + 1
+                           for i in range(B)], jnp.int32)
+    o = ops.decode_attention(q, k, v, lengths, block_s=64)
+    r = ref.decode_attention_ref(q, k, v, lengths)
+    tol = _TOL[dtype]
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,S,di,ds", [(2, 64, 32, 4), (1, 256, 128, 16),
+                                       (2, 128, 64, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_sweep(B, S, di, ds, dtype):
+    # a in (0,1) for stability, like exp(dt*A)
+    a = jax.nn.sigmoid(_rand(0, (B, S, di, ds), jnp.float32)).astype(dtype)
+    b = _rand(1, (B, S, di, ds), dtype)
+    h0 = _rand(2, (B, di, ds), jnp.float32)
+    h, hl = ops.ssm_scan(a, b, h0, chunk=32, block_d=min(di, 32))
+    rh, rhl = ref.ssm_scan_ref(a, b, h0)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(h), np.asarray(rh),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(rhl),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", [(4, 64), (2, 16, 128), (8, 3, 5, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x = _rand(0, shape, dtype)
+    scale = _rand(1, shape[-1:], jnp.float32) * 0.1
+    o = ops.rmsnorm(x, scale)
+    r = ref.rmsnorm_ref(x, scale)
+    tol = _TOL[dtype]
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_matches_model_attention_path():
+    """The kernel agrees with the model's chunked-jnp attention path."""
+    from repro.models.attention import blockwise_attention
+    q = _rand(0, (2, 128, 4, 32), jnp.float32)
+    k = _rand(1, (2, 128, 4, 32), jnp.float32)
+    v = _rand(2, (2, 128, 4, 32), jnp.float32)
+    o1 = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    o2 = blockwise_attention(q, k, v, causal=True, chunk_q=64, chunk_k=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,155 @@
+"""Multi-device equivalence + collective-schedule tests.
+
+These run in subprocesses with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(the main test process must keep seeing 1 device, per the dry-run rules).
+
+  * sharded-vs-single numerical equivalence for the MoE block and a full
+    train step (the sharding rules change nothing but placement);
+  * compiled-HLO all-reduce counts for PT vs dense TP — the paper's
+    2L -> L/D sync-point claim verified on the real compiled program.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _run(code: str) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
+    return json.loads(line)
+
+
+def test_moe_sharded_equals_single():
+    res = _run(textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.configs import reduced_config
+        from repro.models import moe as moe_lib
+        from repro.runtime.parallel import NO_PARALLEL, Parallelism, TRAIN_RULES
+
+        import dataclasses
+        cfg = reduced_config('deepseek-v3-671b')
+        # ample capacity: drops are order-dependent and would legitimately
+        # differ between the single and sharded dispatch orders
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=64.0))
+        params = moe_lib.moe_init(jax.random.PRNGKey(0), cfg, cfg.d_model)
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model))
+        y0, aux0 = moe_lib.moe_apply(params, x, cfg=cfg, par=NO_PARALLEL)
+
+        mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                             axis_types=(AxisType.Auto,)*2)
+        par = Parallelism(mesh=mesh, rules=dict(TRAIN_RULES))
+        y1, aux1 = jax.jit(lambda p, x: moe_lib.moe_apply(
+            p, x, cfg=cfg, par=par))(params, x)
+        err = float(jnp.max(jnp.abs(y1 - y0)))
+        print(json.dumps({'err': err, 'aux0': float(aux0),
+                          'aux1': float(aux1)}))
+    """))
+    assert res["err"] < 2e-4, res
+
+
+def test_train_step_sharded_equals_single():
+    res = _run(textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp
+        from jax.sharding import AxisType
+        from repro.configs import reduced_config
+        from repro.launch import steps as S
+        from repro.runtime import sharding as sh
+        from repro.data.pipeline import DataConfig, sample_batch
+
+        cfg = reduced_config('tinyllama-1.1b')
+        fns = S.model_fns(cfg)
+        params = fns['init'](jax.random.PRNGKey(0), cfg)
+        dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                          global_batch=8)
+        batch = {k: jnp.asarray(v) for k, v in sample_batch(dcfg, 0).items()}
+
+        # single device
+        par0 = S.build_parallelism(cfg, 'train', None)
+        step0, init0, _ = S.make_train_step(cfg, par0, microbatches=2)
+        p0, o0, m0 = jax.jit(step0)(params, init0(params), batch)
+
+        # 2x4 mesh
+        mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                             axis_types=(AxisType.Auto,)*2)
+        par1 = S.build_parallelism(cfg, 'train', mesh)
+        step1, init1, _ = S.make_train_step(cfg, par1, microbatches=2)
+        psh = sh.param_shardings(params, cfg, par1)
+        osh = sh.opt_state_shardings(init1(params), cfg, par1)
+        p1, o1, m1 = jax.jit(step1, in_shardings=(psh, osh, None),
+                             out_shardings=(psh, osh, None))(
+            params, init1(params), batch)
+        dl = abs(float(m0['loss']) - float(m1['loss']))
+        dp = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                       - b.astype(jnp.float32))))
+                 for a, b in zip(jax.tree_util.tree_leaves(p0),
+                                 jax.tree_util.tree_leaves(p1)))
+        print(json.dumps({'dloss': dl, 'dparams': dp}))
+    """))
+    assert res["dloss"] < 1e-4, res
+    assert res["dparams"] < 5e-3, res
+
+
+def test_pt_sync_points_in_compiled_hlo():
+    """The paper's claim, verified structurally: dense Megatron-TP fires
+    2 all-reduces per layer; PT fires L/D cross-track all-reduces."""
+    res = _run(textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp
+        from jax.sharding import AxisType
+        from repro.configs import pt_paper
+        from repro.core.track import pt_ify, pt_sync_points
+        from repro.launch import steps as S
+        from repro.runtime import sharding as sh
+        from repro.roofline import hlo as H
+
+        def collectives(cfg, mesh, par):
+            fns = S.model_fns(cfg)
+            ps = jax.eval_shape(lambda: fns['init'](jax.random.PRNGKey(0), cfg))
+            psh = sh.param_shardings(ps, cfg, par)
+            B, Sq = 8, 32
+            batch = {'inputs': jax.ShapeDtypeStruct((B, Sq), jnp.int32)}
+            bsh = sh.batch_shardings(batch, cfg, par)
+            def fwd(p, b):
+                out = fns['forward'](p, b, cfg, par, mode='train')
+                return out[0].sum()
+            comp = jax.jit(fwd, in_shardings=(psh, bsh)).lower(ps, batch).compile()
+            res = H.analyze_text(comp.as_text(), 8)
+            return res.get('all-reduce_count', 0)
+
+        L, D = 8, 4
+        dense = pt_paper.reduced_dense().replace(n_layers=L, remat=False)
+        mesh_d = jax.make_mesh((1, 8), ('data', 'model'),
+                               axis_types=(AxisType.Auto,)*2)
+        par_d = S.build_parallelism(dense, 'train', mesh_d)
+        ar_dense = collectives(dense, mesh_d, par_d)
+
+        pt = pt_ify(dense, 4, D, width_mult=16).replace(remat=False)
+        mesh_t = jax.make_mesh((2, 4), ('data', 'track'),
+                               axis_types=(AxisType.Auto,)*2)
+        par_t = S.build_parallelism(pt, 'train', mesh_t)
+        ar_pt = collectives(pt, mesh_t, par_t)
+        print(json.dumps({'dense': int(ar_dense), 'pt': int(ar_pt),
+                          'expected_pt': pt_sync_points(L, D)}))
+    """))
+    # dense: >= 2 ARs per layer (activation syncs); PT: exactly L/D
+    # cross-track fusions + 3 input/output-boundary syncs (embedding
+    # gather, logits, loss reduction) that the paper also acknowledges
+    assert res["pt"] <= res["expected_pt"] + 3, res
+    assert res["dense"] >= 2 * 8, res
+    assert res["dense"] / max(res["pt"], 1) >= 3, res

@@ -1,0 +1,94 @@
+"""Optimizers: reference-math check (AdamW), loss decrease (both),
+clipping, schedule, gradient compression error feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (adafactor_init, adafactor_update, adamw_init,
+                         adamw_update, clip_by_global_norm, warmup_cosine)
+from repro.optim.compress import topk_compress, zero_residual
+
+
+def test_adamw_matches_reference_step():
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    st = adamw_init(p)
+    lr, b1, b2, eps, wd = 0.01, 0.9, 0.95, 1e-8, 0.1
+    newp, st2 = adamw_update(g, st, p, lr, b1=b1, b2=b2, eps=eps,
+                             weight_decay=wd)
+    m = (1 - b1) * np.asarray(g["w"])
+    v = (1 - b2) * np.asarray(g["w"]) ** 2
+    mhat = m / (1 - b1)
+    vhat = v / (1 - b2)
+    ref = np.asarray(p["w"]) - lr * (mhat / (np.sqrt(vhat) + eps)
+                                     + wd * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(newp["w"]), ref, rtol=1e-6)
+    assert int(st2["step"]) == 1
+
+
+def _quadratic_losses(update_fn, init_fn, steps=60, lr=0.1):
+    target = jnp.asarray([1.0, -0.5, 2.0, 0.25])
+    params = {"w": jnp.zeros(4)}
+    st = init_fn(params)
+    losses = []
+    for _ in range(steps):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, st = update_fn(g, st, params, lr)
+        losses.append(float(loss))
+    return losses
+
+
+def test_adamw_decreases_quadratic():
+    losses = _quadratic_losses(
+        lambda g, s, p, lr: adamw_update(g, s, p, lr, weight_decay=0.0),
+        adamw_init)
+    assert losses[-1] < 0.05 * losses[2]
+
+
+def test_adafactor_decreases_quadratic():
+    losses = _quadratic_losses(adafactor_update, adafactor_init, lr=0.3)
+    assert losses[-1] < 0.2 * losses[2]
+
+
+def test_adafactor_state_is_factored():
+    p = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((64,))}
+    st = adafactor_init(p)
+    assert st["stats"]["w"]["vr"].shape == (64,)
+    assert st["stats"]["w"]["vc"].shape == (32,)
+    assert st["stats"]["b"]["v"].shape == (64,)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((9,), 4.0)}
+    gn_expected = float(jnp.sqrt(4 * 9 + 9 * 16))
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(gn), gn_expected, rtol=1e-6)
+    leaves = jax.tree_util.tree_leaves(clipped)
+    new_norm = float(jnp.sqrt(sum(jnp.sum(l ** 2) for l in leaves)))
+    np.testing.assert_allclose(new_norm, 1.0, rtol=1e-5)
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(jnp.asarray(s), peak_lr=1.0, warmup=10,
+                               total=100)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0 + 1e-6
+    assert abs(lrs[10] - 1.0) < 0.01
+    assert lrs[99] < lrs[50] < lrs[11]
+
+
+def test_topk_compress_error_feedback():
+    """sent + new_residual == grad + old_residual (nothing is lost)."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64,))}
+    r = zero_residual(g)
+    sent, r2 = topk_compress(g, r, frac=0.1)
+    np.testing.assert_allclose(
+        np.asarray(sent["w"] + r2["w"]), np.asarray(g["w"]),
+        rtol=1e-5, atol=1e-6)
+    nz = int(jnp.sum(sent["w"] != 0.0))
+    assert nz <= max(1, int(0.1 * 64)) + 1
+    # second step re-injects the residual
+    sent2, r3 = topk_compress(g, r2, frac=0.1)
+    np.testing.assert_allclose(
+        np.asarray(sent2["w"] + r3["w"]), np.asarray(g["w"] + r2["w"]),
+        rtol=1e-5, atol=1e-6)

@@ -1,0 +1,162 @@
+"""Hypothesis property tests on the system's numerical invariants."""
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.models.attention import blockwise_attention
+from repro.models.rope import apply_rope, rope_cos_sin
+from repro.models.ssm import _chunked_linear_scan
+from repro.kernels.ref import flash_attention_ref, ssm_scan_ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=20,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+@given(st.integers(1, 3), st.sampled_from([32, 64, 128]),
+       st.sampled_from([16, 32, 64]), st.integers(1, 4),
+       st.booleans())
+def test_online_softmax_matches_full(b, s, ck, h, causal):
+    """Chunked online-softmax attention == materialized softmax for any
+    chunking of the KV sequence."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, 16))
+    o = blockwise_attention(q, k, v, causal=causal, chunk_q=32, chunk_k=ck)
+    r = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=3e-5, atol=3e-5)
+
+
+@given(st.integers(0, 10_000), st.sampled_from([16, 32, 64]),
+       st.floats(1e3, 1e6))
+def test_rope_preserves_norm_and_relativity(pos, hd, theta):
+    """Rotations preserve vector norm, and q·k depends only on the
+    positional difference."""
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, hd))
+    p = jnp.asarray([[pos]], jnp.int32)
+    cos, sin = rope_cos_sin(p, hd, theta)
+    qr = apply_rope(q, cos, sin)
+    np.testing.assert_allclose(float(jnp.linalg.norm(qr)),
+                               float(jnp.linalg.norm(q)), rtol=1e-5)
+    # relativity: <R(p)q, R(p+d)k> == <R(0)q, R(d)k>.  fp32 cos/sin of
+    # large angles carries ~pos*eps radians of error on the highest-
+    # frequency component, so the tolerance scales with pos.
+    d = 17
+    cos_d, sin_d = rope_cos_sin(jnp.asarray([[pos + d]], jnp.int32), hd, theta)
+    lhs = jnp.sum(apply_rope(q, cos, sin) * apply_rope(k, cos_d, sin_d))
+    cos0, sin0 = rope_cos_sin(jnp.asarray([[0]], jnp.int32), hd, theta)
+    cosd0, sind0 = rope_cos_sin(jnp.asarray([[d]], jnp.int32), hd, theta)
+    rhs = jnp.sum(apply_rope(q, cos0, sin0) * apply_rope(k, cosd0, sind0))
+    atol = 1e-4 + 2e-7 * pos * float(jnp.linalg.norm(q) * jnp.linalg.norm(k))
+    np.testing.assert_allclose(float(lhs), float(rhs), rtol=2e-3, atol=atol)
+
+
+@given(st.integers(1, 3), st.sampled_from([8, 16, 32, 64]),
+       st.sampled_from([4, 8, 16]))
+def test_chunked_scan_invariant_to_chunk_size(b, s, chunk):
+    """h_t = a_t h_{t-1} + b_t gives identical results for any chunking."""
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(5), (b, s, 4, 2)))
+    bb = jax.random.normal(jax.random.PRNGKey(6), (b, s, 4, 2))
+    h0 = jax.random.normal(jax.random.PRNGKey(7), (b, 4, 2))
+    h1, hl1 = _chunked_linear_scan(a, bb, h0, chunk)
+    h2, hl2 = ssm_scan_ref(a, bb, h0)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hl1), np.asarray(hl2),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(2, 16), st.integers(1, 4), st.floats(1.0, 4.0))
+def test_moe_invariants(t, k, cf):
+    """Router weights: top-k normalized weights sum to ~1; capacity
+    dropping never assigns more than cap tokens per expert."""
+    from repro.common.types import ModelConfig, LayerSpec, MoEConfig
+    from repro.models import moe as moe_lib
+    E = 8
+    k = min(k, E)
+    cfg = ModelConfig(
+        name="m", family="moe", n_layers=1, d_model=16, n_heads=2,
+        n_kv_heads=1, d_ff=32, vocab_size=64, dtype="float32",
+        moe=MoEConfig(n_routed_experts=E, n_shared_experts=0, top_k=k,
+                      d_expert=8, capacity_factor=cf),
+        layer_specs={"x": LayerSpec(mixer="gqa", mlp="moe")},
+        pattern_unit=("x",))
+    params = moe_lib.moe_init(jax.random.PRNGKey(0), cfg, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (t, 16))
+    w, idx, aux = moe_lib._route(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(jnp.sum(w, -1)),
+                               np.ones(t), rtol=1e-5)
+    cap = moe_lib.capacity(t, cfg)
+    slot, keep = moe_lib._dispatch_indices(idx, E, cap)
+    counts = np.zeros(E, np.int64)
+    for ti in range(t):
+        for j in range(k):
+            if bool(keep[ti, j]):
+                counts[int(idx[ti, j])] += 1
+    assert (counts <= cap).all()
+    # slots are unique among kept assignments
+    kept_slots = np.asarray(slot)[np.asarray(keep)]
+    assert len(set(kept_slots.tolist())) == len(kept_slots)
+
+
+@given(st.integers(1, 5), st.floats(0.1, 2.0), st.integers(1, 50))
+def test_sampler_topk_support(b, temp, top_k):
+    """Sampled tokens always lie within the top-k support set."""
+    from repro.serving.sampler import SampleParams, sample
+    V = 64
+    top_k = min(top_k, V)
+    logits = jax.random.normal(jax.random.PRNGKey(b), (b, V))
+    toks = sample(logits, jax.random.PRNGKey(b + 1),
+                  SampleParams(temperature=temp, top_k=top_k))
+    top = jax.lax.top_k(logits, top_k)[1]
+    for i in range(b):
+        assert int(toks[i]) in np.asarray(top[i]).tolist()
+
+
+@given(st.sampled_from([8, 12, 16]), st.sampled_from([2, 4, 8]))
+def test_pt_sync_accounting(L, D):
+    from repro.core.track import (dense_tp_sync_points, pt_sync_points,
+                                  sync_reduction)
+    assert dense_tp_sync_points(L) == 2 * L
+    if L % D == 0:
+        assert pt_sync_points(L, D) == L // D
+        assert sync_reduction(L, D) == 2 * D
+
+
+@given(st.integers(2, 6), st.integers(6, 30))
+def test_windowed_ring_cache_decode_matches_full(w, s):
+    """Decode with a ring-buffer cache == decode with a full cache for
+    sliding-window attention."""
+    from repro.common.types import LayerSpec, ModelConfig
+    from repro.models.attention import attention_init, attention_decode
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=16,
+                      n_heads=2, n_kv_heads=1, d_ff=32, vocab_size=32,
+                      dtype="float32",
+                      layer_specs={"x": LayerSpec(mixer="gqa", mlp="none",
+                                                  window=w)},
+                      pattern_unit=("x",))
+    spec = cfg.spec("x")
+    params = attention_init(jax.random.PRNGKey(0), 16, 2, 1, 8)
+    full = (jnp.zeros((1, s + 1, 1, 8)), jnp.zeros((1, s + 1, 1, 8)))
+    ring = (jnp.zeros((1, w, 1, 8)), jnp.zeros((1, w, 1, 8)))
+    outs_f, outs_r = [], []
+    for t in range(s):
+        x = jax.random.normal(jax.random.PRNGKey(100 + t), (1, 1, 16))
+        pos = jnp.asarray([t], jnp.int32)
+        of, full = attention_decode(params, x, full, spec=spec, cfg=cfg,
+                                    pos=pos)
+        orr, ring = attention_decode(params, x, ring, spec=spec, cfg=cfg,
+                                     pos=pos)
+        outs_f.append(of)
+        outs_r.append(orr)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs_f)),
+                               np.asarray(jnp.stack(outs_r)),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,19 @@
+"""Inject the generated roofline table into EXPERIMENTS.md."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks import roofline_table as rt
+
+rt.ART = Path(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun_final")
+table = rt.roofline_table("single")
+dr = rt.dryrun_table("single")
+md = Path("EXPERIMENTS.md").read_text()
+marker = "<!-- ROOFLINE_TABLE -->"
+block = (marker + "\n\n### Dry-run (single-pod, per chip)\n\n" + dr
+         + "\n\n### Roofline terms (single-pod)\n\n" + table + "\n")
+md = md[: md.index(marker)] + block
+Path("EXPERIMENTS.md").write_text(md)
+print("EXPERIMENTS.md updated with", len(table.splitlines()) - 2, "rows")
