@@ -27,7 +27,6 @@ def table() -> list:
 
 
 def measured_engine(quick: bool = True) -> dict:
-    import time
     import jax
     import numpy as np
     from repro.configs import reduced_config
@@ -43,11 +42,12 @@ def measured_engine(quick: bool = True) -> dict:
         rng = np.random.default_rng(0)
         for _ in range(8):
             eng.submit(rng.integers(1, cfg.vocab_size, 32).tolist(), 16)
-        t0 = time.time()
         eng.run()
-        wall = time.time() - t0
-        out[name] = 8 * 16 / wall
-        print(f"measured,{name},{out[name]:.1f} tok/s")
+        m = eng.metrics.summary()
+        out[name] = m["throughput_tok_s"]
+        print(f"measured,{name},{out[name]:.1f} tok/s "
+              f"({m['output_tokens']} tokens, {eng.steps_run} decode steps, "
+              f"{len(eng.runner.prefill_shapes)} prefill variants)")
     return out
 
 

@@ -1,5 +1,6 @@
 """Serve a small PT model with batched requests through the
-continuous-batching engine, reporting per-request TTFT/TPOT.
+continuous-batching engine: bucketed prefill, device-side sampling,
+streaming token callbacks, and the engine's aggregate TTFT/TPOT metrics.
 
   PYTHONPATH=src python examples/serve_pt.py
 """
@@ -18,20 +19,33 @@ def main():
     params = fns["init"](jax.random.PRNGKey(0), cfg)
     eng = Engine(cfg, params, max_slots=4, max_seq_len=96)
 
+    streamed = {}                            # rid -> tokens seen so far
+
+    def on_token(req, tok):
+        streamed.setdefault(req.rid, []).append(tok)
+
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(10):                      # mixed prompt/output lengths
         prompt = rng.integers(1, cfg.vocab_size, 16 + 8 * (i % 3)).tolist()
         reqs.append(eng.submit(prompt, max_new_tokens=8 + 4 * (i % 2),
                                params=SampleParams(temperature=0.7,
-                                                   top_k=20)))
+                                                   top_k=20),
+                               on_token=on_token))
     eng.run()
     for r in reqs:
+        assert streamed[r.rid] == r.output   # callbacks saw every token live
         print(f"req {r.rid}: prompt {len(r.prompt):2d} tok -> "
               f"{len(r.output):2d} new | TTFT {r.ttft*1e3:7.1f} ms | "
               f"TPOT {r.tpot*1e3:6.1f} ms | {r.output[:6]}...")
+    m = eng.metrics.summary()
     print(f"engine steps: {eng.steps_run} (continuous batching across "
           f"{len(reqs)} requests on {eng.max_slots} slots)")
+    print(f"prefill compile variants: {sorted(eng.runner.prefill_shapes)} "
+          f"(buckets, not per-length)")
+    print(f"aggregate: {m['throughput_tok_s']:.1f} tok/s | "
+          f"TTFT p50 {m['ttft_ms']['p50']:.1f} ms | "
+          f"TPOT p50 {m['tpot_ms']['p50']:.1f} ms")
 
 
 if __name__ == "__main__":

@@ -194,12 +194,13 @@ def _spread(x: jax.Array, cfg: ModelConfig, par: Parallelism) -> jax.Array:
 
 
 def _track_layers(params_block, h, *, cfg, spec, mode, positions, pos,
-                  caches, par):
+                  caches, par, lengths=None):
     """Apply one layer per track (vmapped).  params leaves [n, ...];
     h [n, B, S, d]; caches leaves [n, ...] or None."""
     def one(p, x, c):
         return layer_apply(p, x, cfg=cfg, spec=spec, mode=mode,
-                           positions=positions, pos=pos, cache=c, par=par)
+                           positions=positions, pos=pos, cache=c, par=par,
+                           lengths=lengths)
 
     if caches is None:
         out, cache, aux = jax.vmap(lambda p, x: one(p, x, None))(
@@ -223,6 +224,7 @@ def pt_forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
     positions = batch.get("positions")
     if positions is None:
         positions = rope_lib.positions_default(B, S)
+    lengths = batch.get("lengths") if mode == "prefill" else None
     x = _embed(params, inputs, cfg, positions, par)          # [B,S,d_t]
     want_cache = mode == "prefill"
     R, rem = _block_counts(cfg)
@@ -239,7 +241,8 @@ def pt_forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
                 pj = jax.tree_util.tree_map(lambda l: l[j], pblock)
                 hh, c, aux = _track_layers(pj, hh, cfg=cfg, spec=spec,
                                            mode=mode, positions=positions,
-                                           pos=None, caches=None, par=par)
+                                           pos=None, caches=None, par=par,
+                                           lengths=lengths)
                 auxc = auxc + aux
                 cs.append(c)
             hf = _fuse(hh, cfg, par)                          # 1 sync / block
@@ -260,7 +263,7 @@ def pt_forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
             pi = jax.tree_util.tree_map(lambda l: l[i], params["tail"])
             ht, c, aux = _track_layers(pi, ht, cfg=cfg, spec=spec, mode=mode,
                                        positions=positions, pos=None,
-                                       caches=None, par=par)
+                                       caches=None, par=par, lengths=lengths)
             aux_total += aux
             tail_caches.append(c)
         h = _fuse(ht, cfg, par) if pt.fuse_final else jnp.mean(ht, axis=0)

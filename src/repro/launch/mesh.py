@@ -10,15 +10,9 @@ device state (the dry-run sets XLA_FLAGS *before* any jax import).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from jax.sharding import Mesh
 
-import jax
-from jax.sharding import AxisType, Mesh
-
-
-def _mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+from repro.common.compat import make_mesh as _mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -31,6 +31,8 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-budget", type=int, default=4096,
+                    help="max padded prefill tokens admitted per step")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -42,31 +44,30 @@ def main() -> None:
         print(f"[serve] loaded params from {args.ckpt_dir}")
 
     max_seq = args.input_len + args.output_len + 8
-    eng = Engine(cfg, params, max_slots=args.slots, max_seq_len=max_seq)
+    eng = Engine(cfg, params, max_slots=args.slots, max_seq_len=max_seq,
+                 max_waiting_prefill_tokens=args.prefill_budget)
     rng = np.random.default_rng(args.seed)
     sp = SampleParams(temperature=args.temperature)
 
-    reqs = []
     t0 = time.time()
     for _ in range(args.requests):
         prompt = rng.integers(1, cfg.vocab_size,
                               size=(args.input_len,)).tolist()
-        reqs.append(eng.submit(prompt, args.output_len, params=sp))
+        eng.submit(prompt, args.output_len, params=sp)
     eng.run()
     wall = time.time() - t0
 
-    n_tokens = sum(len(r.output) for r in reqs)
-    ttfts = [r.ttft * 1e3 for r in reqs]
-    tpots = [r.tpot * 1e3 for r in reqs]
+    m = eng.metrics.summary()
     print(f"[serve] {cfg.name}: {args.requests} reqs x "
           f"({args.input_len} in / {args.output_len} out), "
           f"slots={args.slots}")
-    print(f"[serve] throughput {n_tokens / wall:9.1f} tok/s   "
-          f"wall {wall:.2f}s   engine steps {eng.steps_run}")
-    print(f"[serve] TTFT ms: p50 {np.percentile(ttfts, 50):8.1f}  "
-          f"p99 {np.percentile(ttfts, 99):8.1f}")
-    print(f"[serve] TPOT ms: p50 {np.percentile(tpots, 50):8.1f}  "
-          f"p99 {np.percentile(tpots, 99):8.1f}")
+    print(f"[serve] throughput {m['throughput_tok_s']:9.1f} tok/s   "
+          f"wall {wall:.2f}s   engine steps {eng.steps_run}   "
+          f"prefill variants {len(eng.runner.prefill_shapes)}")
+    print(f"[serve] TTFT ms: p50 {m['ttft_ms']['p50']:8.1f}  "
+          f"p90 {m['ttft_ms']['p90']:8.1f}  p99 {m['ttft_ms']['p99']:8.1f}")
+    print(f"[serve] TPOT ms: p50 {m['tpot_ms']['p50']:8.1f}  "
+          f"p90 {m['tpot_ms']['p90']:8.1f}  p99 {m['tpot_ms']['p99']:8.1f}")
 
 
 if __name__ == "__main__":

@@ -204,11 +204,18 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def attention_apply(params, x: jax.Array, *, spec: LayerSpec,
                     cfg: ModelConfig, positions: jax.Array,
                     par: Parallelism = NO_PARALLEL,
-                    return_cache: bool = False):
+                    return_cache: bool = False,
+                    lengths: Optional[jax.Array] = None):
     """Causal self-attention over x: [B, S, d].  Returns (out, cache|None).
 
     cache (when requested) is (k, v) with RoPE applied; for windowed layers
     it is a ring buffer of size W = spec.window, else [B, S, KH, hd].
+
+    ``lengths`` [B] gives per-row true prompt lengths when x is a
+    right-padded (bucketed) prefill batch.  Causality already keeps padded
+    K positions out of every real query row, so the attention math needs
+    no extra mask — but ring-buffer caches must be built from the *true*
+    last-W positions per row, not the padded tail.
     """
     B, S, _ = x.shape
     q, k, v = _project_qkv(params, x, spec, cfg, positions, par)
@@ -229,7 +236,12 @@ def attention_apply(params, x: jax.Array, *, spec: LayerSpec,
     cache = None
     if return_cache:
         if spec.window is not None and spec.window < S:
-            cache = (_to_ring(k, S, spec.window), _to_ring(v, S, spec.window))
+            if lengths is None:
+                cache = (_to_ring(k, S, spec.window),
+                         _to_ring(v, S, spec.window))
+            else:
+                cache = (_to_ring_per_row(k, lengths, spec.window),
+                         _to_ring_per_row(v, lengths, spec.window))
         else:
             cache = (k, v)
     return out, cache
@@ -242,6 +254,22 @@ def _to_ring(k: jax.Array, s: int, w: int) -> jax.Array:
     valid = src >= 0
     ring = jnp.take(k, jnp.clip(src, 0, s - 1), axis=1)
     return jnp.where(valid[None, :, None, None], ring, 0)
+
+
+def _to_ring_per_row(k: jax.Array, lengths: jax.Array, w: int) -> jax.Array:
+    """Per-row ring build for right-padded prefill batches.
+
+    Row b's true sequence is k[b, :lengths[b]]; slot j of the ring holds
+    the latest real position p <= lengths[b]-1 with p % w == j, so padded
+    positions never enter the ring and real in-window positions are never
+    evicted by the padding tail."""
+    last = lengths.astype(jnp.int32)[:, None] - 1            # [B,1]
+    j = jnp.arange(w, dtype=jnp.int32)[None, :]              # [1,w]
+    src = last - ((last - j) % w)                            # [B,w]
+    valid = src >= 0
+    idx = jnp.clip(src, 0, k.shape[1] - 1)[..., None, None]  # [B,w,1,1]
+    ring = jnp.take_along_axis(k, idx, axis=1)
+    return jnp.where(valid[..., None, None], ring, 0)
 
 
 # ---------------------------------------------------------------------------

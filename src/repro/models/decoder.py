@@ -166,12 +166,15 @@ def encode(params, enc_inputs: jax.Array, cfg: ModelConfig,
 def lm_forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
                par: Parallelism = NO_PARALLEL, mode: str = "train"):
     """batch: {'inputs': [B,S] int32 | [B,S,d] float, 'positions'?: [B,S] or
-    [3,B,S] (mrope), 'enc_inputs'?: [B,S_enc,d]}."""
+    [3,B,S] (mrope), 'enc_inputs'?: [B,S_enc,d], 'lengths'?: [B] int32 —
+    per-row true lengths when the batch is right-padded to a prefill
+    bucket (serving); see layer_apply."""
     inputs = batch["inputs"]
     B, S = inputs.shape[:2]
     positions = batch.get("positions")
     if positions is None:
         positions = rope_lib.positions_default(B, S)
+    lengths = batch.get("lengths") if mode == "prefill" else None
     enc_states = None
     if cfg.encdec is not None:
         enc_states = encode(params, batch["enc_inputs"], cfg, par)
@@ -184,7 +187,7 @@ def lm_forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
         h, c, aux = layer_apply(params["prefix"][i], h, cfg=cfg,
                                 spec=cfg.spec(nm), mode=mode,
                                 positions=positions, enc_states=enc_states,
-                                par=par)
+                                par=par, lengths=lengths)
         aux_total += aux
         caches_prefix.append(c)
 
@@ -197,7 +200,8 @@ def lm_forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
                 x, c, aux = layer_apply(lps[j], x, cfg=cfg,
                                         spec=cfg.spec(nm), mode=mode,
                                         positions=positions,
-                                        enc_states=enc_states, par=par)
+                                        enc_states=enc_states, par=par,
+                                        lengths=lengths)
                 auxc = auxc + aux
                 cs.append(c)
             return (x, auxc), (tuple(cs) if want_cache else None)
@@ -212,7 +216,7 @@ def lm_forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
         h, c, aux = layer_apply(params["suffix"][i], h, cfg=cfg,
                                 spec=cfg.spec(nm), mode=mode,
                                 positions=positions, enc_states=enc_states,
-                                par=par)
+                                par=par, lengths=lengths)
         aux_total += aux
         caches_suffix.append(c)
 

@@ -63,7 +63,8 @@ def _norm(cfg, params, name, x):
     return apply_norm(cfg.norm, params[name], x, eps=cfg.norm_eps)
 
 
-def _mixer(params, h, *, cfg, spec, mode, positions, pos, cache, par):
+def _mixer(params, h, *, cfg, spec, mode, positions, pos, cache, par,
+           lengths=None):
     """Dispatch the sequence mixer. Returns (out, new_cache)."""
     if spec.mixer == "gqa":
         if mode == "decode":
@@ -71,7 +72,8 @@ def _mixer(params, h, *, cfg, spec, mode, positions, pos, cache, par):
                                          cfg=cfg, pos=pos, par=par)
         return attn.attention_apply(params, h, spec=spec, cfg=cfg,
                                     positions=positions, par=par,
-                                    return_cache=(mode == "prefill"))
+                                    return_cache=(mode == "prefill"),
+                                    lengths=lengths)
     if spec.mixer == "mla":
         if mode == "decode":
             return mla_lib.mla_decode(params, h, cache, spec=spec, cfg=cfg,
@@ -98,13 +100,17 @@ def layer_apply(params, x: jax.Array, *, cfg: ModelConfig, spec: LayerSpec,
                 pos: Optional[jax.Array] = None,
                 cache: Any = None,
                 enc_states: Any = None,
-                par: Parallelism = NO_PARALLEL):
+                par: Parallelism = NO_PARALLEL,
+                lengths: Optional[jax.Array] = None):
     """One transformer layer. Returns (x, cache, aux).
 
     For cross-attention layers the cache is (self_cache, enc_kv): the
     projected encoder K/V is computed once at prefill and carried in the
     cache; `enc_states` (raw encoder output) is only needed in
     train/prefill modes.
+
+    ``lengths`` [B] marks per-row true lengths of a right-padded prefill
+    batch (bucketed serving); only ring-buffer cache construction uses it.
     """
     aux = jnp.zeros((), jnp.float32)
     self_cache, enc_kv = (cache if (spec.cross_attn and cache is not None)
@@ -113,7 +119,7 @@ def layer_apply(params, x: jax.Array, *, cfg: ModelConfig, spec: LayerSpec,
     h = _norm(cfg, params, "ln1", x)
     h, new_cache = _mixer(params["mixer"], h, cfg=cfg, spec=spec, mode=mode,
                           positions=positions, pos=pos, cache=self_cache,
-                          par=par)
+                          par=par, lengths=lengths)
     if cfg.post_norm:
         h = _norm(cfg, params, "ln1_post", h)
     x = x + h

@@ -15,7 +15,9 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.common.compat import mesh_from_devices
 
 
 def plan_mesh(n_devices: int, *, model_parallel: int,
@@ -38,8 +40,7 @@ def plan_mesh(n_devices: int, *, model_parallel: int,
 def build_mesh(devices: Sequence, data: int, model: int) -> Mesh:
     import numpy as np
     dev = np.asarray(devices[: data * model]).reshape(data, model)
-    return Mesh(dev, ("data", "model"),
-                axis_types=(AxisType.Auto, AxisType.Auto))
+    return mesh_from_devices(dev, ("data", "model"))
 
 
 @dataclass

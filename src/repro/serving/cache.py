@@ -1,14 +1,84 @@
-"""KV-cache utilities for serving: padding prefill caches to engine
-capacity and per-slot insertion for continuous batching."""
+"""KV-cache utilities for serving.
+
+The engine cache is whatever pytree the architecture's ``init_cache``
+builds: dense decoders nest per-layer tuples under prefix/unit/suffix,
+PT models stack [R, D, n_tracks, ...] leading dims, rings/SSM states have
+no sequence axis at all.  Rather than hard-coding each layout, the
+utilities here discover structure *by probing*: ``batch_axes`` runs
+``init_cache`` under ``jax.eval_shape`` at two batch sizes and diffs leaf
+shapes, which pins down the batch axis of every leaf regardless of how
+many stacking dims sit in front of it.
+
+  batch_axes(init_cache_fn, cfg)       -> pytree of per-leaf batch axis
+  insert_rows(dst, src, axes, slots)   -> batched slot insertion, padding
+      every non-batch dim of src up to dst (bucketed prefill caches are
+      shorter than engine capacity; rings shorter than the window pad to
+      it, which is layout-exact for positions < window)
+
+``pad_cache`` / ``insert_sequence`` are the original single-sequence
+helpers, kept for the dense smoke tests.
+"""
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Callable, Dict, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.common.types import LayerSpec, ModelConfig
 
+
+# ---------------------------------------------------------------------------
+# structure discovery + batched insertion (the engine path)
+# ---------------------------------------------------------------------------
+
+def batch_axes(init_cache_fn: Callable, cfg: ModelConfig) -> Any:
+    """Per-leaf batch-axis index of the cache pytree, found by diffing
+    ``eval_shape`` at two batch sizes (never allocates)."""
+    a = jax.eval_shape(lambda: init_cache_fn(cfg, 2, 8))
+    b = jax.eval_shape(lambda: init_cache_fn(cfg, 3, 8))
+
+    def diff(x, y):
+        axes = [i for i, (p, q) in enumerate(zip(x.shape, y.shape)) if p != q]
+        if len(axes) != 1:
+            raise ValueError(f"ambiguous batch axis for leaf {x.shape}")
+        return axes[0]
+
+    return jax.tree_util.tree_map(diff, a, b)
+
+
+def insert_rows(dst: Any, src: Any, axes: Any, slots: Sequence) -> Any:
+    """Write the rows of ``src`` (batch size n on each leaf's batch axis)
+    into batch slots ``slots`` (length n) of the engine cache ``dst``.
+
+    Every non-batch dim of src that is shorter than dst is zero-padded up
+    to dst first: a bucketed prefill cache covers positions [0, bucket)
+    of a [0, capacity) cache, and a short full-layout cache padded to a
+    ring of size W coincides with ring order for all positions < W.
+    Traceable (slots may be a traced [n] array), so the engine jits one
+    insertion program per (n, bucket) shape.
+    """
+    n = len(slots) if hasattr(slots, "__len__") else slots.shape[0]
+
+    def put(d, s, ax):
+        pad = [(0, 0)] * s.ndim
+        for i in range(s.ndim):
+            if i != ax and s.shape[i] < d.shape[i]:
+                pad[i] = (0, d.shape[i] - s.shape[i])
+        s = jnp.pad(s.astype(d.dtype), pad)
+        for r in range(n):
+            row = jax.lax.dynamic_slice_in_dim(s, r, 1, axis=ax)
+            start = [0] * d.ndim
+            start[ax] = slots[r]
+            d = jax.lax.dynamic_update_slice(d, row, tuple(start))
+        return d
+
+    return jax.tree_util.tree_map(put, dst, src, axes)
+
+
+# ---------------------------------------------------------------------------
+# single-sequence helpers (dense layouts only; see tests/test_arch_smoke)
+# ---------------------------------------------------------------------------
 
 def _pad_seq(x: jax.Array, axis: int, new_len: int) -> jax.Array:
     cur = x.shape[axis]
@@ -41,7 +111,7 @@ def _pad_layer(cache: Any, spec: LayerSpec, cfg: ModelConfig,
 
 def pad_cache(cache: Dict[str, Any], cfg: ModelConfig,
               new_len: int) -> Dict[str, Any]:
-    """Pad a prefill cache out to capacity ``new_len`` for decode."""
+    """Pad a dense-decoder prefill cache out to capacity ``new_len``."""
     out = {"prefix": tuple(
         _pad_layer(c, cfg.spec(nm), cfg, new_len)
         for c, nm in zip(cache["prefix"], cfg.pattern_prefix))}

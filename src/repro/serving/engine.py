@@ -1,21 +1,44 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine: Scheduler + ModelRunner.
 
-Slot-based scheduler over a fixed decode batch: prefill admits queued
-requests into free slots (cache insertion at the slot index), every
-``step()`` advances ALL active slots one token with the single jitted
-decode function, and finished sequences free their slot immediately —
-new requests join without draining the batch (continuous batching).
+The engine is split along the line every production serving stack draws
+(vLLM, TensorRT-LLM, Kraken's runtime):
 
-Prefill compiles per distinct prompt length (exact-length prefill keeps
-ring-buffer caches correct); decode compiles once.  TTFT/TPOT per request
-are recorded for the serving benchmarks.
+  Scheduler   — pure-Python admission policy.  FCFS queue with a
+                max-waiting-prefill-tokens budget per admission round,
+                request lifecycle QUEUED -> PREFILL -> DECODE -> DONE,
+                slot table for the fixed decode batch.
+  ModelRunner — everything that touches the device.  Owns the KV cache,
+                the jitted prefill / decode programs and the cache
+                insertion program; knows nothing about queues.
+  Engine      — the glue loop (submit / step / run / generate) plus
+                streaming callbacks and aggregate serving metrics.
+
+Throughput/compile-stability properties (the PR's point):
+
+  * Bucketed prefill: prompts are right-padded to power-of-two buckets,
+    so the engine compiles O(log max_len) prefill variants instead of one
+    per distinct prompt length.  Causality keeps padded keys invisible to
+    real query rows; per-row true lengths are threaded into the forward
+    pass so ring-buffer (sliding-window) caches are built from the real
+    last-W positions.  Architectures with recurrent state (mamba /
+    rg-lru) prefill at exact length — padding would corrupt the carried
+    state — and the bucket function degrades to identity for them.
+  * Batched prefill admission: all requests admitted in one round that
+    share a bucket run as ONE batched prefill call and are scattered
+    into their slots by a single jitted insertion program.
+  * Device-side batched sampling: the decode step jits model + sampler +
+    done-flag computation into one program with per-slot sampling params
+    as traced arrays.  The host sees exactly ONE transfer per decode
+    step — a packed [2, slots] int32 array of (token, done) — instead of
+    a per-slot ``int(sample(...))`` round-trip.
 """
 from __future__ import annotations
 
 import dataclasses
+import enum
 import time
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,8 +47,17 @@ import numpy as np
 from repro.common.types import ModelConfig
 from repro.launch import steps as steps_lib
 from repro.runtime.parallel import NO_PARALLEL
-from repro.serving.cache import insert_sequence, pad_cache
-from repro.serving.sampler import SampleParams, sample
+from repro.serving.cache import batch_axes, insert_rows
+from repro.serving.sampler import SampleParams, sample_batched, stack_params
+
+RECURRENT_MIXERS = ("mamba", "rglru")
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
 
 
 @dataclasses.dataclass
@@ -35,8 +67,11 @@ class Request:
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
     params: SampleParams = dataclasses.field(default_factory=SampleParams)
+    on_token: Optional[Callable[["Request", int], None]] = None
     # filled by the engine
+    state: RequestState = RequestState.QUEUED
     output: List[int] = dataclasses.field(default_factory=list)
+    truncated: bool = False            # max_new_tokens clamped to capacity
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
@@ -51,9 +86,126 @@ class Request:
         return (self.t_done - self.t_first) / n
 
 
-class Engine:
-    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
-                 max_seq_len: int = 256, par=NO_PARALLEL, seed: int = 0):
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+class EngineMetrics:
+    """Aggregate serving metrics over completed requests."""
+
+    def __init__(self) -> None:
+        self.ttfts: List[float] = []
+        self.tpots: List[float] = []
+        self.prompt_tokens = 0
+        self.output_tokens = 0
+        self.t_start: Optional[float] = None
+        self.t_last: Optional[float] = None
+
+    def start(self) -> None:
+        if self.t_start is None:
+            self.t_start = time.time()
+
+    def observe(self, req: Request) -> None:
+        self.ttfts.append(req.ttft)
+        self.tpots.append(req.tpot)
+        self.prompt_tokens += len(req.prompt)
+        self.output_tokens += len(req.output)
+        self.t_last = req.t_done
+
+    def summary(self) -> Dict[str, Any]:
+        """TTFT/TPOT percentiles (ms) + output-token throughput."""
+        def pct(xs: List[float]) -> Dict[str, float]:
+            if not xs:
+                return {"p50": 0.0, "p90": 0.0, "p99": 0.0}
+            a = np.asarray(xs) * 1e3
+            return {"p50": float(np.percentile(a, 50)),
+                    "p90": float(np.percentile(a, 90)),
+                    "p99": float(np.percentile(a, 99))}
+
+        elapsed = ((self.t_last or time.time()) - self.t_start
+                   if self.t_start is not None else 0.0)
+        return {
+            "requests": len(self.ttfts),
+            "prompt_tokens": self.prompt_tokens,
+            "output_tokens": self.output_tokens,
+            "elapsed_s": elapsed,
+            "throughput_tok_s": (self.output_tokens / elapsed
+                                 if elapsed > 0 else 0.0),
+            "ttft_ms": pct(self.ttfts),
+            "tpot_ms": pct(self.tpots),
+        }
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+class Scheduler:
+    """FCFS admission over a fixed slot table, budgeted by prefill tokens.
+
+    ``plan_admission`` pops queued requests in order while free slots and
+    the per-round padded-token budget last, grouping the admitted set by
+    prefill bucket so each group runs as one batched prefill.  Strict
+    FCFS: the first request that does not fit the remaining budget stops
+    admission for the round (no skipping ahead), except that one
+    oversized request is always admitted alone rather than livelocking.
+    """
+
+    def __init__(self, max_slots: int, bucket_fn: Callable[[int], int],
+                 max_waiting_prefill_tokens: int = 4096):
+        self.max_slots = max_slots
+        self.bucket_fn = bucket_fn
+        self.max_waiting_prefill_tokens = max_waiting_prefill_tokens
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * max_slots
+
+    # -- queue / slot bookkeeping --------------------------------------
+    def submit(self, req: Request) -> None:
+        req.state = RequestState.QUEUED
+        self.queue.append(req)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def active_slots(self) -> List[Tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    def release(self, slot: int) -> None:
+        self.slots[slot] = None
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)
+
+    # -- admission ------------------------------------------------------
+    def plan_admission(self) -> List[Tuple[int, List[Tuple[int, Request]]]]:
+        """[(bucket, [(slot, request), ...]), ...] for this round."""
+        free = self.free_slots()
+        budget = self.max_waiting_prefill_tokens
+        groups: Dict[int, List[Tuple[int, Request]]] = {}
+        admitted = 0
+        while free and self.queue:
+            bucket = self.bucket_fn(len(self.queue[0].prompt))
+            if bucket > budget and admitted:
+                break                      # strict FCFS: wait, don't skip
+            req = self.queue.popleft()
+            slot = free.pop(0)
+            self.slots[slot] = req
+            req.state = RequestState.PREFILL
+            groups.setdefault(bucket, []).append((slot, req))
+            budget -= bucket
+            admitted += 1
+        return sorted(groups.items())
+
+
+# ---------------------------------------------------------------------------
+# model runner
+# ---------------------------------------------------------------------------
+
+class ModelRunner:
+    """Device side: cache + jitted prefill / decode / insert programs."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
+                 max_seq_len: int, par=NO_PARALLEL, min_bucket: int = 16):
         if cfg.encdec is not None:
             raise ValueError("engine serves decoder-only models")
         self.cfg = cfg
@@ -61,102 +213,224 @@ class Engine:
         self.par = par
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
+        self.min_bucket = min_bucket
         self.fns = steps_lib.model_fns(cfg)
-        self.key = jax.random.PRNGKey(seed)
-
         self.cache = self.fns["init_cache"](cfg, max_slots, max_seq_len)
-        self.pos = np.zeros((max_slots,), np.int32)
-        self.slot_req: List[Optional[Request]] = [None] * max_slots
-        self.queue: deque[Request] = deque()
+        self._axes = batch_axes(self.fns["init_cache"], cfg)
+        # padded tokens corrupt length-sensitive layers: recurrent state
+        # (conv window / SSM state) carries them forward, and capacity-
+        # based MoE routing lets them consume expert-capacity slots that
+        # belong to real tokens — those architectures prefill at exact
+        # prompt length instead of a bucket
+        self.exact_prefill = any(
+            cfg.spec(nm).mixer in RECURRENT_MIXERS
+            or cfg.spec(nm).mlp == "moe" for nm in cfg.layer_names)
+
+        # the cache argument is dead after each call (self.cache is
+        # rebound to the result), so donate it — on GPU/TPU the update
+        # happens in place instead of copying the full KV cache per
+        # token (CPU ignores donation with a warning)
+        self._prefill = jax.jit(self._prefill_impl)
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self.prefill_shapes: set = set()   # observed (n_reqs, bucket)
+        self.decode_transfers = 0          # host transfers in decode steps
+
+    # -- bucket policy --------------------------------------------------
+    def bucket_for(self, length: int) -> int:
+        """Power-of-two padding bucket (identity for recurrent archs)."""
+        if length > self.max_seq_len:
+            raise ValueError(f"prompt length {length} exceeds engine "
+                             f"capacity {self.max_seq_len}")
+        if self.exact_prefill:
+            return length
+        b = self.min_bucket
+        while b < length:
+            b *= 2
+        return min(b, self.max_seq_len)
+
+    # -- jitted programs -------------------------------------------------
+    def _prefill_impl(self, params, tokens, lengths, key, temps, tks, tps):
+        """tokens [n, bucket] right-padded; lengths [n] true lengths.
+        Returns (first sampled token [n], prefill cache)."""
+        batch = {"inputs": tokens, "lengths": lengths}
+        logits, cache, _ = self.fns["forward"](params, batch, self.cfg,
+                                               self.par, mode="prefill")
+        last = jnp.take_along_axis(
+            logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
+        toks = sample_batched(last, key, temps, tks, tps)
+        return toks, cache
+
+    def _insert_impl(self, dst, src, slots):
+        return insert_rows(dst, src, self._axes, slots)
+
+    def _decode_impl(self, params, cache, toks, pos, active, key,
+                     temps, tks, tps, eos, remaining):
+        """One decode step for all slots + sampling + done flags, all on
+        device.  Returns (cache, packed [2, slots] int32 = (token, done))."""
+        logits, cache = self.fns["decode"](params, cache, toks, pos,
+                                           self.cfg, self.par)
+        new = sample_batched(logits, key, temps, tks, tps)
+        new = jnp.where(active, new, 0)
+        done = active & ((remaining <= 1)
+                         | ((eos >= 0) & (new == eos)))
+        return cache, jnp.stack([new, done.astype(jnp.int32)])
+
+    # -- host-facing ops -------------------------------------------------
+    def prefill(self, prompts: Sequence[Sequence[int]], bucket: int,
+                slots: Sequence[int], key,
+                params_list: Sequence[SampleParams]) -> np.ndarray:
+        """Batched prefill of ``prompts`` into cache ``slots``.  One
+        jitted forward per (n, bucket) shape; returns first tokens [n]."""
+        n = len(prompts)
+        tokens = np.zeros((n, bucket), np.int32)
+        lengths = np.empty((n,), np.int32)
+        for i, p in enumerate(prompts):
+            tokens[i, :len(p)] = p
+            lengths[i] = len(p)
+        temps, tks, tps = stack_params(params_list)
+        toks, cache = self._prefill(self.params, jnp.asarray(tokens),
+                                    jnp.asarray(lengths), key,
+                                    jnp.asarray(temps), jnp.asarray(tks),
+                                    jnp.asarray(tps))
+        self.cache = self._insert(self.cache, cache,
+                                  jnp.asarray(slots, jnp.int32))
+        self.prefill_shapes.add((n, bucket))
+        return np.asarray(toks)
+
+    def decode(self, toks, pos, active, key, temps, tks, tps, eos,
+               remaining) -> Tuple[np.ndarray, np.ndarray]:
+        """One decode step.  Exactly one host transfer: the packed
+        (token, done) array."""
+        self.cache, packed = self._decode(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(active), key, jnp.asarray(temps), jnp.asarray(tks),
+            jnp.asarray(tps), jnp.asarray(eos), jnp.asarray(remaining))
+        host = np.asarray(packed)                  # THE transfer
+        self.decode_transfers += 1
+        return host[0], host[1].astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
+                 max_seq_len: int = 256, par=NO_PARALLEL, seed: int = 0,
+                 max_waiting_prefill_tokens: int = 4096,
+                 min_bucket: int = 16):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_seq_len = max_seq_len
+        self.runner = ModelRunner(cfg, params, max_slots=max_slots,
+                                  max_seq_len=max_seq_len, par=par,
+                                  min_bucket=min_bucket)
+        self.scheduler = Scheduler(max_slots, self.runner.bucket_for,
+                                   max_waiting_prefill_tokens)
+        self.metrics = EngineMetrics()
+        self.key = jax.random.PRNGKey(seed)
         self._next_rid = 0
-        self._decode = jax.jit(
-            lambda p, c, t, pos: self.fns["decode"](p, c, t, pos, cfg, par))
-        self._prefill_cache: Dict[int, Callable] = {}
         self.steps_run = 0
+
+        # per-slot device-step inputs, updated on admit/finish
+        B = max_slots
+        self._tok = np.zeros((B,), np.int32)
+        self._pos = np.zeros((B,), np.int32)
+        self._active = np.zeros((B,), bool)
+        self._temps = np.zeros((B,), np.float32)
+        self._topks = np.zeros((B,), np.int32)
+        self._topps = np.ones((B,), np.float32)
+        self._eos = np.full((B,), -1, np.int32)
+        self._remaining = np.zeros((B,), np.int32)
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 32,
                eos_id: Optional[int] = None,
-               params: SampleParams = SampleParams()) -> Request:
+               params: SampleParams = SampleParams(),
+               on_token: Optional[Callable[[Request, int], None]] = None
+               ) -> Request:
         req = Request(self._next_rid, list(prompt), max_new_tokens, eos_id,
-                      params)
+                      params, on_token)
+        if not req.prompt:
+            raise ValueError("empty prompt")
+        self.runner.bucket_for(len(req.prompt))    # validates length
         req.t_submit = time.time()
         self._next_rid += 1
-        self.queue.append(req)
+        self.metrics.start()
+        self.scheduler.submit(req)
         return req
 
-    def _prefill_fn(self, length: int):
-        if length not in self._prefill_cache:
-            cfg, par = self.cfg, self.par
+    # ------------------------------------------------------------------
+    def _emit(self, slot: int, req: Request, tok: int) -> None:
+        req.output.append(tok)
+        if req.on_token is not None:
+            req.on_token(req, tok)
 
-            def prefill(params, tokens):
-                logits, cache, _ = self.fns["forward"](
-                    params, {"inputs": tokens}, cfg, par, mode="prefill")
-                return logits[:, -1], cache
-
-            self._prefill_cache[length] = jax.jit(prefill)
-        return self._prefill_cache[length]
+    def _finish(self, slot: int, req: Request) -> None:
+        req.state = RequestState.DONE
+        req.t_done = time.time()
+        self._active[slot] = False
+        self.scheduler.release(slot)
+        self.metrics.observe(req)
 
     def _admit(self) -> None:
-        for slot in range(self.max_slots):
-            if self.slot_req[slot] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            L = len(req.prompt)
-            tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, cache = self._prefill_fn(L)(self.params, tokens)
-            cache = pad_cache(cache, self.cfg, self.max_seq_len)
-            self.cache = insert_sequence(self.cache, cache, slot, self.cfg)
+        for bucket, group in self.scheduler.plan_admission():
+            slots = [s for s, _ in group]
+            reqs = [r for _, r in group]
             self.key, k = jax.random.split(self.key)
-            tok = int(sample(logits, k, req.params)[0])
-            req.output.append(tok)
-            req.t_first = time.time()
-            self.pos[slot] = L
-            self.slot_req[slot] = req
-            self._maybe_finish(slot, tok)
-
-    def _maybe_finish(self, slot: int, tok: int) -> None:
-        req = self.slot_req[slot]
-        if req is None:
-            return
-        if (len(req.output) >= req.max_new_tokens
-                or (req.eos_id is not None and tok == req.eos_id)):
-            req.t_done = time.time()
-            self.slot_req[slot] = None
+            toks = self.runner.prefill([r.prompt for r in reqs], bucket,
+                                       slots, k, [r.params for r in reqs])
+            now = time.time()
+            for slot, req, tok in zip(slots, reqs, toks):
+                req.t_first = now
+                req.state = RequestState.DECODE
+                L = len(req.prompt)
+                # positions L .. L+new-1 must stay inside the cache
+                cap = self.max_seq_len - L + 1
+                req.truncated = req.max_new_tokens > cap
+                self._tok[slot] = tok
+                self._pos[slot] = L
+                self._active[slot] = True
+                self._temps[slot] = req.params.temperature
+                self._topks[slot] = req.params.top_k
+                self._topps[slot] = req.params.top_p
+                self._eos[slot] = -1 if req.eos_id is None else req.eos_id
+                self._remaining[slot] = min(req.max_new_tokens, cap) - 1
+                self._emit(slot, req, int(tok))
+                if (self._remaining[slot] <= 0
+                        or (req.eos_id is not None and tok == req.eos_id)):
+                    self._finish(slot, req)
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """Admit + one decode step for all active slots.  Returns the
-        number of active slots advanced."""
+        """Admit queued requests + one decode step for all active slots.
+        Returns the number of slots advanced."""
         self._admit()
-        active = [s for s in range(self.max_slots)
-                  if self.slot_req[s] is not None]
+        active = self.scheduler.active_slots()
         if not active:
             return 0
-        # feed each active slot its last sampled token; idle slots get 0
-        tokens = np.zeros((self.max_slots,), np.int32)
-        for s in active:
-            tokens[s] = self.slot_req[s].output[-1]
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(self.pos))
         self.key, k = jax.random.split(self.key)
-        ks = jax.random.split(k, self.max_slots)
-        for s in active:
-            req = self.slot_req[s]
-            tok = int(sample(logits[s:s + 1], ks[s], req.params)[0])
-            req.output.append(tok)
-            self.pos[s] += 1
-            self._maybe_finish(s, tok)
+        toks, done = self.runner.decode(
+            self._tok, self._pos, self._active, k, self._temps,
+            self._topks, self._topps, self._eos, self._remaining)
+        for slot, req in active:
+            tok = int(toks[slot])
+            self._emit(slot, req, tok)
+            self._tok[slot] = tok
+            self._pos[slot] += 1
+            self._remaining[slot] -= 1
+            if done[slot]:
+                self._finish(slot, req)
         self.steps_run += 1
         return len(active)
 
     def run(self, max_steps: int = 10000) -> None:
         """Drain queue + slots."""
         for _ in range(max_steps):
-            if not self.queue and all(r is None for r in self.slot_req):
+            if not self.scheduler.has_work():
                 return
-            if self.step() == 0 and not self.queue:
+            if self.step() == 0 and not self.scheduler.queue:
                 return
 
     # ------------------------------------------------------------------

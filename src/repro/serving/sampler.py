@@ -1,11 +1,26 @@
-"""Token samplers: greedy / temperature / top-k / top-p (batched)."""
+"""Token samplers: greedy / temperature / top-k / top-p.
+
+Two entry points:
+
+  sample(logits, key, params)            — single SampleParams for the whole
+      batch, Python-branching on the param values (kept for tests/tools).
+  sample_batched(logits, key, t, k, p)   — per-row params as *traced arrays*,
+      fully branch-free, so the serving engine can fuse sampling into the
+      jitted decode step (one compile, zero host sync per token).
+
+``stack_params`` converts a list of SampleParams into the three arrays the
+batched sampler consumes.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+NEG = -1e30
 
 
 @dataclasses.dataclass(frozen=True)
@@ -13,6 +28,14 @@ class SampleParams:
     temperature: float = 0.0          # 0 => greedy
     top_k: int = 0                    # 0 => no top-k filter
     top_p: float = 1.0                # 1 => no nucleus filter
+
+
+def stack_params(params: Sequence[SampleParams]
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """[SampleParams] -> (temperature [B] f32, top_k [B] i32, top_p [B] f32)."""
+    return (np.asarray([p.temperature for p in params], np.float32),
+            np.asarray([p.top_k for p in params], np.int32),
+            np.asarray([p.top_p for p in params], np.float32))
 
 
 def sample(logits: jax.Array, key: jax.Array,
@@ -23,12 +46,46 @@ def sample(logits: jax.Array, key: jax.Array,
     logits = logits.astype(jnp.float32) / params.temperature
     if params.top_k > 0:
         kth = jax.lax.top_k(logits, params.top_k)[0][..., -1:]
-        logits = jnp.where(logits < kth, -1e30, logits)
+        logits = jnp.where(logits < kth, NEG, logits)
     if params.top_p < 1.0:
         sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
         probs = jax.nn.softmax(sorted_logits, axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
         cutoff_idx = jnp.sum(cum < params.top_p, axis=-1, keepdims=True)
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
-        logits = jnp.where(logits < cutoff, -1e30, logits)
+        logits = jnp.where(logits < cutoff, NEG, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_batched(logits: jax.Array, key: jax.Array,
+                   temperature: jax.Array, top_k: jax.Array,
+                   top_p: jax.Array) -> jax.Array:
+    """Per-row sampling with traced params.  logits [B,V] -> tokens [B].
+
+    temperature [B] f32 (<=0 row => greedy), top_k [B] i32 (<=0 => off),
+    top_p [B] f32 (>=1 => off).  All filters are data-dependent `where`
+    masks over a per-row sort, so the whole function jits once regardless
+    of the parameter mix across slots.
+    """
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = logits / t
+    # top-k: per-row k-th largest value as the cutoff (rank-based)
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    k_idx = jnp.clip(top_k[:, None] - 1, 0, V - 1)
+    kth = jnp.take_along_axis(sorted_desc, k_idx, axis=-1)
+    scaled = jnp.where((top_k[:, None] > 0) & (scaled < kth), NEG, scaled)
+    # top-p over the (already top-k-filtered) distribution
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    cutoff_idx = jnp.clip(jnp.sum(cum < top_p[:, None], axis=-1,
+                                  keepdims=True), 0, V - 1)
+    cutoff = jnp.take_along_axis(sorted_desc, cutoff_idx, axis=-1)
+    scaled = jnp.where((top_p[:, None] < 1.0) & (scaled < cutoff), NEG,
+                       scaled)
+    sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)

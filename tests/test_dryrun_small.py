@@ -8,6 +8,10 @@ import sys
 import textwrap
 from pathlib import Path
 
+import pytest
+
+pytestmark = pytest.mark.slow          # subprocess compiles take minutes
+
 ROOT = Path(__file__).resolve().parent.parent
 
 
@@ -28,14 +32,12 @@ def test_dryrun_reduced_cells_on_virtual_mesh():
         os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
         import json
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro.common.types import ShapeSpec
         from repro.configs import reduced_config
         from repro.launch import steps as S
         from repro.runtime import sharding as sh
 
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(AxisType.Auto,)*2)
+        mesh = jax.make_mesh((2, 4), ('data', 'model'))
         out = {}
         for arch, kind in (('gemma3-4b', 'train'),
                            ('falcon-mamba-7b', 'decode'),

@@ -6,7 +6,8 @@ These run in subprocesses with XLA_FLAGS=--xla_force_host_platform_device_count=
   * sharded-vs-single numerical equivalence for the MoE block and a full
     train step (the sharding rules change nothing but placement);
   * compiled-HLO all-reduce counts for PT vs dense TP — the paper's
-    2L -> L/D sync-point claim verified on the real compiled program.
+    2L -> L/D sync-point claim verified on the real compiled program,
+    for both the training forward and the serving decode step.
 """
 import json
 import os
@@ -17,7 +18,12 @@ from pathlib import Path
 
 import pytest
 
+from repro.core.track import (dense_tp_sync_points, pt_sync_points,
+                              sync_reduction)
+
 ROOT = Path(__file__).resolve().parent.parent
+
+slow = pytest.mark.slow                # subprocess compiles take minutes
 
 
 def _run(code: str) -> dict:
@@ -31,11 +37,23 @@ def _run(code: str) -> dict:
     return json.loads(line)
 
 
+def test_sync_accounting_closed_form():
+    """The paper's §2.2 arithmetic: Megatron TP pays 2 all-reduces per
+    layer, PT pays one per D-layer track block — a 2D reduction."""
+    assert dense_tp_sync_points(32) == 64
+    assert pt_sync_points(32, 8) == 4
+    assert sync_reduction(32, 8) == 16           # '16x fewer at D=8'
+    assert sync_reduction(48, 4) == 8
+    # ragged depth: a final partial block still fuses once
+    assert pt_sync_points(10, 4) == 3
+    assert pt_sync_points(10, 4, fuse_final=False) == 2
+
+
+@slow
 def test_moe_sharded_equals_single():
     res = _run(textwrap.dedent("""
         import json
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
         from repro.configs import reduced_config
         from repro.models import moe as moe_lib
         from repro.runtime.parallel import NO_PARALLEL, Parallelism, TRAIN_RULES
@@ -50,8 +68,7 @@ def test_moe_sharded_equals_single():
         x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model))
         y0, aux0 = moe_lib.moe_apply(params, x, cfg=cfg, par=NO_PARALLEL)
 
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(AxisType.Auto,)*2)
+        mesh = jax.make_mesh((2, 4), ('data', 'model'))
         par = Parallelism(mesh=mesh, rules=dict(TRAIN_RULES))
         y1, aux1 = jax.jit(lambda p, x: moe_lib.moe_apply(
             p, x, cfg=cfg, par=par))(params, x)
@@ -62,11 +79,11 @@ def test_moe_sharded_equals_single():
     assert res["err"] < 2e-4, res
 
 
+@slow
 def test_train_step_sharded_equals_single():
     res = _run(textwrap.dedent("""
         import json
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro.configs import reduced_config
         from repro.launch import steps as S
         from repro.runtime import sharding as sh
@@ -85,8 +102,7 @@ def test_train_step_sharded_equals_single():
         p0, o0, m0 = jax.jit(step0)(params, init0(params), batch)
 
         # 2x4 mesh
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(AxisType.Auto,)*2)
+        mesh = jax.make_mesh((2, 4), ('data', 'model'))
         par1 = S.build_parallelism(cfg, 'train', mesh)
         step1, init1, _ = S.make_train_step(cfg, par1, microbatches=2)
         psh = sh.param_shardings(params, cfg, par1)
@@ -105,13 +121,13 @@ def test_train_step_sharded_equals_single():
     assert res["dparams"] < 5e-3, res
 
 
+@slow
 def test_pt_sync_points_in_compiled_hlo():
     """The paper's claim, verified structurally: dense Megatron-TP fires
     2 all-reduces per layer; PT fires L/D cross-track all-reduces."""
     res = _run(textwrap.dedent("""
         import json
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro.configs import pt_paper
         from repro.core.track import pt_ify, pt_sync_points
         from repro.launch import steps as S
@@ -134,14 +150,12 @@ def test_pt_sync_points_in_compiled_hlo():
 
         L, D = 8, 4
         dense = pt_paper.reduced_dense().replace(n_layers=L, remat=False)
-        mesh_d = jax.make_mesh((1, 8), ('data', 'model'),
-                               axis_types=(AxisType.Auto,)*2)
+        mesh_d = jax.make_mesh((1, 8), ('data', 'model'))
         par_d = S.build_parallelism(dense, 'train', mesh_d)
         ar_dense = collectives(dense, mesh_d, par_d)
 
         pt = pt_ify(dense, 4, D, width_mult=16).replace(remat=False)
-        mesh_t = jax.make_mesh((2, 4), ('data', 'track'),
-                               axis_types=(AxisType.Auto,)*2)
+        mesh_t = jax.make_mesh((2, 4), ('data', 'track'))
         par_t = S.build_parallelism(pt, 'train', mesh_t)
         ar_pt = collectives(pt, mesh_t, par_t)
         print(json.dumps({'dense': int(ar_dense), 'pt': int(ar_pt),
@@ -153,3 +167,70 @@ def test_pt_sync_points_in_compiled_hlo():
     assert res["pt"] <= res["expected_pt"] + 3, res
     assert res["dense"] >= 2 * 8, res
     assert res["dense"] / max(res["pt"], 1) >= 3, res
+
+
+@slow
+def test_pt_decode_one_allreduce_per_track_block():
+    """The serving-side sync claim, verified structurally: the compiled
+    pt_decode_step scans one track block per while iteration, and that
+    while body contains EXACTLY ONE cross-track all-reduce (the fusion
+    mean) — grouped over the n_tracks mesh axis."""
+    res = _run(textwrap.dedent("""
+        import json, re
+        import jax, jax.numpy as jnp
+        from repro.configs import pt_paper
+        from repro.launch import steps as S
+        from repro.runtime import sharding as sh
+
+        cfg = pt_paper.reduced_pt(2).replace(remat=False)  # 8 layers, D=2
+        n_tracks = cfg.pt.n_tracks
+        mesh = jax.make_mesh((2, n_tracks), ('data', 'track'))
+        par = S.build_parallelism(cfg, 'decode', mesh)
+        fns = S.model_fns(cfg)
+        ps = jax.eval_shape(lambda: fns['init'](jax.random.PRNGKey(0), cfg))
+        psh = sh.param_shardings(ps, cfg, par)
+        B, SL = 8, 32
+        cache = jax.eval_shape(lambda: fns['init_cache'](cfg, B, SL))
+        tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+        def step(p, c, t, q):
+            return fns['decode'](p, c, t, q, cfg, par)
+
+        txt = jax.jit(step, in_shardings=(psh, None, None, None)) \\
+            .lower(ps, cache, tok, pos).compile().as_text()
+
+        # split the HLO into named computations
+        comps, cur = {}, None
+        for line in txt.splitlines():
+            if line and not line[0].isspace() and '{' in line:
+                m = re.match(r'(?:ENTRY\\s+)?%?([\\w\\.\\-]+)', line.strip())
+                cur = m.group(1) if m else None
+                comps[cur] = []
+            elif cur is not None:
+                comps[cur].append(line)
+        bodies = set(re.findall(r'body=%?([\\w\\.\\-]+)', txt))
+        ar = re.compile(r'=\\s*\\S+\\s+all-reduce(?:-start)?\\(')
+        per_body = {b: sum(1 for l in comps.get(b, ()) if ar.search(l))
+                    for b in bodies}
+        # group sizes of the all-reduces inside while bodies
+        sizes = []
+        for b in bodies:
+            for l in comps.get(b, ()):
+                if ar.search(l):
+                    g = re.search(r'replica_groups=\\{\\{([\\d,]+)\\}', l)
+                    if g:                         # explicit-list format
+                        sizes.append(len(g.group(1).split(',')))
+                    g = re.search(r'replica_groups=\\[\\d+,(\\d+)\\]<=', l)
+                    if g:                         # iota format [n,size]<=[N]
+                        sizes.append(int(g.group(1)))
+        print(json.dumps({'per_body': sorted(per_body.values()),
+                          'group_sizes': sizes,
+                          'n_tracks': n_tracks}))
+    """))
+    # exactly one loop body carries a collective — the track-block scan —
+    # and it carries exactly ONE all-reduce (auxiliary gather/scatter
+    # loops XLA emits on CPU carry none)
+    assert res["per_body"].count(1) == 1 and max(res["per_body"]) == 1, res
+    # ... and it reduces across the track axis (group size = n_tracks)
+    assert res["group_sizes"] == [res["n_tracks"]], res

@@ -1,7 +1,11 @@
 """Hypothesis property tests on the system's numerical invariants."""
 import dataclasses
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package "
+    "(pip install -r requirements-dev.txt)")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,34 +1,164 @@
-"""Serving engine: greedy continuous-batching output == naive
-autoregressive reference; slot reuse; latency stats recorded."""
+"""Serving engine: bucketed-prefill parity with the naive autoregressive
+reference (dense, windowed, recurrent and PT configs), batched admission,
+scheduler policy, per-request sampling isolation, device-side sampling,
+streaming callbacks and metrics."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import reduced_config
+from repro.launch import steps as steps_lib
 from repro.models.decoder import init_lm, lm_forward
-from repro.serving.engine import Engine
-from repro.serving.sampler import SampleParams, sample
+from repro.serving.engine import (Engine, Request, RequestState, Scheduler)
+from repro.serving.sampler import (SampleParams, sample, sample_batched,
+                                   stack_params)
 
 
 def _naive_greedy(params, cfg, prompt, n_new):
+    fns = steps_lib.model_fns(cfg)
     toks = list(prompt)
     for _ in range(n_new):
-        logits, _ = lm_forward(params,
-                               {"inputs": jnp.asarray([toks], jnp.int32)},
-                               cfg)
-        toks.append(int(jnp.argmax(logits[0, -1])))
+        out = fns["forward"](params,
+                             {"inputs": jnp.asarray([toks], jnp.int32)},
+                             cfg, mode="prefill")
+        toks.append(int(jnp.argmax(out[0][0, -1])))
     return toks[len(prompt):]
 
 
-def test_engine_matches_naive_greedy():
+def _tinyllama():
     cfg = reduced_config("tinyllama-1.1b")
-    params = init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, init_lm(jax.random.PRNGKey(0), cfg)
+
+
+# ---------------------------------------------------------------------------
+# parity with the naive reference
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_naive_greedy():
+    cfg, params = _tinyllama()
     prompts = [[5, 9, 2, 7], [11, 3, 1, 8, 4, 2], [17, 23]]
     eng = Engine(cfg, params, max_slots=2, max_seq_len=32)
     outs = eng.generate(prompts, max_new_tokens=6)
     for p, o in zip(prompts, outs):
         ref = _naive_greedy(params, cfg, p, 6)
         assert o == ref, (p, o, ref)
+
+
+def test_bucketed_prefill_parity_across_bucket_boundary():
+    """Greedy outputs must be identical whether the prompt lands exactly
+    on a bucket (8), one short of it (7 -> padded to 8) or one past it
+    (9 -> padded to 16)."""
+    cfg, params = _tinyllama()
+    eng = Engine(cfg, params, max_slots=2, max_seq_len=48, min_bucket=4)
+    rng = np.random.default_rng(7)
+    for L in (7, 8, 9):
+        p = rng.integers(1, cfg.vocab_size, L).tolist()
+        out = eng.generate([p], max_new_tokens=6)[0]
+        ref = _naive_greedy(params, cfg, p, 6)
+        assert out == ref, (L, out, ref)
+
+
+def test_bucketed_prefill_parity_pt_config():
+    """Engine-on-PT: pt_decode_step serving (bucketed prefill + batched
+    device-side sampling) matches the naive pt_forward reference across a
+    bucket boundary."""
+    cfg = reduced_config("pt-30b-d8")
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_slots=2, max_seq_len=32, min_bucket=4)
+    for L in (7, 8, 9):
+        p = [(3 * i + 1) % cfg.vocab_size for i in range(L)]
+        out = eng.generate([p], max_new_tokens=5)[0]
+        ref = _naive_greedy(params, cfg, p, 5)
+        assert out == ref, (L, out, ref)
+
+
+def test_bucketed_prefill_parity_windowed_ring_cache():
+    """Sliding-window (ring buffer) caches must be built from the true
+    prompt, not the padded tail: a 17-token prompt padded to bucket 32
+    would otherwise evict most of the real window."""
+    cfg = reduced_config("gemma2-2b")
+    windows = [cfg.spec(nm).window for nm in set(cfg.layer_names)
+               if cfg.spec(nm).window]
+    assert windows, "gemma2 reduced config should have windowed layers"
+    params = init_lm(jax.random.PRNGKey(1), cfg)
+    eng = Engine(cfg, params, max_slots=2, max_seq_len=64, min_bucket=4)
+    rng = np.random.default_rng(0)
+    for L in (7, 17, 21):
+        p = rng.integers(1, cfg.vocab_size, L).tolist()
+        out = eng.generate([p], max_new_tokens=6)[0]
+        ref = _naive_greedy(params, cfg, p, 6)
+        assert out == ref, (L, out, ref)
+
+
+def test_moe_arch_uses_exact_prefill():
+    """Capacity-based MoE routing is length-sensitive: padded bucket
+    tokens would steal expert-capacity slots from real tokens, so MoE
+    configs prefill at exact length.  (Incremental decode still routes
+    each token with per-step capacity, which legitimately differs from
+    a full recompute — only the prefill token is bit-compared here.)"""
+    cfg = reduced_config("deepseek-v2-236b")
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_slots=1, max_seq_len=32)
+    assert eng.runner.exact_prefill
+    assert eng.runner.bucket_for(7) == 7
+    p = [(7 * i + 3) % cfg.vocab_size for i in range(7)]
+    out = eng.generate([p], max_new_tokens=2)[0]
+    assert out[0] == _naive_greedy(params, cfg, p, 1)[0]
+
+
+def test_truncation_flag_when_capacity_exceeded():
+    """A request that cannot fit prompt+max_new in the cache is clamped
+    to capacity and flagged, not silently shortened."""
+    cfg, params = _tinyllama()
+    eng = Engine(cfg, params, max_slots=1, max_seq_len=16)
+    req = eng.submit([1] * 14, max_new_tokens=50)
+    eng.run()
+    assert req.truncated
+    assert len(req.output) == 16 - 14 + 1    # positions 14, 15 + prefill tok
+    assert req.state is RequestState.DONE
+    ok = eng.submit([1, 2, 3], max_new_tokens=4)
+    eng.run()
+    assert not ok.truncated and len(ok.output) == 4
+
+
+def test_recurrent_arch_uses_exact_prefill():
+    """Mamba state would be corrupted by padded tokens: the bucket policy
+    degrades to exact lengths and outputs still match the reference."""
+    cfg = reduced_config("falcon-mamba-7b")
+    params = init_lm(jax.random.PRNGKey(2), cfg)
+    eng = Engine(cfg, params, max_slots=2, max_seq_len=32)
+    assert eng.runner.exact_prefill
+    assert eng.runner.bucket_for(7) == 7
+    p = [3, 1, 4, 1, 5, 9, 2]
+    out = eng.generate([p], max_new_tokens=5)[0]
+    assert out == _naive_greedy(params, cfg, p, 5)
+
+
+# ---------------------------------------------------------------------------
+# compile stability + batched admission
+# ---------------------------------------------------------------------------
+
+def test_prefill_compiles_per_bucket_not_per_length():
+    cfg, params = _tinyllama()
+    eng = Engine(cfg, params, max_slots=1, max_seq_len=32, min_bucket=8)
+    for L in (3, 5, 6, 7, 8):          # five lengths, one bucket
+        eng.generate([list(range(1, L + 1))], max_new_tokens=2)
+    assert eng.runner.prefill_shapes == {(1, 8)}
+
+
+def test_batched_admission_single_prefill_call():
+    """Same-bucket requests admitted together run as ONE batched prefill
+    into several free slots, and each still matches the reference."""
+    cfg, params = _tinyllama()
+    eng = Engine(cfg, params, max_slots=4, max_seq_len=32, min_bucket=8)
+    prompts = [[5, 9, 2, 7, 1], [11, 3, 1, 8, 4, 2], [17, 23, 5, 6, 7, 8, 9]]
+    outs = eng.generate(prompts, max_new_tokens=5)
+    assert eng.runner.prefill_shapes == {(3, 8)}
+    for p, o in zip(prompts, outs):
+        assert o == _naive_greedy(params, cfg, p, 5), p
 
 
 def test_engine_continuous_batching_slot_reuse():
@@ -39,21 +169,96 @@ def test_engine_continuous_batching_slot_reuse():
             for i in range(5)]
     eng.run()
     assert all(len(r.output) == 4 + i for i, r in enumerate(reqs))
+    assert all(r.state is RequestState.DONE for r in reqs)
     assert all(r.t_done > r.t_first > r.t_submit > 0 for r in reqs)
     assert all(r.ttft >= 0 and r.tpot >= 0 for r in reqs)
     # 5 requests through 2 slots => more engine steps than the longest req
     assert eng.steps_run >= 8
 
 
+def test_scheduler_fcfs_budget():
+    """Admission is strict FCFS under the padded-token budget; an
+    oversized head-of-line request is admitted alone, never skipped."""
+    bucket = lambda L: max(8, 1 << (L - 1).bit_length())
+    sched = Scheduler(max_slots=4, bucket_fn=bucket,
+                      max_waiting_prefill_tokens=16)
+    for rid, L in enumerate((8, 8, 8)):      # buckets 8, 8, 8; budget 16
+        sched.submit(Request(rid, [1] * L))
+    groups = sched.plan_admission()
+    admitted = [r.rid for _, g in groups for _, r in g]
+    assert admitted == [0, 1]                # third exceeds the budget
+    assert all(r.state is RequestState.PREFILL for _, g in groups
+               for _, r in g)
+    assert [r.rid for r in sched.queue] == [2]
+    # oversized head-of-line request: admitted alone once slots free up
+    sched2 = Scheduler(max_slots=2, bucket_fn=bucket,
+                       max_waiting_prefill_tokens=4)
+    sched2.submit(Request(0, [1] * 30))      # bucket 32 >> budget 4
+    groups = sched2.plan_admission()
+    assert [r.rid for _, g in groups for _, r in g] == [0]
+
+
+# ---------------------------------------------------------------------------
+# device-side sampling
+# ---------------------------------------------------------------------------
+
 def test_engine_sampled_tokens_in_vocab():
-    cfg = reduced_config("tinyllama-1.1b")
-    params = init_lm(jax.random.PRNGKey(0), cfg)
+    cfg, params = _tinyllama()
     eng = Engine(cfg, params, max_slots=2, max_seq_len=24)
     outs = eng.generate([[1, 2, 3]] * 3, max_new_tokens=5,
                         params=SampleParams(temperature=0.8, top_k=10))
     for o in outs:
         assert len(o) == 5
         assert all(0 <= t < cfg.vocab_size for t in o)
+
+
+def test_per_request_sampling_params_isolation():
+    """A greedy request decoding next to a high-temperature request must
+    produce exactly the tokens it produces alone: per-slot sampling params
+    are per-row traced arrays, not engine-global state."""
+    cfg, params = _tinyllama()
+    solo = Engine(cfg, params, max_slots=2, max_seq_len=32, seed=3)
+    ref = solo.generate([[1, 2, 3, 4]], max_new_tokens=6)[0]
+
+    mixed = Engine(cfg, params, max_slots=2, max_seq_len=32, seed=11)
+    r_greedy = mixed.submit([1, 2, 3, 4], 6)
+    r_hot = mixed.submit([9, 8, 7], 6,
+                         params=SampleParams(temperature=1.5, top_k=5))
+    mixed.run()
+    assert r_greedy.output == ref
+    assert all(0 <= t < cfg.vocab_size for t in r_hot.output)
+
+
+def test_decode_single_host_transfer_per_step():
+    """The decode loop must not round-trip per-slot tokens through the
+    host: exactly one packed transfer per engine step."""
+    cfg, params = _tinyllama()
+    eng = Engine(cfg, params, max_slots=3, max_seq_len=32)
+    eng.generate([[1, 2, 3], [4, 5], [6, 7, 8, 9]], max_new_tokens=6)
+    assert eng.runner.decode_transfers == eng.steps_run
+
+
+def test_sample_batched_matches_single_param_sampler():
+    """sample_batched with uniform rows == the scalar-params sampler, and
+    per-row params are honoured (greedy rows exactly argmax)."""
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    # all-greedy
+    t, k, p = stack_params([SampleParams()] * 4)
+    out = sample_batched(logits, key, jnp.asarray(t), jnp.asarray(k),
+                         jnp.asarray(p))
+    assert (np.asarray(out) == np.asarray(jnp.argmax(logits, -1))).all()
+    # mixed: greedy rows stay argmax; top-k rows stay in the top-k support
+    mix = [SampleParams(), SampleParams(temperature=1.0, top_k=3),
+           SampleParams(), SampleParams(temperature=0.7, top_k=8)]
+    t, k, p = stack_params(mix)
+    out = np.asarray(sample_batched(logits, key, jnp.asarray(t),
+                                    jnp.asarray(k), jnp.asarray(p)))
+    am = np.asarray(jnp.argmax(logits, -1))
+    assert out[0] == am[0] and out[2] == am[2]
+    for row, kk in ((1, 3), (3, 8)):
+        top = np.asarray(jax.lax.top_k(logits[row], kk)[1])
+        assert out[row] in top.tolist()
 
 
 def test_sampler_greedy_and_top_p():
@@ -63,3 +268,47 @@ def test_sampler_greedy_and_top_p():
     t2 = sample(logits, jax.random.PRNGKey(0),
                 SampleParams(temperature=1.0, top_p=0.5))
     assert int(t2[0]) == 1     # nucleus of p=.5 is just the argmax here
+
+
+# ---------------------------------------------------------------------------
+# streaming + metrics
+# ---------------------------------------------------------------------------
+
+def test_streaming_callback_sees_every_token_in_order():
+    cfg, params = _tinyllama()
+    eng = Engine(cfg, params, max_slots=2, max_seq_len=32)
+    seen = {}
+
+    def on_token(req, tok):
+        seen.setdefault(req.rid, []).append(tok)
+
+    r1 = eng.submit([1, 2, 3], 5, on_token=on_token)
+    r2 = eng.submit([4, 5, 6, 7], 4, on_token=on_token)
+    eng.run()
+    assert seen[r1.rid] == r1.output and len(r1.output) == 5
+    assert seen[r2.rid] == r2.output and len(r2.output) == 4
+
+
+def test_engine_metrics_summary():
+    cfg, params = _tinyllama()
+    eng = Engine(cfg, params, max_slots=2, max_seq_len=32)
+    eng.generate([[1, 2, 3], [4, 5, 6]], max_new_tokens=4)
+    m = eng.metrics.summary()
+    assert m["requests"] == 2
+    assert m["output_tokens"] == 8
+    assert m["throughput_tok_s"] > 0
+    for key in ("ttft_ms", "tpot_ms"):
+        assert m[key]["p50"] <= m[key]["p90"] <= m[key]["p99"]
+
+
+def test_eos_stops_generation():
+    """A request stops as soon as the (greedy) model emits its eos id."""
+    cfg, params = _tinyllama()
+    probe = Engine(cfg, params, max_slots=1, max_seq_len=32)
+    out = probe.generate([[1, 2, 3]], max_new_tokens=6)[0]
+    eos = out[2]                              # pretend token #3 is EOS
+    eng = Engine(cfg, params, max_slots=1, max_seq_len=32)
+    req = eng.submit([1, 2, 3], 6, eos_id=eos)
+    eng.run()
+    assert req.output == out[:3]
+    assert req.state is RequestState.DONE
