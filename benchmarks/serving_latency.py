@@ -4,10 +4,18 @@ roofline latency model (no GPUs here; see latency_model.py).
 
 ``--measure`` additionally times the real engine on reduced models
 (CPU wall-clock): the relative dense-vs-PT effect at tiny scale.
+
+``--paged`` / ``--contiguous`` run the toy-size serving smoke under a
+FIXED HBM budget (the bytes a 2-slot contiguous cache costs) with a
+mixed short/long workload, and append TTFT/TPOT/throughput, peak
+concurrency and cache-utilization %% to ``--json`` (BENCH_serving.json
+in CI) so the serving-perf trajectory is recorded per commit.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
 from benchmarks.latency_model import decode_token_time, prefill_time
 from repro.configs import get_config
@@ -78,6 +86,83 @@ def measured(quick: bool = True) -> dict:
     return out
 
 
+def bench_smoke(paged: bool, json_path: str | None = None) -> dict:
+    """Toy-size serving smoke at a FIXED HBM budget: the bytes a 2-slot
+    contiguous cache reserves.  Paged mode spends the same bytes on a
+    shared block pool (+ chunked prefill), so mixed short/long traffic
+    runs many more concurrent requests and short TTFT stays flat while a
+    long prefill is in flight."""
+    import jax
+    import numpy as np
+    from repro.configs import reduced_config
+    from repro.launch import steps as steps_lib
+    from repro.serving.engine import Engine
+
+    cfg = reduced_config("tinyllama-1.1b")
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    S, bs, base_slots = 96, 8, 2
+    budget_blocks = base_slots * S // bs          # == 2-slot contiguous HBM
+    if paged:
+        eng = Engine(cfg, params, max_slots=8, max_seq_len=S, paged=True,
+                     block_size=bs, num_blocks=budget_blocks,
+                     prefill_chunk=16)
+    else:
+        eng = Engine(cfg, params, max_slots=base_slots, max_seq_len=S,
+                     paged=False)
+
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(1, cfg.vocab_size, 64).tolist(), 8)]
+    for _ in range(10):                           # short stream behind it
+        reqs.append(eng.submit(rng.integers(1, cfg.vocab_size, 8).tolist(),
+                               8))
+    peak_util = 0.0
+    for _ in range(10_000):                       # capped like Engine.run
+        if not eng.scheduler.has_work():
+            break
+        if eng.step() == 0 and not eng.scheduler.queue:
+            break
+        if paged:
+            u = eng.runner.kv.utilization()
+            peak_util = max(peak_util, u["used_blocks"] / u["num_blocks"])
+        else:
+            busy = sum(int(eng._pos[s]) for s, r in
+                       eng.scheduler.active_slots())
+            peak_util = max(peak_util, busy / (eng.max_slots * S))
+    m = eng.metrics.summary()
+    short = np.asarray([r.ttft for r in reqs[1:]]) * 1e3
+    out = {
+        "mode": "paged" if paged else "contiguous",
+        "hbm_budget_tokens": base_slots * S,
+        "max_slots": eng.max_slots,
+        "max_active": m["max_active"],
+        "throughput_tok_s": m["throughput_tok_s"],
+        "ttft_ms": m["ttft_ms"],
+        "tpot_ms": m["tpot_ms"],
+        "short_ttft_p50_ms": float(np.percentile(short, 50)),
+        "cache_utilization_pct": round(100 * peak_util, 1),
+        "prefill_chunk": eng.runner.prefill_chunk,
+        "cache": eng.runner.cache_stats(),
+    }
+    print(f"smoke,{out['mode']},max_active {out['max_active']},"
+          f"short_ttft_p50 {out['short_ttft_p50_ms']:.1f} ms,"
+          f"util {out['cache_utilization_pct']:.1f}%,"
+          f"{out['throughput_tok_s']:.1f} tok/s")
+    if json_path:
+        merged = {}
+        if os.path.exists(json_path):
+            with open(json_path) as f:
+                merged = json.load(f)
+        merged[out["mode"]] = out
+        if "paged" in merged and "contiguous" in merged:
+            merged["slots_gain_at_fixed_hbm"] = (
+                merged["paged"]["max_active"]
+                / max(1, merged["contiguous"]["max_active"]))
+        with open(json_path, "w") as f:
+            json.dump(merged, f, indent=2)
+    return out
+
+
 def main(quick: bool = False) -> dict:
     print("# TTFT (ms), analytical roofline model, batch=1, 8 chips")
     t1 = ttft_table()
@@ -93,10 +178,22 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--measure", action="store_true")
     ap.add_argument("--metric", default="both")
+    ap.add_argument("--paged", action="store_true",
+                    help="toy serving smoke, paged cache + chunked prefill")
+    ap.add_argument("--contiguous", action="store_true",
+                    help="toy serving smoke, contiguous per-slot cache")
+    ap.add_argument("--json", default=None,
+                    help="merge smoke results into this JSON file")
     args = ap.parse_args()
-    if args.metric in ("ttft", "both"):
-        ttft_table()
-    if args.metric in ("tpot", "both"):
-        tpot_table()
-    if args.measure:
-        measured()
+    if args.paged or args.contiguous:
+        if args.paged:
+            bench_smoke(True, args.json)
+        if args.contiguous:
+            bench_smoke(False, args.json)
+    else:
+        if args.metric in ("ttft", "both"):
+            ttft_table()
+        if args.metric in ("tpot", "both"):
+            tpot_table()
+        if args.measure:
+            measured()

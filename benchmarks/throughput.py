@@ -38,16 +38,20 @@ def measured_engine(quick: bool = True) -> dict:
         cfg = reduced_config(name)
         fns = steps_lib.model_fns(cfg)
         params = fns["init"](jax.random.PRNGKey(0), cfg)
-        eng = Engine(cfg, params, max_slots=4, max_seq_len=80)
+        eng = Engine(cfg, params, max_slots=4, max_seq_len=80,
+                     block_size=16, prefill_chunk=16)
         rng = np.random.default_rng(0)
         for _ in range(8):
             eng.submit(rng.integers(1, cfg.vocab_size, 32).tolist(), 16)
         eng.run()
         m = eng.metrics.summary()
+        stats = eng.runner.cache_stats()
         out[name] = m["throughput_tok_s"]
         print(f"measured,{name},{out[name]:.1f} tok/s "
               f"({m['output_tokens']} tokens, {eng.steps_run} decode steps, "
-              f"{len(eng.runner.prefill_shapes)} prefill variants)")
+              f"{stats['mode']} cache, "
+              f"{len(eng.runner.prefill_shapes) or len(eng.runner.chunk_shapes)}"
+              f" prefill variants)")
     return out
 
 

@@ -1,6 +1,7 @@
 """Serve a small PT model with batched requests through the
-continuous-batching engine: bucketed prefill, device-side sampling,
-streaming token callbacks, and the engine's aggregate TTFT/TPOT metrics.
+continuous-batching engine: paged block-pool KV cache, chunked prefill
+interleaved with decode, device-side sampling, streaming token callbacks,
+and the engine's aggregate TTFT/TPOT metrics.
 
   PYTHONPATH=src python examples/serve_pt.py
 """
@@ -17,9 +18,15 @@ def main():
     cfg = reduced_config("pt-30b-d8")
     fns = steps_lib.model_fns(cfg)
     params = fns["init"](jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, params, max_slots=4, max_seq_len=96)
+    # paged cache: 4 slots share a 10-block pool (80 of the 4*96=384
+    # tokens a contiguous cache would reserve); prompts stream in 8-token
+    # chunks between decode steps
+    eng = Engine(cfg, params, max_slots=4, max_seq_len=96,
+                 block_size=8, num_blocks=10, prefill_chunk=8)
+    assert eng.runner.paged and eng.runner.prefill_chunk == 8
 
     streamed = {}                            # rid -> tokens seen so far
+    peak_blocks = 0
 
     def on_token(req, tok):
         streamed.setdefault(req.rid, []).append(tok)
@@ -32,17 +39,29 @@ def main():
                                params=SampleParams(temperature=0.7,
                                                    top_k=20),
                                on_token=on_token))
-    eng.run()
+    for _ in range(10_000):                      # capped like Engine.run
+        if not eng.scheduler.has_work():
+            break
+        if eng.step() == 0 and not eng.scheduler.queue:
+            break
+        peak_blocks = max(peak_blocks,
+                          eng.runner.kv.utilization()["used_blocks"])
     for r in reqs:
         assert streamed[r.rid] == r.output   # callbacks saw every token live
         print(f"req {r.rid}: prompt {len(r.prompt):2d} tok -> "
               f"{len(r.output):2d} new | TTFT {r.ttft*1e3:7.1f} ms | "
               f"TPOT {r.tpot*1e3:6.1f} ms | {r.output[:6]}...")
     m = eng.metrics.summary()
+    u = eng.runner.kv.utilization()
     print(f"engine steps: {eng.steps_run} (continuous batching across "
-          f"{len(reqs)} requests on {eng.max_slots} slots)")
-    print(f"prefill compile variants: {sorted(eng.runner.prefill_shapes)} "
-          f"(buckets, not per-length)")
+          f"{len(reqs)} requests on {eng.max_slots} slots, peak "
+          f"{m['max_active']} concurrent)")
+    print(f"paged cache: block_size {eng.runner.kv.block_size}, peak "
+          f"{peak_blocks}/{u['num_blocks']} blocks in use "
+          f"(a contiguous cache would reserve "
+          f"{eng.max_slots * eng.max_seq_len} token rows)")
+    print(f"chunked prefill variants: {sorted(eng.runner.chunk_shapes)} "
+          f"(chunks of {eng.runner.prefill_chunk}, interleaved with decode)")
     print(f"aggregate: {m['throughput_tok_s']:.1f} tok/s | "
           f"TTFT p50 {m['ttft_ms']['p50']:.1f} ms | "
           f"TPOT p50 {m['tpot_ms']['p50']:.1f} ms")

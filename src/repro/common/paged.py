@@ -1,0 +1,73 @@
+"""Paged KV-cache leaf marker + block-table address arithmetic.
+
+A paged engine cache replaces every full-length KV leaf with a block
+pool ``[..., num_blocks, block_size, ...]`` shared by all slots and
+indexed through a per-slot block table.  The pool rides through the
+same cache pytree the dense engine uses, wrapped in ``PagedLeaf`` — a
+registered pytree node — so ``scan`` / ``vmap`` / ``jit`` thread it
+transparently and the attention decode path can tell a block pool from
+a dense ring buffer *structurally* instead of by shape heuristics.
+Ring buffers and O(1) recurrent states stay plain arrays.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+class PagedLeaf:
+    """Marks a cache leaf as a block pool (block axis where the dense
+    layout has batch, block-size axis where it has sequence)."""
+
+    def __init__(self, pool: jax.Array):
+        self.pool = pool
+
+    def tree_flatten(self):
+        return (self.pool,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    def __repr__(self) -> str:
+        shp = getattr(self.pool, "shape", None)
+        return f"PagedLeaf({shp})"
+
+
+def is_paged(leaf: Any) -> bool:
+    return isinstance(leaf, PagedLeaf)
+
+
+def wrap_paged(tree: Any, pageable: Any) -> Any:
+    """Wrap the pageable leaves of a cache pytree in ``PagedLeaf``."""
+    return jax.tree_util.tree_map(
+        lambda l, pg: PagedLeaf(l) if pg else l, tree, pageable)
+
+
+def unwrap_paged(tree: Any) -> Any:
+    """Inverse of ``wrap_paged`` (plain leaves pass through)."""
+    return jax.tree_util.tree_map(
+        lambda l: l.pool if is_paged(l) else l, tree, is_leaf=is_paged)
+
+
+def token_to_pool(table_rows: jax.Array, positions: jax.Array,
+                  block_size: int) -> jax.Array:
+    """Map token positions to flat pool row indices through a block table.
+
+    table_rows: [..., max_blocks_per_seq] int32 block ids;
+    positions:  [...] int32 token positions (same leading dims).
+    Returns flat indices into a [num_blocks * block_size] pool row space.
+    Unallocated table entries are 0 (the trash block), so out-of-range
+    positions resolve to trash rows, never to live blocks.
+    """
+    nmax = table_rows.shape[-1]
+    bidx = positions // block_size
+    blk = jnp.take_along_axis(table_rows, jnp.clip(bidx, 0, nmax - 1),
+                              axis=-1)
+    # beyond the table width (e.g. a padded final prefill chunk crossing
+    # capacity): explicitly the trash block, not gather OOB semantics
+    blk = jnp.where(bidx < nmax, blk, 0)
+    return blk * block_size + positions % block_size

@@ -194,13 +194,16 @@ def _spread(x: jax.Array, cfg: ModelConfig, par: Parallelism) -> jax.Array:
 
 
 def _track_layers(params_block, h, *, cfg, spec, mode, positions, pos,
-                  caches, par, lengths=None):
+                  caches, par, lengths=None, block_table=None,
+                  kv_max_len=None):
     """Apply one layer per track (vmapped).  params leaves [n, ...];
-    h [n, B, S, d]; caches leaves [n, ...] or None."""
+    h [n, B, S, d]; caches leaves [n, ...] or None.  ``block_table`` is
+    closure-captured, i.e. shared (broadcast) across tracks."""
     def one(p, x, c):
         return layer_apply(p, x, cfg=cfg, spec=spec, mode=mode,
                            positions=positions, pos=pos, cache=c, par=par,
-                           lengths=lengths)
+                           lengths=lengths, block_table=block_table,
+                           kv_max_len=kv_max_len)
 
     if caches is None:
         out, cache, aux = jax.vmap(lambda p, x: one(p, x, None))(
@@ -275,11 +278,11 @@ def pt_forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
     return logits, cache, aux_total
 
 
-def pt_decode_step(params, cache, tokens: jax.Array, pos: jax.Array,
-                   cfg: ModelConfig, par: Parallelism = NO_PARALLEL):
+def _pt_step(params, cache, x, pos, cfg: ModelConfig, par: Parallelism,
+             mode: str, block_table, kv_max_len=None):
+    """Shared decode/chunk drive: track-block scan + ragged tail."""
     pt = _pt(cfg)
     spec = cfg.spec(cfg.pattern_unit[0])
-    x = _embed(params, tokens[:, None], cfg, pos[:, None], par)
     R, rem = _block_counts(cfg)
 
     new_blocks = cache["blocks"]
@@ -293,8 +296,10 @@ def pt_decode_step(params, cache, tokens: jax.Array, pos: jax.Array,
                 pj = jax.tree_util.tree_map(lambda l: l[j], pblock)
                 cj = jax.tree_util.tree_map(lambda l: l[j], cblock)
                 hh, c, _ = _track_layers(pj, hh, cfg=cfg, spec=spec,
-                                         mode="decode", positions=None,
-                                         pos=pos, caches=cj, par=par)
+                                         mode=mode, positions=None,
+                                         pos=pos, caches=cj, par=par,
+                                         block_table=block_table,
+                                         kv_max_len=kv_max_len)
                 cs.append(c)
             hf = _fuse(hh, cfg, par)
             return hf, jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *cs)
@@ -309,13 +314,37 @@ def pt_decode_step(params, cache, tokens: jax.Array, pos: jax.Array,
             pi = jax.tree_util.tree_map(lambda l: l[i], params["tail"])
             ci = cache["tail"][i]
             ht, c, _ = _track_layers(pi, ht, cfg=cfg, spec=spec,
-                                     mode="decode", positions=None,
-                                     pos=pos, caches=ci, par=par)
+                                     mode=mode, positions=None,
+                                     pos=pos, caches=ci, par=par,
+                                     block_table=block_table,
+                                     kv_max_len=kv_max_len)
             new_tail.append(c)
         h = _fuse(ht, cfg, par) if pt.fuse_final else jnp.mean(ht, axis=0)
+    return h, {"blocks": new_blocks, "tail": tuple(new_tail)}
 
+
+def pt_decode_step(params, cache, tokens: jax.Array, pos: jax.Array,
+                   cfg: ModelConfig, par: Parallelism = NO_PARALLEL,
+                   block_table=None, kv_max_len=None):
+    x = _embed(params, tokens[:, None], cfg, pos[:, None], par)
+    h, new_cache = _pt_step(params, cache, x, pos, cfg, par, "decode",
+                            block_table, kv_max_len)
     logits = _head(params, h[:, 0], cfg, par)
-    return logits, {"blocks": new_blocks, "tail": tuple(new_tail)}
+    return logits, new_cache
+
+
+def pt_chunk_step(params, cache, tokens: jax.Array, pos: jax.Array,
+                  cfg: ModelConfig, par: Parallelism = NO_PARALLEL,
+                  block_table=None):
+    """Chunked-prefill step: tokens [B, C] appended at positions
+    pos[:, None] + arange(C) against a paged cache.  Returns
+    (logits [B, C, V], updated cache)."""
+    positions = pos[:, None] + jnp.arange(tokens.shape[1], dtype=jnp.int32)[None]
+    x = _embed(params, tokens, cfg, positions, par)
+    h, new_cache = _pt_step(params, cache, x, pos, cfg, par, "chunk",
+                            block_table)
+    logits = _head(params, h, cfg, par)
+    return logits, new_cache
 
 
 def pt_init_cache(cfg: ModelConfig, batch: int, seq_len: int):

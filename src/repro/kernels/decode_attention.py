@@ -1,16 +1,27 @@
-"""Flash-decode as a Pallas TPU kernel: one query token per sequence
+"""Flash-decode as Pallas TPU kernels: one query token per sequence
 against a long KV cache, GQA-aware (KV read once per KV head, applied to
 all G query heads in the group).
 
-Grid (B, KH, n_s) with the cache-sequence dim iterated sequentially
-(online softmax in VMEM scratch).  Per-slot valid lengths come in as a
-[B] input so ragged continuous-batching batches mask correctly.  The
-cache block (cs × hd) is the unit of HBM→VMEM streaming — decode is
-bandwidth-bound, and this kernel reads each cache byte exactly once.
+Two layouts:
+
+  decode_attention        — contiguous per-slot cache [B, S, KH, hd].
+  paged_decode_attention  — block-pool cache [N, bs, KH, hd] indexed
+      through a per-sequence block table (vLLM-style).  The table and the
+      valid lengths ride in as *scalar-prefetch* operands, so the block
+      index maps can compute DMA sources from the table before the kernel
+      body runs — the gather costs no extra pass over HBM.
+
+Both iterate the cache-sequence dim sequentially (online softmax in VMEM
+scratch) with a grid of (B, KH, n_s).  Per-slot valid lengths mask ragged
+continuous-batching batches, and ``max_len`` (the max *valid* length in
+the batch, known on the host) truncates the sequential grid so a short
+batch does not sweep empty cache blocks — decode is bandwidth-bound and
+these kernels read each *live* cache byte exactly once.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +29,25 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -2.0e38
+
+
+def _online_softmax_step(q, k, v, s_start, length, m_scr, l_scr, acc_scr, *,
+                         scale: float):
+    """One KV-block accumulation: q [G, hd], k [cs, hd], v [cs, dv]."""
+    q = q.astype(jnp.float32) * scale
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))      # [G, cs]
+    cols = s_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(cols < length, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
 
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
@@ -35,20 +65,9 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(s_start < length)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32) * scale       # [G, hd]
-        k = k_ref[0, 0].astype(jnp.float32)               # [cs, hd]
-        v = v_ref[0, 0].astype(jnp.float32)               # [cs, dv]
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, cs]
-        cols = s_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(cols < length, s, NEG_INF)
-        m_prev = m_scr[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)
-        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
-        m_scr[...] = m_new
-        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())))
+        _online_softmax_step(q_ref[0, 0], k_ref[0, 0], v_ref[0, 0],
+                             s_start, length, m_scr, l_scr, acc_scr,
+                             scale=scale)
 
     @pl.when(si == n_s - 1)
     def _finish():
@@ -58,9 +77,12 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      lengths: jax.Array, *, block_s: int = 512,
+                     max_len: Optional[int] = None,
                      interpret: bool = True) -> jax.Array:
     """q: [B, H, hd]; caches: [B, S, KH, hd]; lengths: [B] valid rows.
-    Returns [B, H, hd]."""
+    ``max_len`` (static, host-known upper bound on lengths) truncates the
+    sequential sweep to the live prefix of the cache.  Returns [B, H, hd].
+    """
     B, S, KH, hd = k_cache.shape
     H = q.shape[1]
     dv = v_cache.shape[-1]
@@ -69,6 +91,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     if S % block_s:
         raise ValueError(f"cache len {S} must tile {block_s}")
     n_s = S // block_s
+    if max_len is not None:
+        n_s = max(1, min(n_s, -(-max_len // block_s)))
     qr = q.reshape(B, KH, G, hd)
     kr = k_cache.transpose(0, 2, 1, 3)                    # [B, KH, S, hd]
     vr = v_cache.transpose(0, 2, 1, 3)
@@ -93,4 +117,96 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         ],
         interpret=interpret,
     )(lengths.astype(jnp.int32), qr, kr, vr)
+    return out.reshape(B, H, dv)
+
+
+# ---------------------------------------------------------------------------
+# paged layout
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, block_s: int,
+                  n_s: int):
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    s_start = si * block_s
+
+    @pl.when(s_start < length)
+    def _compute():
+        # k/v blocks were DMA'd from pool row tbl[b, si] by the index map
+        _online_softmax_step(q_ref[0, 0], k_ref[0, :, 0], v_ref[0, :, 0],
+                             s_start, length, m_scr, l_scr, acc_scr,
+                             scale=scale)
+
+    @pl.when(si == n_s - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_table: jax.Array,
+                           lengths: jax.Array, *,
+                           max_len: Optional[int] = None,
+                           interpret: bool = True) -> jax.Array:
+    """Flash-decode over a block-pool cache.
+
+    q: [B, H, hd]; pools: [N, block_size, KH, hd]; block_table:
+    [B, max_blocks_per_seq] int32 pool-block ids (entries past a
+    sequence's allocation may be anything — they are never read past
+    ``lengths``); lengths: [B] valid tokens.  ``max_len`` (static)
+    truncates the block sweep to ceil(max_len / block_size) blocks.
+    Returns [B, H, hd].
+
+    The table and lengths are scalar-prefetch operands: the k/v BlockSpec
+    index maps dereference ``tbl[b, si]`` to pick the DMA source block, so
+    the kernel streams exactly the blocks the table names — the paged
+    gather is free.
+    """
+    N, bs, KH, hd = k_pool.shape
+    B, H = q.shape[:2]
+    dv = v_pool.shape[-1]
+    G = H // KH
+    nmax = block_table.shape[1]
+    n_s = nmax
+    if max_len is not None:
+        n_s = max(1, min(nmax, -(-max_len // bs)))
+    qr = q.reshape(B, KH, G, hd)
+
+    kernel = functools.partial(_paged_kernel, scale=hd ** -0.5,
+                               block_s=bs, n_s=n_s)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KH, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, n, s, tbl, lens: (b, n, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, n, s, tbl, lens: (tbl[b, s], 0, n, 0)),
+            pl.BlockSpec((1, bs, 1, dv),
+                         lambda b, n, s, tbl, lens: (tbl[b, s], 0, n, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dv),
+                               lambda b, n, s, tbl, lens: (b, n, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, dv), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      qr, k_pool, v_pool)
     return out.reshape(B, H, dv)

@@ -29,10 +29,20 @@ def flash_attention(q, k, v, *, causal: bool = True,
                                interpret=INTERPRET)
 
 
-@functools.partial(jax.jit, static_argnames=("block_s",))
-def decode_attention(q, k_cache, v_cache, lengths, *, block_s: int = 512):
+@functools.partial(jax.jit, static_argnames=("block_s", "max_len"))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_s: int = 512,
+                     max_len: Optional[int] = None):
     return _da.decode_attention(q, k_cache, v_cache, lengths,
-                                block_s=block_s, interpret=INTERPRET)
+                                block_s=block_s, max_len=max_len,
+                                interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("max_len",))
+def paged_decode_attention(q, k_pool, v_pool, block_table, lengths, *,
+                           max_len: Optional[int] = None):
+    return _da.paged_decode_attention(q, k_pool, v_pool, block_table,
+                                      lengths, max_len=max_len,
+                                      interpret=INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "block_d"))

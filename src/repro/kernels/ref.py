@@ -42,6 +42,20 @@ def decode_attention_ref(q, k_cache, v_cache, lengths) -> jax.Array:
     return o.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, block_table,
+                               lengths) -> jax.Array:
+    """q: [B, H, hd]; pools: [N, bs, KH, hd]; block_table: [B, nmax].
+    Gathers the table's blocks into a contiguous cache and defers to the
+    dense oracle."""
+    N, bs, KH, hd = k_pool.shape
+    B = q.shape[0]
+    nmax = block_table.shape[1]
+    k = k_pool[block_table.reshape(-1)].reshape(B, nmax * bs, KH, hd)
+    v = v_pool[block_table.reshape(-1)].reshape(B, nmax * bs, KH,
+                                                v_pool.shape[-1])
+    return decode_attention_ref(q, k, v, lengths)
+
+
 def ssm_scan_ref(a, b, h0) -> tuple:
     """h_t = a_t * h_{t-1} + b_t.  a/b: [B, S, ...]; h0: [B, ...].
     Returns (h [B, S, ...], h_last [B, ...]) in fp32."""

@@ -33,6 +33,15 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--prefill-budget", type=int, default=4096,
                     help="max padded prefill tokens admitted per step")
+    ap.add_argument("--contiguous", action="store_true",
+                    help="disable the paged KV cache (per-slot dense)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged-cache tokens per KV block")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged-cache pool size (default slots*capacity)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: prompt tokens fed per engine "
+                    "step (0 = whole-prompt prefill)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -45,7 +54,10 @@ def main() -> None:
 
     max_seq = args.input_len + args.output_len + 8
     eng = Engine(cfg, params, max_slots=args.slots, max_seq_len=max_seq,
-                 max_waiting_prefill_tokens=args.prefill_budget)
+                 max_waiting_prefill_tokens=args.prefill_budget,
+                 paged=not args.contiguous, block_size=args.block_size,
+                 num_blocks=args.num_blocks,
+                 prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(args.seed)
     sp = SampleParams(temperature=args.temperature)
 
@@ -63,7 +75,8 @@ def main() -> None:
           f"slots={args.slots}")
     print(f"[serve] throughput {m['throughput_tok_s']:9.1f} tok/s   "
           f"wall {wall:.2f}s   engine steps {eng.steps_run}   "
-          f"prefill variants {len(eng.runner.prefill_shapes)}")
+          f"prefill variants {len(eng.runner.prefill_shapes)}   "
+          f"cache {eng.runner.cache_stats()['mode']}")
     print(f"[serve] TTFT ms: p50 {m['ttft_ms']['p50']:8.1f}  "
           f"p90 {m['ttft_ms']['p90']:8.1f}  p99 {m['ttft_ms']['p99']:8.1f}")
     print(f"[serve] TPOT ms: p50 {m['tpot_ms']['p50']:8.1f}  "

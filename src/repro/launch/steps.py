@@ -71,6 +71,7 @@ def model_fns(cfg: ModelConfig):
             "loss": pt_lib.pt_loss,
             "forward": pt_lib.pt_forward,
             "decode": pt_lib.pt_decode_step,
+            "chunk": pt_lib.pt_chunk_step,
             "init_cache": lambda c, b, s, enc_len=0: pt_lib.pt_init_cache(c, b, s),
         }
     return {
@@ -78,6 +79,7 @@ def model_fns(cfg: ModelConfig):
         "loss": dec_lib.lm_loss,
         "forward": dec_lib.lm_forward,
         "decode": dec_lib.lm_decode_step,
+        "chunk": dec_lib.lm_chunk_step,
         "init_cache": dec_lib.init_cache,
     }
 

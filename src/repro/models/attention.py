@@ -20,6 +20,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.common.paged import PagedLeaf, is_paged, token_to_pool
 from repro.common.types import LayerSpec, ModelConfig
 from repro.models import rope as rope_lib
 from repro.models.norms import rmsnorm, rmsnorm_init
@@ -278,12 +279,18 @@ def _to_ring_per_row(k: jax.Array, lengths: jax.Array, w: int) -> jax.Array:
 
 def attention_decode(params, x: jax.Array, cache: Tuple[jax.Array, jax.Array],
                      *, spec: LayerSpec, cfg: ModelConfig,
-                     pos: jax.Array, par: Parallelism = NO_PARALLEL):
-    """x: [B, 1, d]; cache k/v: [B, S_cache, KH, hd]; pos: [B] int32 (index
-    of the new token).  Returns (out [B,1,d], updated cache).
+                     pos: jax.Array, par: Parallelism = NO_PARALLEL,
+                     block_table: Optional[jax.Array] = None,
+                     kv_max_len: Optional[int] = None):
+    """x: [B, 1, d]; cache k/v: [B, S_cache, KH, hd] dense, or ``PagedLeaf``
+    block pools [N, bs, KH, hd] addressed through ``block_table``; pos: [B]
+    int32 (index of the new token).  ``kv_max_len`` (static, host-known
+    upper bound on pos+1) lets the paged kernel skip dead blocks.
+    Returns (out [B,1,d], updated cache).
 
     For windowed layers the cache is a ring buffer (S_cache == window) and
-    the new k/v is written at slot pos % W; otherwise at slot pos.
+    the new k/v is written at slot pos % W; otherwise at slot pos (for a
+    paged cache, at the pool row the block table maps pos to).
     """
     B = x.shape[0]
     positions = pos[:, None]                          # [B,1]
@@ -293,6 +300,11 @@ def attention_decode(params, x: jax.Array, cache: Tuple[jax.Array, jax.Array],
     q = q[:, 0]                                       # [B,H,hd]
     H = q.shape[1]
     k_cache, v_cache = cache
+    if is_paged(k_cache):
+        return _paged_decode(params, q, k_new[:, 0], v_new[:, 0],
+                             k_cache, v_cache, spec=spec, cfg=cfg, pos=pos,
+                             par=par, block_table=block_table,
+                             kv_max_len=kv_max_len, out_dtype=x.dtype)
     S_cache = k_cache.shape[1]
     KH = k_cache.shape[2]
     G = H // KH
@@ -337,6 +349,155 @@ def _scatter_cache(cache: jax.Array, new: jax.Array, slot: jax.Array,
     upd = cache.at[jnp.arange(cache.shape[0]), slot].set(
         new.astype(cache.dtype))
     return par.cs(upd, "batch", "kv_seq", "kv_heads", None)
+
+
+# ---------------------------------------------------------------------------
+# paged decode / chunked prefill (block-pool caches)
+# ---------------------------------------------------------------------------
+
+def _paged_write(pool_k: jax.Array, pool_v: jax.Array, k_new: jax.Array,
+                 v_new: jax.Array, w_idx: jax.Array):
+    """Scatter new K/V rows into flattened pools at pool rows ``w_idx``.
+    k_new/v_new: [..., KH, hd] with leading dims matching w_idx; returns
+    (flat_k, flat_v) [N*bs, KH, hd]."""
+    flat_k = pool_k.reshape((-1,) + pool_k.shape[2:])
+    flat_v = pool_v.reshape((-1,) + pool_v.shape[2:])
+    idx = w_idx.reshape(-1)
+    flat_k = flat_k.at[idx].set(
+        k_new.astype(flat_k.dtype).reshape((-1,) + k_new.shape[-2:]))
+    flat_v = flat_v.at[idx].set(
+        v_new.astype(flat_v.dtype).reshape((-1,) + v_new.shape[-2:]))
+    return flat_k, flat_v
+
+
+def _paged_gather(flat: jax.Array, block_table: jax.Array, bs: int,
+                  par: Parallelism) -> jax.Array:
+    """Assemble the contiguous per-slot view [B, S_cap, KH, hd] from a
+    flattened pool through the block table (the jnp reference path; the
+    Pallas kernel streams blocks without materializing this)."""
+    B, nmax = block_table.shape
+    j = jnp.arange(nmax * bs, dtype=jnp.int32)
+    idx = token_to_pool(block_table, jnp.broadcast_to(j[None], (B, j.size)),
+                        bs)
+    return par.cs(flat[idx], "batch", "kv_seq", "kv_heads", None)
+
+
+def _paged_decode(params, q, k_new, v_new, k_leaf: PagedLeaf,
+                  v_leaf: PagedLeaf, *, spec: LayerSpec, cfg: ModelConfig,
+                  pos: jax.Array, par: Parallelism,
+                  block_table: jax.Array, kv_max_len: Optional[int],
+                  out_dtype):
+    """Decode step against block pools.  q: [B,H,hd]; k_new/v_new:
+    [B,KH,hd]; pools [N, bs, KH, hd]; block_table [B, max_blocks_per_seq].
+
+    Only full-attention leaves are ever paged (rings stay dense; a
+    windowed layer is paged only when its window covers engine capacity,
+    where the window mask is vacuous for every reachable position), so the
+    causal mask j <= pos is the whole story.  The jnp path gathers the
+    same [B, S, KH, hd] view the dense cache stores and runs the identical
+    grouped-GQA einsum — bit-for-bit equal to the dense decode path.
+    """
+    if block_table is None:
+        raise ValueError("paged cache leaf but no block_table passed")
+    pool_k, pool_v = k_leaf.pool, v_leaf.pool
+    bs = pool_k.shape[1]
+    B, H = q.shape[:2]
+    KH = pool_k.shape[2]
+    G = H // KH
+    w_idx = token_to_pool(block_table, pos[:, None], bs)[:, 0]
+    flat_k, flat_v = _paged_write(pool_k, pool_v, k_new, v_new, w_idx)
+    new_cache = (PagedLeaf(flat_k.reshape(pool_k.shape)),
+                 PagedLeaf(flat_v.reshape(pool_v.shape)))
+    if cfg.use_pallas and par.mesh is None and spec.attn_logit_softcap is None:
+        from repro.kernels import ops as kops
+        # kv_max_len truncates the block sweep to the live prefix: a
+        # short batch never DMAs the dead tail of the pool
+        ctx = kops.paged_decode_attention(
+            q, flat_k.reshape(pool_k.shape), flat_v.reshape(pool_v.shape),
+            block_table, pos + 1, max_len=kv_max_len)
+    else:
+        k_g = _paged_gather(flat_k, block_table, bs, par)
+        v_g = _paged_gather(flat_v, block_table, bs, par)
+        S_cap = k_g.shape[1]
+        scale = q.shape[-1] ** -0.5
+        qg = (q * scale).astype(k_g.dtype).reshape(B, KH, G, -1)
+        s = jnp.einsum("bngd,bsnd->bngs", qg, k_g,
+                       preferred_element_type=jnp.float32)
+        s = _softcap(s, spec.attn_logit_softcap)
+        j = jnp.arange(S_cap, dtype=jnp.int32)
+        mask = j[None, :] <= pos[:, None]
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        s = par.cs(s, "batch", None, None, "kv_seq")
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        ctx = jnp.einsum("bngs,bsnd->bngd", (p / l).astype(v_g.dtype),
+                         v_g, preferred_element_type=jnp.float32)
+        ctx = ctx.reshape(B, H, -1)
+    ctx = ctx.astype(out_dtype)
+    out = jnp.einsum("bhk,hkd->bd", ctx, params["wo"])[:, None]
+    out = par.cs(out, "batch", None, "d_model")
+    return out, new_cache
+
+
+def attention_chunk(params, x: jax.Array, cache, *, spec: LayerSpec,
+                    cfg: ModelConfig, pos: jax.Array,
+                    par: Parallelism = NO_PARALLEL,
+                    block_table: Optional[jax.Array] = None):
+    """Chunked-prefill step: C new tokens per row against a paged cache.
+
+    x: [B, C, d]; cache: (PagedLeaf, PagedLeaf) pools; pos: [B] absolute
+    position of each row's first chunk token.  Writes the chunk's K/V
+    through the block table, then attends every chunk row causally against
+    the full paged cache (which now contains the chunk itself) — the C=1
+    decode step generalized to a block of queries, so a long prompt can be
+    fed ``prefill_chunk`` tokens at a time between decode steps.
+
+    Full-attention (non-ring) layers only: chunked prefill is gated off
+    for windowed/recurrent/MoE architectures by the engine.  Rows past a
+    prompt's true length write to already-owned or trash blocks and their
+    key positions exceed every real query position, so padding in the
+    final chunk is invisible — exactly the bucketed-prefill argument.
+    """
+    if block_table is None:
+        raise ValueError("attention_chunk requires a block_table")
+    B, C, _ = x.shape
+    positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None]  # [B,C]
+    rope_positions = positions
+    if spec.rope == "mrope":
+        rope_positions = jnp.broadcast_to(positions[None], (3, B, C))
+    q, k_new, v_new = _project_qkv(params, x, spec, cfg, rope_positions, par)
+    H = q.shape[2]
+    k_leaf, v_leaf = cache
+    pool_k, pool_v = k_leaf.pool, v_leaf.pool
+    bs = pool_k.shape[1]
+    KH = pool_k.shape[2]
+    G = H // KH
+    w_idx = token_to_pool(block_table, positions, bs)            # [B,C]
+    flat_k, flat_v = _paged_write(pool_k, pool_v, k_new, v_new, w_idx)
+    new_cache = (PagedLeaf(flat_k.reshape(pool_k.shape)),
+                 PagedLeaf(flat_v.reshape(pool_v.shape)))
+    k_g = _paged_gather(flat_k, block_table, bs, par)
+    v_g = _paged_gather(flat_v, block_table, bs, par)
+    S_cap = k_g.shape[1]
+    scale = q.shape[-1] ** -0.5
+    qg = (q * scale).astype(k_g.dtype).reshape(B, C, KH, G, -1)
+    s = jnp.einsum("bcngd,bsnd->bcngs", qg, k_g,
+                   preferred_element_type=jnp.float32)
+    s = _softcap(s, spec.attn_logit_softcap)
+    j = jnp.arange(S_cap, dtype=jnp.int32)
+    mask = j[None, None, :] <= positions[:, :, None]             # [B,C,S]
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    s = par.cs(s, "batch", None, None, None, "kv_seq")
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    ctx = jnp.einsum("bcngs,bsnd->bcngd", (p / l).astype(v_g.dtype),
+                     v_g, preferred_element_type=jnp.float32)
+    ctx = ctx.reshape(B, C, H, -1).astype(x.dtype)
+    out = jnp.einsum("bchk,hkd->bcd", ctx, params["wo"])
+    out = par.cs(out, "batch", None, "d_model")
+    return out, new_cache
 
 
 # ---------------------------------------------------------------------------

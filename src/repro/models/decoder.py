@@ -232,16 +232,16 @@ def lm_forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
 # decode
 # ---------------------------------------------------------------------------
 
-def lm_decode_step(params, cache, tokens: jax.Array, pos: jax.Array,
-                   cfg: ModelConfig, par: Parallelism = NO_PARALLEL):
-    """tokens: [B] int32; pos: [B] int32 (cache write index).
-    Returns (logits [B, V], updated cache)."""
-    h = _embed(params, tokens[:, None], cfg, pos[:, None], par)
+def _step_layers(params, cache, h, pos, cfg: ModelConfig, par: Parallelism,
+                 mode: str, block_table, kv_max_len=None):
+    """Run the (prefix, unit-scan, suffix) stack in decode or chunk mode."""
     new_prefix = []
     for i, nm in enumerate(cfg.pattern_prefix):
         h, c, _ = layer_apply(params["prefix"][i], h, cfg=cfg,
-                              spec=cfg.spec(nm), mode="decode", pos=pos,
-                              cache=cache["prefix"][i], par=par)
+                              spec=cfg.spec(nm), mode=mode, pos=pos,
+                              cache=cache["prefix"][i], par=par,
+                              block_table=block_table,
+                              kv_max_len=kv_max_len)
         new_prefix.append(c)
 
     new_unit = cache["unit"]
@@ -251,8 +251,10 @@ def lm_decode_step(params, cache, tokens: jax.Array, pos: jax.Array,
             cs_out = []
             for j, nm in enumerate(cfg.pattern_unit):
                 x, c, _ = layer_apply(lps[j], x, cfg=cfg, spec=cfg.spec(nm),
-                                      mode="decode", pos=pos,
-                                      cache=cs_in[j], par=par)
+                                      mode=mode, pos=pos,
+                                      cache=cs_in[j], par=par,
+                                      block_table=block_table,
+                                      kv_max_len=kv_max_len)
                 cs_out.append(c)
             return x, tuple(cs_out)
 
@@ -261,13 +263,45 @@ def lm_decode_step(params, cache, tokens: jax.Array, pos: jax.Array,
     new_suffix = []
     for i, nm in enumerate(cfg.pattern_suffix):
         h, c, _ = layer_apply(params["suffix"][i], h, cfg=cfg,
-                              spec=cfg.spec(nm), mode="decode", pos=pos,
-                              cache=cache["suffix"][i], par=par)
+                              spec=cfg.spec(nm), mode=mode, pos=pos,
+                              cache=cache["suffix"][i], par=par,
+                              block_table=block_table,
+                              kv_max_len=kv_max_len)
         new_suffix.append(c)
+    return h, {"prefix": tuple(new_prefix), "unit": new_unit,
+               "suffix": tuple(new_suffix)}
 
+
+def lm_decode_step(params, cache, tokens: jax.Array, pos: jax.Array,
+                   cfg: ModelConfig, par: Parallelism = NO_PARALLEL,
+                   block_table: Optional[jax.Array] = None,
+                   kv_max_len: Optional[int] = None):
+    """tokens: [B] int32; pos: [B] int32 (cache write index).
+    ``block_table`` [B, max_blocks_per_seq] addresses paged cache leaves;
+    ``kv_max_len`` (static) bounds the paged kernel's block sweep.
+    Returns (logits [B, V], updated cache)."""
+    h = _embed(params, tokens[:, None], cfg, pos[:, None], par)
+    h, new_cache = _step_layers(params, cache, h, pos, cfg, par, "decode",
+                                block_table, kv_max_len)
     logits = _head(params, h[:, 0], cfg, par)
-    return logits, {"prefix": tuple(new_prefix), "unit": new_unit,
-                    "suffix": tuple(new_suffix)}
+    return logits, new_cache
+
+
+def lm_chunk_step(params, cache, tokens: jax.Array, pos: jax.Array,
+                  cfg: ModelConfig, par: Parallelism = NO_PARALLEL,
+                  block_table: Optional[jax.Array] = None):
+    """Chunked-prefill step: tokens [B, C] appended at positions
+    pos[:, None] + arange(C) against a paged cache.  Returns
+    (logits [B, C, V], updated cache).  Full-attention archs only (the
+    engine gates recurrent/MoE/windowed configs to whole-prompt prefill).
+    """
+    B, C = tokens.shape
+    positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+    h = _embed(params, tokens, cfg, positions, par)
+    h, new_cache = _step_layers(params, cache, h, pos, cfg, par, "chunk",
+                                block_table)
+    logits = _head(params, h, cfg, par)
+    return logits, new_cache
 
 
 def init_cache(cfg: ModelConfig, batch: int, seq_len: int,

@@ -64,16 +64,25 @@ def _norm(cfg, params, name, x):
 
 
 def _mixer(params, h, *, cfg, spec, mode, positions, pos, cache, par,
-           lengths=None):
+           lengths=None, block_table=None, kv_max_len=None):
     """Dispatch the sequence mixer. Returns (out, new_cache)."""
     if spec.mixer == "gqa":
         if mode == "decode":
             return attn.attention_decode(params, h, cache, spec=spec,
-                                         cfg=cfg, pos=pos, par=par)
+                                         cfg=cfg, pos=pos, par=par,
+                                         block_table=block_table,
+                                         kv_max_len=kv_max_len)
+        if mode == "chunk":
+            return attn.attention_chunk(params, h, cache, spec=spec,
+                                        cfg=cfg, pos=pos, par=par,
+                                        block_table=block_table)
         return attn.attention_apply(params, h, spec=spec, cfg=cfg,
                                     positions=positions, par=par,
                                     return_cache=(mode == "prefill"),
                                     lengths=lengths)
+    if mode == "chunk":
+        raise ValueError(f"chunked prefill unsupported for mixer "
+                         f"{spec.mixer!r}")
     if spec.mixer == "mla":
         if mode == "decode":
             return mla_lib.mla_decode(params, h, cache, spec=spec, cfg=cfg,
@@ -101,7 +110,9 @@ def layer_apply(params, x: jax.Array, *, cfg: ModelConfig, spec: LayerSpec,
                 cache: Any = None,
                 enc_states: Any = None,
                 par: Parallelism = NO_PARALLEL,
-                lengths: Optional[jax.Array] = None):
+                lengths: Optional[jax.Array] = None,
+                block_table: Optional[jax.Array] = None,
+                kv_max_len: Optional[int] = None):
     """One transformer layer. Returns (x, cache, aux).
 
     For cross-attention layers the cache is (self_cache, enc_kv): the
@@ -111,6 +122,9 @@ def layer_apply(params, x: jax.Array, *, cfg: ModelConfig, spec: LayerSpec,
 
     ``lengths`` [B] marks per-row true lengths of a right-padded prefill
     batch (bucketed serving); only ring-buffer cache construction uses it.
+    ``block_table`` [B, max_blocks_per_seq] addresses paged cache leaves
+    in decode/chunk mode (mode 'chunk' = multi-token chunked prefill
+    against the cache; gqa layers only).
     """
     aux = jnp.zeros((), jnp.float32)
     self_cache, enc_kv = (cache if (spec.cross_attn and cache is not None)
@@ -119,7 +133,8 @@ def layer_apply(params, x: jax.Array, *, cfg: ModelConfig, spec: LayerSpec,
     h = _norm(cfg, params, "ln1", x)
     h, new_cache = _mixer(params["mixer"], h, cfg=cfg, spec=spec, mode=mode,
                           positions=positions, pos=pos, cache=self_cache,
-                          par=par, lengths=lengths)
+                          par=par, lengths=lengths, block_table=block_table,
+                          kv_max_len=kv_max_len)
     if cfg.post_norm:
         h = _norm(cfg, params, "ln1_post", h)
     x = x + h

@@ -1,50 +1,132 @@
-"""KV-cache utilities for serving.
+"""KV-cache utilities for serving: structure probing, batched slot
+insertion, and the block-pool paged cache.
 
 The engine cache is whatever pytree the architecture's ``init_cache``
 builds: dense decoders nest per-layer tuples under prefix/unit/suffix,
 PT models stack [R, D, n_tracks, ...] leading dims, rings/SSM states have
 no sequence axis at all.  Rather than hard-coding each layout, the
-utilities here discover structure *by probing*: ``batch_axes`` runs
-``init_cache`` under ``jax.eval_shape`` at two batch sizes and diffs leaf
-shapes, which pins down the batch axis of every leaf regardless of how
-many stacking dims sit in front of it.
+utilities here discover structure *by probing*: ``batch_axes`` /
+``seq_axes`` run ``init_cache`` under ``jax.eval_shape`` at two batch
+sizes / two sequence lengths and diff leaf shapes, which pins down the
+batch and sequence axis of every leaf regardless of how many stacking
+dims sit in front of it.  Each probe runs at two settings of the *other*
+parameter and cross-checks, so a cache dim that happens to equal the
+probe value (track/window dims of size 8 in small test configs) cannot
+be mistaken for the probed axis.
 
   batch_axes(init_cache_fn, cfg)       -> pytree of per-leaf batch axis
-  insert_rows(dst, src, axes, slots)   -> batched slot insertion, padding
-      every non-batch dim of src up to dst (bucketed prefill caches are
-      shorter than engine capacity; rings shorter than the window pad to
-      it, which is layout-exact for positions < window)
+  seq_axes(init_cache_fn, cfg)         -> pytree of per-leaf seq axis|None
+  insert_rows(dst, src, axes, slots)   -> batched slot insertion: ONE
+      scatter per leaf (``moveaxis`` + ``.at[slots].set``), padding every
+      non-batch dim of src up to dst (bucketed prefill caches are shorter
+      than engine capacity; rings shorter than the window pad to it,
+      which is layout-exact for positions < window)
+
+``PagedKVCache`` owns the vLLM-style block pool: every leaf with a
+sequence axis that reaches engine capacity is re-laid-out as
+``[..., num_blocks, block_size, ...]`` (batch axis -> block axis, seq
+axis -> within-block offset) and indexed through a per-slot block table;
+ring buffers and O(1) recurrent states keep their dense per-slot layout.
+Block 0 is reserved as a trash block: table entries of unallocated
+regions and released slots point at it, so stray writes (padded bucket
+rows, idle decode lanes) can never corrupt live blocks.
 
 ``pad_cache`` / ``insert_sequence`` are the original single-sequence
 helpers, kept for the dense smoke tests.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.common.paged import token_to_pool
 from repro.common.types import LayerSpec, ModelConfig
 
 
 # ---------------------------------------------------------------------------
-# structure discovery + batched insertion (the engine path)
+# structure discovery (probes; never allocate)
 # ---------------------------------------------------------------------------
+
+_PROBE_B = (2, 3)          # batch sizes diffed by batch_axes
+_PROBE_S = (8, 13)         # seq lengths: two, so a window/track dim that
+                           # happens to equal one of them can't alias
+
+
+def _diff_axes(x, y) -> List[int]:
+    return [i for i, (p, q) in enumerate(zip(x.shape, y.shape)) if p != q]
+
 
 def batch_axes(init_cache_fn: Callable, cfg: ModelConfig) -> Any:
     """Per-leaf batch-axis index of the cache pytree, found by diffing
-    ``eval_shape`` at two batch sizes (never allocates)."""
-    a = jax.eval_shape(lambda: init_cache_fn(cfg, 2, 8))
-    b = jax.eval_shape(lambda: init_cache_fn(cfg, 3, 8))
+    ``eval_shape`` at two batch sizes.  The diff is taken at BOTH probe
+    sequence lengths and must agree — a leaf whose shape responds to the
+    batch size in more than one place (or differently per length) is
+    ambiguous and raises."""
+    def axes_at(s):
+        a = jax.eval_shape(lambda: init_cache_fn(cfg, _PROBE_B[0], s))
+        b = jax.eval_shape(lambda: init_cache_fn(cfg, _PROBE_B[1], s))
 
-    def diff(x, y):
-        axes = [i for i, (p, q) in enumerate(zip(x.shape, y.shape)) if p != q]
-        if len(axes) != 1:
-            raise ValueError(f"ambiguous batch axis for leaf {x.shape}")
-        return axes[0]
+        def diff(x, y):
+            axes = _diff_axes(x, y)
+            if len(axes) != 1:
+                raise ValueError(f"ambiguous batch axis for leaf {x.shape}")
+            return axes[0]
 
-    return jax.tree_util.tree_map(diff, a, b)
+        return jax.tree_util.tree_map(diff, a, b)
+
+    first, second = (axes_at(s) for s in _PROBE_S)
+    if first != second:
+        raise ValueError(f"batch-axis probe disagrees across sequence "
+                         f"lengths {_PROBE_S}: {first} vs {second}")
+    return first
+
+
+def seq_axes(init_cache_fn: Callable, cfg: ModelConfig) -> Any:
+    """Per-leaf sequence-axis index (or None for O(1) state / ring
+    buffers shorter than both probe lengths), found by diffing
+    ``eval_shape`` at two sequence lengths; cross-checked at both probe
+    batch sizes."""
+    def axes_at(b):
+        a = jax.eval_shape(lambda: init_cache_fn(cfg, b, _PROBE_S[0]))
+        s = jax.eval_shape(lambda: init_cache_fn(cfg, b, _PROBE_S[1]))
+
+        def diff(x, y):
+            axes = _diff_axes(x, y)
+            if len(axes) > 1:
+                raise ValueError(f"ambiguous seq axis for leaf {x.shape}")
+            return axes[0] if axes else None
+
+        return jax.tree_util.tree_map(
+            diff, a, s, is_leaf=lambda l: l is None)
+
+    first, second = (axes_at(b) for b in _PROBE_B)
+    if first != second:
+        raise ValueError(f"seq-axis probe disagrees across batch sizes "
+                         f"{_PROBE_B}: {first} vs {second}")
+    return first
+
+
+# ---------------------------------------------------------------------------
+# batched insertion (the engine path)
+# ---------------------------------------------------------------------------
+
+def _pad_to(d: jax.Array, s: jax.Array, ax: int) -> jax.Array:
+    """Zero-pad every non-batch dim of src up to dst's size."""
+    pad = [(0, 0)] * s.ndim
+    for i in range(s.ndim):
+        if i != ax and s.shape[i] < d.shape[i]:
+            pad[i] = (0, d.shape[i] - s.shape[i])
+    return jnp.pad(s.astype(d.dtype), pad)
+
+
+def _put_rows(d: jax.Array, s: jax.Array, ax: int, slots) -> jax.Array:
+    """One batched scatter: src rows -> dst batch slots along axis ax."""
+    s = _pad_to(d, s, ax)
+    out = jnp.moveaxis(d, ax, 0).at[slots].set(jnp.moveaxis(s, ax, 0))
+    return jnp.moveaxis(out, 0, ax)
 
 
 def insert_rows(dst: Any, src: Any, axes: Any, slots: Sequence) -> Any:
@@ -55,25 +137,192 @@ def insert_rows(dst: Any, src: Any, axes: Any, slots: Sequence) -> Any:
     to dst first: a bucketed prefill cache covers positions [0, bucket)
     of a [0, capacity) cache, and a short full-layout cache padded to a
     ring of size W coincides with ring order for all positions < W.
-    Traceable (slots may be a traced [n] array), so the engine jits one
-    insertion program per (n, bucket) shape.
+    Traceable (slots may be a traced [n] array) and a single
+    ``.at[slots].set`` scatter per leaf — no per-row slice-update loop.
     """
-    n = len(slots) if hasattr(slots, "__len__") else slots.shape[0]
+    slots = jnp.asarray(slots, jnp.int32)
+    return jax.tree_util.tree_map(
+        lambda d, s, ax: _put_rows(d, s, ax, slots), dst, src, axes)
 
-    def put(d, s, ax):
-        pad = [(0, 0)] * s.ndim
-        for i in range(s.ndim):
-            if i != ax and s.shape[i] < d.shape[i]:
-                pad[i] = (0, d.shape[i] - s.shape[i])
-        s = jnp.pad(s.astype(d.dtype), pad)
-        for r in range(n):
-            row = jax.lax.dynamic_slice_in_dim(s, r, 1, axis=ax)
-            start = [0] * d.ndim
-            start[ax] = slots[r]
-            d = jax.lax.dynamic_update_slice(d, row, tuple(start))
-        return d
 
-    return jax.tree_util.tree_map(put, dst, src, axes)
+# ---------------------------------------------------------------------------
+# paged block-pool cache
+# ---------------------------------------------------------------------------
+
+def paged_insert_rows(dst: Any, src: Any, axes: Any, seqs: Any,
+                      pageable: Any, slots, table_rows: jax.Array,
+                      block_size: int) -> Any:
+    """Scatter a prefill cache into a paged engine cache.
+
+    Dense leaves (rings, recurrent state) take the ``insert_rows`` path
+    into batch ``slots``.  Pageable leaves scatter their [n, L, ...] token
+    rows through ``table_rows`` [n, max_blocks_per_seq] into the block
+    pool: one flat-index scatter per leaf.  Rows beyond a request's
+    allocation resolve to the trash block by construction (table entries
+    default to 0).
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+
+    def put(d, s, bax, sax, pg):
+        if not pg:
+            return _put_rows(d, s, bax, slots)
+        # pool view [N, bs, ...rest] / src view [n, L, ...rest]
+        dm = jnp.moveaxis(jnp.moveaxis(d, bax, 0), sax if sax > bax else sax + 1, 1)
+        sm = jnp.moveaxis(jnp.moveaxis(s, bax, 0), sax if sax > bax else sax + 1, 1)
+        n, L = sm.shape[:2]
+        rest = dm.shape[2:]
+        j = jnp.arange(L, dtype=jnp.int32)[None, :]            # [1, L]
+        idx = token_to_pool(table_rows, jnp.broadcast_to(j, (n, L)),
+                            block_size)                        # [n, L]
+        flat = dm.reshape((-1,) + rest).at[idx.reshape(-1)].set(
+            sm.astype(d.dtype).reshape((-1,) + rest))
+        out = flat.reshape(dm.shape)
+        return jnp.moveaxis(jnp.moveaxis(out, 1, sax if sax > bax else sax + 1), 0, bax)
+
+    return jax.tree_util.tree_map(put, dst, src, axes, seqs, pageable,
+                                  is_leaf=lambda l: l is None)
+
+
+class PagedKVCache:
+    """vLLM-style block-pool KV cache over an arbitrary cache pytree.
+
+    Every leaf whose probed sequence axis reaches engine capacity is laid
+    out as a pool (batch axis -> ``num_blocks``, seq axis ->
+    ``block_size``); ring buffers and O(1) recurrent states keep their
+    dense per-slot layout and ride along unchanged.  All layers share one
+    block table (classic paged attention: same block ids index every
+    layer's pool), so a slot's memory cost is ``blocks * block_size``
+    tokens instead of a full ``max_seq_len`` reservation.
+
+    Host-side API (pure Python, no device sync):
+      can_allocate(n)      -> enough free blocks for n tokens?
+      allocate(slot, n)    -> reserve blocks covering positions [0, n)
+      append(slot, n)      -> grow slot's allocation to cover [0, n)
+      free_slot(slot)      -> reclaim blocks; table row -> trash block
+      table() / table_rows(slots) -> device block-table views
+      utilization()        -> pool occupancy / token-utilization stats
+
+    Block 0 is reserved as the trash block: zeroed table rows send writes
+    from idle decode lanes and padded bucket rows there, never into a
+    block that another request owns.
+    """
+
+    def __init__(self, init_cache_fn: Callable, cfg: ModelConfig, *,
+                 max_slots: int, max_seq_len: int, block_size: int = 16,
+                 num_blocks: Optional[int] = None):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_seq_len = max_seq_len
+        self.block_size = block_size
+        self.blocks_per_seq = -(-max_seq_len // block_size)
+        if num_blocks is None:          # same capacity as contiguous
+            num_blocks = max_slots * self.blocks_per_seq
+        self.num_blocks = num_blocks + 1            # +1: trash block 0
+
+        self.axes = batch_axes(init_cache_fn, cfg)
+        self.seq = seq_axes(init_cache_fn, cfg)
+        full = jax.eval_shape(
+            lambda: init_cache_fn(cfg, max_slots, max_seq_len))
+        # pageable: the leaf's sequence axis grows all the way to engine
+        # capacity (rings clamp at their window; O(1) states have none)
+        self.pageable = jax.tree_util.tree_map(
+            lambda leaf, sax: sax is not None
+            and leaf.shape[sax] == max_seq_len,
+            full, self.seq, is_leaf=lambda l: l is None)
+
+        def build(leaf, bax, sax, pg):
+            if not pg:
+                return jnp.zeros(leaf.shape, leaf.dtype)
+            shape = list(leaf.shape)
+            shape[bax] = self.num_blocks
+            shape[sax] = block_size
+            return jnp.zeros(tuple(shape), leaf.dtype)
+
+        self.data = jax.tree_util.tree_map(build, full, self.axes, self.seq,
+                                           self.pageable,
+                                           is_leaf=lambda l: l is None)
+        if not any(jax.tree_util.tree_leaves(self.pageable)):
+            raise ValueError(f"{cfg.name}: no pageable cache leaves "
+                             "(every layer is a ring or O(1) state)")
+
+        # host-side block accounting
+        self._free: List[int] = list(range(self.num_blocks - 1, 0, -1))
+        self._blocks: List[List[int]] = [[] for _ in range(max_slots)]
+        self._tokens: List[int] = [0] * max_slots
+        self.table_np = np.zeros((max_slots, self.blocks_per_seq), np.int32)
+        self.version = 0          # bumped on any table change (allocate/
+                                  # append/free) so device copies can cache
+
+    # -- block accounting ----------------------------------------------
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return self.blocks_for(n_tokens) <= len(self._free)
+
+    def allocate(self, slot: int, n_tokens: int) -> None:
+        """Reserve blocks for positions [0, n_tokens) of ``slot``."""
+        if self._blocks[slot]:
+            raise ValueError(f"slot {slot} already allocated")
+        self.append(slot, n_tokens)
+
+    def append(self, slot: int, n_tokens: int) -> None:
+        """Grow ``slot``'s allocation to cover positions [0, n_tokens)."""
+        if n_tokens > self.max_seq_len:
+            raise ValueError(f"{n_tokens} tokens exceed capacity "
+                             f"{self.max_seq_len}")
+        need = self.blocks_for(n_tokens) - len(self._blocks[slot])
+        if need > len(self._free):
+            raise MemoryError(
+                f"paged KV cache out of blocks: need {need}, "
+                f"free {len(self._free)}/{self.num_blocks - 1}")
+        for _ in range(max(0, need)):
+            b = self._free.pop()
+            self.table_np[slot, len(self._blocks[slot])] = b
+            self._blocks[slot].append(b)
+        if need > 0:
+            self.version += 1
+        self._tokens[slot] = max(self._tokens[slot], n_tokens)
+
+    def free_slot(self, slot: int) -> None:
+        """Reclaim ``slot``'s blocks.  The table row is zeroed so decode
+        writes from the now-idle lane land in the trash block, never in a
+        block that has been handed to another request."""
+        self._free.extend(reversed(self._blocks[slot]))
+        self._blocks[slot] = []
+        self._tokens[slot] = 0
+        self.table_np[slot, :] = 0
+        self.version += 1
+
+    # -- device views ---------------------------------------------------
+    def table(self) -> jax.Array:
+        return jnp.asarray(self.table_np)
+
+    def table_rows(self, slots: Sequence[int]) -> jax.Array:
+        return jnp.asarray(self.table_np[list(slots)])
+
+    # -- stats ----------------------------------------------------------
+    def pool_bytes(self) -> int:
+        return sum(l.size * l.dtype.itemsize
+                   for l, pg in zip(jax.tree_util.tree_leaves(self.data),
+                                    jax.tree_util.tree_leaves(self.pageable))
+                   if pg)
+
+    def utilization(self) -> Dict[str, Any]:
+        used = (self.num_blocks - 1) - len(self._free)
+        tokens = sum(self._tokens)
+        return {
+            "num_blocks": self.num_blocks - 1,
+            "used_blocks": used,
+            "block_utilization": used / max(1, self.num_blocks - 1),
+            "tokens_stored": tokens,
+            "token_utilization": (tokens / (used * self.block_size)
+                                  if used else 0.0),
+        }
 
 
 # ---------------------------------------------------------------------------

@@ -8,29 +8,36 @@ The engine is split along the line every production serving stack draws
                 request lifecycle QUEUED -> PREFILL -> DECODE -> DONE,
                 slot table for the fixed decode batch.
   ModelRunner — everything that touches the device.  Owns the KV cache,
-                the jitted prefill / decode programs and the cache
-                insertion program; knows nothing about queues.
+                the jitted prefill / chunk / decode programs and the
+                cache insertion program; knows nothing about queues.
   Engine      — the glue loop (submit / step / run / generate) plus
                 streaming callbacks and aggregate serving metrics.
 
-Throughput/compile-stability properties (the PR's point):
+Memory + latency structure (this PR's point):
 
-  * Bucketed prefill: prompts are right-padded to power-of-two buckets,
-    so the engine compiles O(log max_len) prefill variants instead of one
-    per distinct prompt length.  Causality keeps padded keys invisible to
-    real query rows; per-row true lengths are threaded into the forward
-    pass so ring-buffer (sliding-window) caches are built from the real
-    last-W positions.  Architectures with recurrent state (mamba /
-    rg-lru) prefill at exact length — padding would corrupt the carried
-    state — and the bucket function degrades to identity for them.
-  * Batched prefill admission: all requests admitted in one round that
-    share a bucket run as ONE batched prefill call and are scattered
-    into their slots by a single jitted insertion program.
-  * Device-side batched sampling: the decode step jits model + sampler +
-    done-flag computation into one program with per-slot sampling params
-    as traced arrays.  The host sees exactly ONE transfer per decode
-    step — a packed [2, slots] int32 array of (token, done) — instead of
-    a per-slot ``int(sample(...))`` round-trip.
+  * Paged KV cache: full-length KV leaves live in a shared block pool
+    ([num_blocks, block_size, ...] per layer, discovered by the cache
+    shape probe — the PT [R, D, n_tracks, ...] stacking pages like any
+    other layout) addressed through per-slot block tables.  A request
+    holds ceil(tokens/block_size) blocks instead of a max_seq_len
+    reservation, so short and long requests share HBM and the decode
+    batch is bounded by actual token usage.  Ring buffers and O(1)
+    recurrent state stay dense per-slot; architectures with non-GQA
+    mixers fall back to the contiguous cache automatically.  Finished
+    slots return their blocks to the pool the moment the packed
+    (token, done) transfer lands (``sampler.sample_step``).
+  * Chunked prefill: with ``prefill_chunk=C`` set (full-attention,
+    non-MoE archs), prompts are fed C tokens per engine step through the
+    paged cache and interleaved with decode — a 32k prompt no longer
+    stalls every decoding request, and TTFT of short queued requests
+    stays flat while long prefills are in flight.
+  * Bucketed prefill (the default path, and the fallback for
+    length-sensitive archs): prompts right-padded to power-of-two
+    buckets, O(log max_len) compile variants, same-bucket admissions
+    batched into ONE prefill call.
+  * Device-side batched sampling: model + per-slot sampling + done flags
+    jit into one program; the host sees exactly ONE transfer per decode
+    step — a packed [2, slots] int32 array of (token, done).
 """
 from __future__ import annotations
 
@@ -44,11 +51,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.paged import unwrap_paged, wrap_paged
 from repro.common.types import ModelConfig
 from repro.launch import steps as steps_lib
 from repro.runtime.parallel import NO_PARALLEL
-from repro.serving.cache import batch_axes, insert_rows
-from repro.serving.sampler import SampleParams, sample_batched, stack_params
+from repro.serving.cache import (PagedKVCache, batch_axes, insert_rows,
+                                 paged_insert_rows)
+from repro.serving.sampler import (SampleParams, sample_batched, sample_step,
+                                   stack_params)
 
 RECURRENT_MIXERS = ("mamba", "rglru")
 
@@ -72,6 +82,7 @@ class Request:
     state: RequestState = RequestState.QUEUED
     output: List[int] = dataclasses.field(default_factory=list)
     truncated: bool = False            # max_new_tokens clamped to capacity
+    prefilled: int = 0                 # prompt tokens consumed (chunked)
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
@@ -98,6 +109,7 @@ class EngineMetrics:
         self.tpots: List[float] = []
         self.prompt_tokens = 0
         self.output_tokens = 0
+        self.max_active = 0            # peak concurrently-running requests
         self.t_start: Optional[float] = None
         self.t_last: Optional[float] = None
 
@@ -128,6 +140,7 @@ class EngineMetrics:
             "requests": len(self.ttfts),
             "prompt_tokens": self.prompt_tokens,
             "output_tokens": self.output_tokens,
+            "max_active": self.max_active,
             "elapsed_s": elapsed,
             "throughput_tok_s": (self.output_tokens / elapsed
                                  if elapsed > 0 else 0.0),
@@ -143,18 +156,21 @@ class EngineMetrics:
 class Scheduler:
     """FCFS admission over a fixed slot table, budgeted by prefill tokens.
 
-    ``plan_admission`` pops queued requests in order while free slots and
-    the per-round padded-token budget last, grouping the admitted set by
-    prefill bucket so each group runs as one batched prefill.  Strict
-    FCFS: the first request that does not fit the remaining budget stops
-    admission for the round (no skipping ahead), except that one
-    oversized request is always admitted alone rather than livelocking.
+    ``plan_admission`` pops queued requests in order while free slots,
+    the per-round padded-token budget and (paged mode) free KV blocks
+    last, grouping the admitted set by prefill bucket so each group runs
+    as one batched prefill.  Strict FCFS: the first request that does not
+    fit the remaining budget or the block pool stops admission for the
+    round (no skipping ahead), except that one oversized request is
+    always admitted alone rather than livelocking.
     """
 
     def __init__(self, max_slots: int, bucket_fn: Callable[[int], int],
-                 max_waiting_prefill_tokens: int = 4096):
+                 max_waiting_prefill_tokens: int = 4096,
+                 charge_fn: Optional[Callable[[int], int]] = None):
         self.max_slots = max_slots
         self.bucket_fn = bucket_fn
+        self.charge_fn = charge_fn or bucket_fn
         self.max_waiting_prefill_tokens = max_waiting_prefill_tokens
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
@@ -177,22 +193,31 @@ class Scheduler:
         return bool(self.queue) or any(r is not None for r in self.slots)
 
     # -- admission ------------------------------------------------------
-    def plan_admission(self) -> List[Tuple[int, List[Tuple[int, Request]]]]:
-        """[(bucket, [(slot, request), ...]), ...] for this round."""
+    def plan_admission(self, can_fit: Optional[Callable[[Request], bool]]
+                       = None) -> List[Tuple[int, List[Tuple[int, Request]]]]:
+        """[(bucket, [(slot, request), ...]), ...] for this round.
+
+        ``can_fit`` (paged mode) checks KV-block availability for the
+        head-of-line request; a head that does not fit waits — blocks
+        free as running requests finish — and nothing skips past it.
+        """
         free = self.free_slots()
         budget = self.max_waiting_prefill_tokens
         groups: Dict[int, List[Tuple[int, Request]]] = {}
         admitted = 0
         while free and self.queue:
-            bucket = self.bucket_fn(len(self.queue[0].prompt))
-            if bucket > budget and admitted:
+            head = self.queue[0]
+            if can_fit is not None and not can_fit(head):
+                break                      # wait for blocks, never skip
+            bucket = self.bucket_fn(len(head.prompt))
+            if self.charge_fn(len(head.prompt)) > budget and admitted:
                 break                      # strict FCFS: wait, don't skip
             req = self.queue.popleft()
             slot = free.pop(0)
             self.slots[slot] = req
             req.state = RequestState.PREFILL
             groups.setdefault(bucket, []).append((slot, req))
-            budget -= bucket
+            budget -= self.charge_fn(len(req.prompt))
             admitted += 1
         return sorted(groups.items())
 
@@ -201,11 +226,23 @@ class Scheduler:
 # model runner
 # ---------------------------------------------------------------------------
 
+def pageable_arch(cfg: ModelConfig) -> bool:
+    """Paged caching is implemented for pure-GQA decoder stacks (the
+    attention decode path); MLA/recurrent mixers and cross-attention fall
+    back to the contiguous cache."""
+    return (cfg.encdec is None
+            and all(cfg.spec(nm).mixer == "gqa"
+                    and not cfg.spec(nm).cross_attn
+                    for nm in cfg.layer_names))
+
+
 class ModelRunner:
-    """Device side: cache + jitted prefill / decode / insert programs."""
+    """Device side: cache + jitted prefill / chunk / decode programs."""
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
-                 max_seq_len: int, par=NO_PARALLEL, min_bucket: int = 16):
+                 max_seq_len: int, par=NO_PARALLEL, min_bucket: int = 16,
+                 paged: bool = True, block_size: int = 16,
+                 num_blocks: Optional[int] = None, prefill_chunk: int = 0):
         if cfg.encdec is not None:
             raise ValueError("engine serves decoder-only models")
         self.cfg = cfg
@@ -215,8 +252,6 @@ class ModelRunner:
         self.max_seq_len = max_seq_len
         self.min_bucket = min_bucket
         self.fns = steps_lib.model_fns(cfg)
-        self.cache = self.fns["init_cache"](cfg, max_slots, max_seq_len)
-        self._axes = batch_axes(self.fns["init_cache"], cfg)
         # padded tokens corrupt length-sensitive layers: recurrent state
         # (conv window / SSM state) carries them forward, and capacity-
         # based MoE routing lets them consume expert-capacity slots that
@@ -226,14 +261,48 @@ class ModelRunner:
             cfg.spec(nm).mixer in RECURRENT_MIXERS
             or cfg.spec(nm).mlp == "moe" for nm in cfg.layer_names)
 
+        self.kv: Optional[PagedKVCache] = None
+        self.paged = paged and pageable_arch(cfg)
+        if self.paged:
+            try:
+                self.kv = PagedKVCache(self.fns["init_cache"], cfg,
+                                       max_slots=max_slots,
+                                       max_seq_len=max_seq_len,
+                                       block_size=block_size,
+                                       num_blocks=num_blocks)
+            except ValueError:             # every layer is a ring: dense
+                self.paged = False
+        if self.paged:
+            self.cache = wrap_paged(self.kv.data, self.kv.pageable)
+            self._axes, self._seq = self.kv.axes, self.kv.seq
+            self._pageable = self.kv.pageable
+        else:
+            self.cache = self.fns["init_cache"](cfg, max_slots, max_seq_len)
+            self._axes = batch_axes(self.fns["init_cache"], cfg)
+
+        # chunked prefill feeds the prompt through the paged cache with
+        # multi-token decode-style steps: needs every layer paged (full
+        # attention, no rings) and no length-sensitive state
+        self.prefill_chunk = prefill_chunk
+        if prefill_chunk and not (
+                self.paged and not self.exact_prefill
+                and all(cfg.spec(nm).window is None
+                        for nm in cfg.layer_names)):
+            self.prefill_chunk = 0
+
         # the cache argument is dead after each call (self.cache is
         # rebound to the result), so donate it — on GPU/TPU the update
         # happens in place instead of copying the full KV cache per
         # token (CPU ignores donation with a warning)
         self._prefill = jax.jit(self._prefill_impl)
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
-        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,),
+                               static_argnames=("max_len",))
+        self._chunk = jax.jit(self._chunk_impl, donate_argnums=(1,))
+        self._table_key = None             # (kv.version, active bytes)
+        self._table_dev = None             # cached device block table
         self.prefill_shapes: set = set()   # observed (n_reqs, bucket)
+        self.chunk_shapes: set = set()     # observed (n_reqs, chunk)
         self.decode_transfers = 0          # host transfers in decode steps
 
     # -- bucket policy --------------------------------------------------
@@ -249,6 +318,23 @@ class ModelRunner:
             b *= 2
         return min(b, self.max_seq_len)
 
+    def admission_charge(self, length: int) -> int:
+        """Prefill tokens a request costs per admission round: its padded
+        bucket, or one chunk when chunked prefill spreads the rest over
+        subsequent steps."""
+        bucket = self.bucket_for(length)
+        return min(bucket, self.prefill_chunk) if self.prefill_chunk \
+            else bucket
+
+    def cache_stats(self) -> Dict[str, Any]:
+        """Cache mode + occupancy (paged) for benchmarks/metrics."""
+        if not self.paged:
+            return {"mode": "contiguous"}
+        stats = dict(self.kv.utilization())
+        stats.update(mode="paged", block_size=self.kv.block_size,
+                     pool_bytes=self.kv.pool_bytes())
+        return stats
+
     # -- jitted programs -------------------------------------------------
     def _prefill_impl(self, params, tokens, lengths, key, temps, tks, tps):
         """tokens [n, bucket] right-padded; lengths [n] true lengths.
@@ -261,20 +347,41 @@ class ModelRunner:
         toks = sample_batched(last, key, temps, tks, tps)
         return toks, cache
 
-    def _insert_impl(self, dst, src, slots):
+    def _insert_impl(self, dst, src, slots, table_rows):
+        if self.paged:
+            out = paged_insert_rows(unwrap_paged(dst), src, self._axes,
+                                    self._seq, self._pageable, slots,
+                                    table_rows, self.kv.block_size)
+            return wrap_paged(out, self._pageable)
         return insert_rows(dst, src, self._axes, slots)
 
-    def _decode_impl(self, params, cache, toks, pos, active, key,
-                     temps, tks, tps, eos, remaining):
+    def _decode_impl(self, params, cache, toks, pos, active, table, key,
+                     temps, tks, tps, eos, remaining, max_len=None):
         """One decode step for all slots + sampling + done flags, all on
         device.  Returns (cache, packed [2, slots] int32 = (token, done))."""
-        logits, cache = self.fns["decode"](params, cache, toks, pos,
-                                           self.cfg, self.par)
-        new = sample_batched(logits, key, temps, tks, tps)
-        new = jnp.where(active, new, 0)
-        done = active & ((remaining <= 1)
-                         | ((eos >= 0) & (new == eos)))
-        return cache, jnp.stack([new, done.astype(jnp.int32)])
+        if self.paged:
+            logits, cache = self.fns["decode"](params, cache, toks, pos,
+                                               self.cfg, self.par,
+                                               block_table=table,
+                                               kv_max_len=max_len)
+        else:
+            logits, cache = self.fns["decode"](params, cache, toks, pos,
+                                               self.cfg, self.par)
+        return cache, sample_step(logits, key, temps, tks, tps, active,
+                                  eos, remaining)
+
+    def _chunk_impl(self, params, cache, toks, pos, table_rows, last_idx,
+                    key, temps, tks, tps):
+        """One prefill chunk for n requests: toks [n, C] appended at
+        positions pos[:, None] + arange(C).  Returns (cache, candidate
+        first token [n] sampled at each row's last real prompt row —
+        meaningful only for rows whose final chunk this is)."""
+        logits, cache = self.fns["chunk"](params, cache, toks, pos,
+                                          self.cfg, self.par,
+                                          block_table=table_rows)
+        last = jnp.take_along_axis(
+            logits, last_idx[:, None, None], axis=1)[:, 0]
+        return cache, sample_batched(last, key, temps, tks, tps)
 
     # -- host-facing ops -------------------------------------------------
     def prefill(self, prompts: Sequence[Sequence[int]], bucket: int,
@@ -293,19 +400,62 @@ class ModelRunner:
                                     jnp.asarray(lengths), key,
                                     jnp.asarray(temps), jnp.asarray(tks),
                                     jnp.asarray(tps))
+        table_rows = (self.kv.table_rows(slots) if self.paged
+                      else jnp.zeros((n, 1), jnp.int32))
         self.cache = self._insert(self.cache, cache,
-                                  jnp.asarray(slots, jnp.int32))
+                                  jnp.asarray(slots, jnp.int32), table_rows)
         self.prefill_shapes.add((n, bucket))
         return np.asarray(toks)
+
+    def chunk(self, toks: np.ndarray, pos: np.ndarray, slots: Sequence[int],
+              last_idx: np.ndarray, key,
+              params_list: Sequence[SampleParams]) -> np.ndarray:
+        """One chunk step for the currently-prefilling requests."""
+        temps, tks, tps = stack_params(params_list)
+        self.cache, cand = self._chunk(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+            self.kv.table_rows(slots), jnp.asarray(last_idx), key,
+            jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps))
+        self.chunk_shapes.add(tuple(toks.shape))
+        return np.asarray(cand)
 
     def decode(self, toks, pos, active, key, temps, tks, tps, eos,
                remaining) -> Tuple[np.ndarray, np.ndarray]:
         """One decode step.  Exactly one host transfer: the packed
         (token, done) array."""
+        max_len = None
+        if self.paged:
+            # lanes not actively decoding (idle, or mid-chunked-prefill)
+            # get zeroed table rows: their stale-position writes land in
+            # the trash block, never in blocks owned by live requests.
+            # The masked table only changes on allocate/free/active-set
+            # transitions, so the device copy is cached across steps.
+            act = np.asarray(active, bool)
+            key_now = (self.kv.version, act.tobytes())
+            if key_now != self._table_key:
+                self._table_dev = jnp.asarray(
+                    self.kv.table_np * act.astype(np.int32)[:, None])
+                self._table_key = key_now
+            table = self._table_dev
+            # static bound on the live cache prefix (rounded to a power-
+            # of-two block count so compile variants stay O(log blocks)):
+            # the paged kernel sweeps only these blocks.  Only the Pallas
+            # path consumes it — the jnp reference path stays a single
+            # compile (and bit-identical to the dense cache)
+            if act.any() and self.cfg.use_pallas:
+                bs = self.kv.block_size
+                need = -(-(int(np.asarray(pos)[act].max()) + 1) // bs)
+                p2 = 1
+                while p2 < need:
+                    p2 *= 2
+                max_len = min(self.kv.blocks_per_seq, p2) * bs
+        else:
+            table = jnp.zeros((len(toks), 1), jnp.int32)
         self.cache, packed = self._decode(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(active), key, jnp.asarray(temps), jnp.asarray(tks),
-            jnp.asarray(tps), jnp.asarray(eos), jnp.asarray(remaining))
+            jnp.asarray(active), table, key, jnp.asarray(temps),
+            jnp.asarray(tks), jnp.asarray(tps), jnp.asarray(eos),
+            jnp.asarray(remaining), max_len=max_len)
         host = np.asarray(packed)                  # THE transfer
         self.decode_transfers += 1
         return host[0], host[1].astype(bool)
@@ -319,15 +469,21 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
                  max_seq_len: int = 256, par=NO_PARALLEL, seed: int = 0,
                  max_waiting_prefill_tokens: int = 4096,
-                 min_bucket: int = 16):
+                 min_bucket: int = 16, paged: bool = True,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 prefill_chunk: int = 0):
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
         self.runner = ModelRunner(cfg, params, max_slots=max_slots,
                                   max_seq_len=max_seq_len, par=par,
-                                  min_bucket=min_bucket)
+                                  min_bucket=min_bucket, paged=paged,
+                                  block_size=block_size,
+                                  num_blocks=num_blocks,
+                                  prefill_chunk=prefill_chunk)
         self.scheduler = Scheduler(max_slots, self.runner.bucket_for,
-                                   max_waiting_prefill_tokens)
+                                   max_waiting_prefill_tokens,
+                                   charge_fn=self.runner.admission_charge)
         self.metrics = EngineMetrics()
         self.key = jax.random.PRNGKey(seed)
         self._next_rid = 0
@@ -345,6 +501,13 @@ class Engine:
         self._remaining = np.zeros((B,), np.int32)
 
     # ------------------------------------------------------------------
+    def _reserve_tokens(self, req: Request) -> int:
+        """Cache positions a request occupies over its lifetime: prompt
+        + decode writes (the last sampled token is never written)."""
+        L = len(req.prompt)
+        cap = self.max_seq_len - L + 1
+        return L + min(req.max_new_tokens, cap) - 1
+
     def submit(self, prompt: List[int], max_new_tokens: int = 32,
                eos_id: Optional[int] = None,
                params: SampleParams = SampleParams(),
@@ -355,6 +518,12 @@ class Engine:
         if not req.prompt:
             raise ValueError("empty prompt")
         self.runner.bucket_for(len(req.prompt))    # validates length
+        kv = self.runner.kv
+        if kv is not None and \
+                kv.blocks_for(self._reserve_tokens(req)) > kv.num_blocks - 1:
+            raise ValueError(
+                f"request needs {kv.blocks_for(self._reserve_tokens(req))} "
+                f"KV blocks but the pool holds {kv.num_blocks - 1}")
         req.t_submit = time.time()
         self._next_rid += 1
         self.metrics.start()
@@ -371,45 +540,112 @@ class Engine:
         req.state = RequestState.DONE
         req.t_done = time.time()
         self._active[slot] = False
+        if self.runner.paged:
+            self.runner.kv.free_slot(slot)         # blocks -> free pool
         self.scheduler.release(slot)
         self.metrics.observe(req)
 
+    def _make_can_fit(self) -> Callable[[Request], bool]:
+        """Block-availability gate for one admission round.  Each True
+        answer is immediately followed by an admission, so the closure
+        accumulates the blocks already promised this round — otherwise
+        two requests could both be judged against the same free pool."""
+        if not self.runner.paged:
+            return lambda req: True
+        kv = self.runner.kv
+        planned = 0
+
+        def can_fit(req: Request) -> bool:
+            nonlocal planned
+            need = kv.blocks_for(self._reserve_tokens(req))
+            if planned + need > kv.free_blocks:
+                return False
+            planned += need
+            return True
+
+        return can_fit
+
+    def _start_decode(self, slot: int, req: Request, tok: int) -> None:
+        """First token sampled: move the request into the decode batch."""
+        req.t_first = time.time()
+        req.state = RequestState.DECODE
+        L = len(req.prompt)
+        # positions L .. L+new-1 must stay inside the cache
+        cap = self.max_seq_len - L + 1
+        req.truncated = req.max_new_tokens > cap
+        self._tok[slot] = tok
+        self._pos[slot] = L
+        self._active[slot] = True
+        self._remaining[slot] = min(req.max_new_tokens, cap) - 1
+        self._emit(slot, req, int(tok))
+        if (self._remaining[slot] <= 0
+                or (req.eos_id is not None and tok == req.eos_id)):
+            self._finish(slot, req)
+
     def _admit(self) -> None:
-        for bucket, group in self.scheduler.plan_admission():
+        chunked = self.runner.prefill_chunk > 0
+        for bucket, group in self.scheduler.plan_admission(
+                self._make_can_fit()):
             slots = [s for s, _ in group]
             reqs = [r for _, r in group]
-            self.key, k = jax.random.split(self.key)
-            toks = self.runner.prefill([r.prompt for r in reqs], bucket,
-                                       slots, k, [r.params for r in reqs])
-            now = time.time()
-            for slot, req, tok in zip(slots, reqs, toks):
-                req.t_first = now
-                req.state = RequestState.DECODE
-                L = len(req.prompt)
-                # positions L .. L+new-1 must stay inside the cache
-                cap = self.max_seq_len - L + 1
-                req.truncated = req.max_new_tokens > cap
-                self._tok[slot] = tok
-                self._pos[slot] = L
-                self._active[slot] = True
+            if self.runner.paged:
+                for slot, req in group:
+                    self.runner.kv.allocate(slot, self._reserve_tokens(req))
+            for slot, req in group:
                 self._temps[slot] = req.params.temperature
                 self._topks[slot] = req.params.top_k
                 self._topps[slot] = req.params.top_p
                 self._eos[slot] = -1 if req.eos_id is None else req.eos_id
-                self._remaining[slot] = min(req.max_new_tokens, cap) - 1
-                self._emit(slot, req, int(tok))
-                if (self._remaining[slot] <= 0
-                        or (req.eos_id is not None and tok == req.eos_id)):
-                    self._finish(slot, req)
+            if chunked:
+                continue                 # chunks run in _prefill_chunks
+            self.key, k = jax.random.split(self.key)
+            toks = self.runner.prefill([r.prompt for r in reqs], bucket,
+                                       slots, k, [r.params for r in reqs])
+            for slot, req, tok in zip(slots, reqs, toks):
+                req.prefilled = len(req.prompt)
+                self._start_decode(slot, req, tok)
+
+    def _prefill_chunks(self) -> None:
+        """Advance every prefilling request by one chunk (one batched
+        call), finishing rows whose prompt is now fully consumed."""
+        C = self.runner.prefill_chunk
+        rows = [(s, r) for s, r in self.scheduler.active_slots()
+                if r.state is RequestState.PREFILL]
+        if not rows:
+            return
+        n = len(rows)
+        toks = np.zeros((n, C), np.int32)
+        pos = np.empty((n,), np.int32)
+        last_idx = np.zeros((n,), np.int32)
+        for i, (slot, req) in enumerate(rows):
+            chunk = req.prompt[req.prefilled:req.prefilled + C]
+            toks[i, :len(chunk)] = chunk
+            pos[i] = req.prefilled
+            last_idx[i] = min(C - 1, len(req.prompt) - 1 - req.prefilled)
+        self.key, k = jax.random.split(self.key)
+        cand = self.runner.chunk(toks, pos, [s for s, _ in rows], last_idx,
+                                 k, [r.params for _, r in rows])
+        for i, (slot, req) in enumerate(rows):
+            req.prefilled += C
+            if req.prefilled >= len(req.prompt):
+                req.prefilled = len(req.prompt)
+                self._start_decode(slot, req, cand[i])
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """Admit queued requests + one decode step for all active slots.
-        Returns the number of slots advanced."""
+        """Admit queued requests, advance prefill chunks, and run one
+        decode step for all decoding slots.  Returns slots advanced."""
         self._admit()
-        active = self.scheduler.active_slots()
+        if self.runner.prefill_chunk:
+            self._prefill_chunks()
+        self.metrics.max_active = max(
+            self.metrics.max_active, len(self.scheduler.active_slots()))
+        active = [(s, r) for s, r in self.scheduler.active_slots()
+                  if r.state is RequestState.DECODE]
         if not active:
-            return 0
+            # chunked prefill may still be in flight with nothing decoding
+            return len([1 for _, r in self.scheduler.active_slots()
+                        if r.state is RequestState.PREFILL])
         self.key, k = jax.random.split(self.key)
         toks, done = self.runner.decode(
             self._tok, self._pos, self._active, k, self._temps,

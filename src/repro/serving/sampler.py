@@ -57,6 +57,24 @@ def sample(logits: jax.Array, key: jax.Array,
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
+def sample_step(logits: jax.Array, key: jax.Array, temperature: jax.Array,
+                top_k: jax.Array, top_p: jax.Array, active: jax.Array,
+                eos: jax.Array, remaining: jax.Array) -> jax.Array:
+    """One fused device-side decode-step epilogue: per-slot sampling plus
+    done-flag computation, packed as [2, B] int32 = (token, done) — the
+    single host transfer of the decode loop.
+
+    ``done`` rows are the engine's reclamation signal: the slot is
+    released and (in paged mode) its KV blocks go back to the free pool
+    the moment the packed array lands on the host, so a finished short
+    request frees memory for queued work without waiting for the batch.
+    """
+    new = sample_batched(logits, key, temperature, top_k, top_p)
+    new = jnp.where(active, new, 0)
+    done = active & ((remaining <= 1) | ((eos >= 0) & (new == eos)))
+    return jnp.stack([new, done.astype(jnp.int32)])
+
+
 def sample_batched(logits: jax.Array, key: jax.Array,
                    temperature: jax.Array, top_k: jax.Array,
                    top_p: jax.Array) -> jax.Array:

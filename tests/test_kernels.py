@@ -61,6 +61,71 @@ def test_decode_attention_sweep(B, S, KH, G, hd, dtype):
                                np.asarray(r, np.float32), rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("B,KH,G,hd,bs,nmax", [(2, 2, 2, 32, 16, 4),
+                                               (1, 1, 4, 64, 8, 8),
+                                               (3, 4, 1, 128, 32, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_sweep(B, KH, G, hd, bs, nmax, dtype):
+    """The paged kernel streams KV blocks through a scalar-prefetched
+    block table; outputs must match the gather-then-dense oracle for
+    random (shuffled, shared-pool) tables and ragged lengths."""
+    H = KH * G
+    N = B * nmax + 1                     # pool with spare blocks + trash
+    q = _rand(0, (B, H, hd), dtype)
+    k_pool = _rand(1, (N, bs, KH, hd), dtype)
+    v_pool = _rand(2, (N, bs, KH, hd), dtype)
+    rng = np.random.default_rng(7)
+    # each row draws distinct blocks from the shared pool, shuffled
+    perm = rng.permutation(N - 1)[:B * nmax].reshape(B, nmax) + 1
+    table = jnp.asarray(perm, jnp.int32)
+    lengths = jnp.asarray(
+        [1 + (11 * i + 5) % (nmax * bs) for i in range(B)], jnp.int32)
+    o = ops.paged_decode_attention(q, k_pool, v_pool, table, lengths)
+    r = ref.paged_decode_attention_ref(q, k_pool, v_pool, table, lengths)
+    tol = _TOL[dtype]
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), rtol=tol, atol=tol)
+    # max_len truncates the block sweep without changing results
+    ml = int(lengths.max())
+    o2 = ops.paged_decode_attention(q, k_pool, v_pool, table, lengths,
+                                    max_len=ml)
+    np.testing.assert_allclose(np.asarray(o2, np.float32),
+                               np.asarray(r, np.float32), rtol=tol, atol=tol)
+
+
+def test_paged_matches_contiguous_identity_table():
+    """With the identity table the paged kernel IS the dense kernel."""
+    B, S, KH, G, hd, bs = 2, 128, 2, 2, 64, 32
+    q = _rand(0, (B, KH * G, hd), jnp.float32)
+    k = _rand(1, (B, S, KH, hd), jnp.float32)
+    v = _rand(2, (B, S, KH, hd), jnp.float32)
+    lengths = jnp.asarray([37, 101], jnp.int32)
+    pools_k = k.reshape(B * S // bs, bs, KH, hd)
+    pools_v = v.reshape(B * S // bs, bs, KH, hd)
+    table = jnp.arange(B * S // bs, dtype=jnp.int32).reshape(B, S // bs)
+    o_paged = ops.paged_decode_attention(q, pools_k, pools_v, table, lengths)
+    o_dense = ops.decode_attention(q, k, v, lengths, block_s=bs)
+    np.testing.assert_allclose(np.asarray(o_paged), np.asarray(o_dense),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_max_len_skips_dead_blocks():
+    """Truncating the sequential grid to the max valid length must not
+    change the result (the skipped blocks are fully masked anyway)."""
+    B, S, KH, G, hd = 2, 512, 2, 2, 32
+    q = _rand(0, (B, KH * G, hd), jnp.float32)
+    k = _rand(1, (B, S, KH, hd), jnp.float32)
+    v = _rand(2, (B, S, KH, hd), jnp.float32)
+    lengths = jnp.asarray([9, 70], jnp.int32)
+    full = ops.decode_attention(q, k, v, lengths, block_s=64)
+    trunc = ops.decode_attention(q, k, v, lengths, block_s=64, max_len=70)
+    np.testing.assert_allclose(np.asarray(trunc), np.asarray(full),
+                               rtol=2e-5, atol=2e-5)
+    r = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(trunc), np.asarray(r),
+                               rtol=2e-5, atol=2e-5)
+
+
 @pytest.mark.parametrize("B,S,di,ds", [(2, 64, 32, 4), (1, 256, 128, 16),
                                        (2, 128, 64, 1)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -170,6 +170,75 @@ def test_pt_sync_points_in_compiled_hlo():
 
 
 @slow
+def test_pt_paged_decode_one_allreduce_per_track_block():
+    """The paged cache must not change the sync structure: pt_decode_step
+    over block pools + a block table still compiles to exactly ONE
+    cross-track all-reduce per track-block scan iteration — the paged
+    scatter/gather stays track-local (the pool's track dim shards with
+    the params) and adds no collectives."""
+    res = _run(textwrap.dedent("""
+        import json, re
+        import jax, jax.numpy as jnp
+        from repro.common.paged import wrap_paged
+        from repro.configs import pt_paper
+        from repro.launch import steps as S
+        from repro.runtime import sharding as sh
+        from repro.serving.cache import PagedKVCache
+
+        cfg = pt_paper.reduced_pt(2).replace(remat=False)  # 8 layers, D=2
+        n_tracks = cfg.pt.n_tracks
+        mesh = jax.make_mesh((2, n_tracks), ('data', 'track'))
+        par = S.build_parallelism(cfg, 'decode', mesh)
+        fns = S.model_fns(cfg)
+        ps = jax.eval_shape(lambda: fns['init'](jax.random.PRNGKey(0), cfg))
+        psh = sh.param_shardings(ps, cfg, par)
+        B, SL = 8, 32
+        kv = PagedKVCache(fns['init_cache'], cfg, max_slots=B,
+                          max_seq_len=SL, block_size=8)
+        for s in range(B):
+            kv.allocate(s, 16)
+        cache = jax.eval_shape(lambda: wrap_paged(kv.data, kv.pageable))
+        tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+        tbl = jax.ShapeDtypeStruct(kv.table_np.shape, jnp.int32)
+
+        def step(p, c, t, q, tb):
+            return fns['decode'](p, c, t, q, cfg, par, block_table=tb)
+
+        txt = jax.jit(step, in_shardings=(psh, None, None, None, None)) \\
+            .lower(ps, cache, tok, pos, tbl).compile().as_text()
+
+        comps, cur = {}, None
+        for line in txt.splitlines():
+            if line and not line[0].isspace() and '{' in line:
+                m = re.match(r'(?:ENTRY\\s+)?%?([\\w\\.\\-]+)', line.strip())
+                cur = m.group(1) if m else None
+                comps[cur] = []
+            elif cur is not None:
+                comps[cur].append(line)
+        bodies = set(re.findall(r'body=%?([\\w\\.\\-]+)', txt))
+        ar = re.compile(r'=\\s*\\S+\\s+all-reduce(?:-start)?\\(')
+        per_body = {b: sum(1 for l in comps.get(b, ()) if ar.search(l))
+                    for b in bodies}
+        sizes = []
+        for b in bodies:
+            for l in comps.get(b, ()):
+                if ar.search(l):
+                    g = re.search(r'replica_groups=\\{\\{([\\d,]+)\\}', l)
+                    if g:
+                        sizes.append(len(g.group(1).split(',')))
+                    g = re.search(r'replica_groups=\\[\\d+,(\\d+)\\]<=', l)
+                    if g:
+                        sizes.append(int(g.group(1)))
+        print(json.dumps({'per_body': sorted(per_body.values()),
+                          'group_sizes': sizes,
+                          'n_tracks': n_tracks}))
+    """))
+    assert res["per_body"].count(1) == 1 and max(res["per_body"]) == 1, res
+    assert res["group_sizes"] == [res["n_tracks"]], res
+
+
+@slow
 def test_pt_decode_one_allreduce_per_track_block():
     """The serving-side sync claim, verified structurally: the compiled
     pt_decode_step scans one track block per while iteration, and that
