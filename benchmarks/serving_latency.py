@@ -10,6 +10,13 @@ FIXED HBM budget (the bytes a 2-slot contiguous cache costs) with a
 mixed short/long workload, and append TTFT/TPOT/throughput, peak
 concurrency and cache-utilization %% to ``--json`` (BENCH_serving.json
 in CI) so the serving-perf trajectory is recorded per commit.
+
+``--speculate`` runs the track-speculative toy smoke on a small PT
+model: the same paged engine with and without ``speculate_k`` draft/
+verify, mean TPOT + acceptance rate appended to ``--json``.  The tracks
+are tied (identical parameters) so the track-subset drafter agrees with
+the full model — the trained-model upper bound, reported honestly next
+to the random-init (untied) agreement rate.
 """
 from __future__ import annotations
 
@@ -149,17 +156,102 @@ def bench_smoke(paged: bool, json_path: str | None = None) -> dict:
           f"util {out['cache_utilization_pct']:.1f}%,"
           f"{out['throughput_tok_s']:.1f} tok/s")
     if json_path:
-        merged = {}
-        if os.path.exists(json_path):
-            with open(json_path) as f:
-                merged = json.load(f)
-        merged[out["mode"]] = out
-        if "paged" in merged and "contiguous" in merged:
-            merged["slots_gain_at_fixed_hbm"] = (
-                merged["paged"]["max_active"]
-                / max(1, merged["contiguous"]["max_active"]))
-        with open(json_path, "w") as f:
-            json.dump(merged, f, indent=2)
+        _merge_json(json_path, out["mode"], out)
+    return out
+
+
+def _merge_json(json_path: str, key: str, out: dict) -> None:
+    merged = {}
+    if os.path.exists(json_path):
+        with open(json_path) as f:
+            merged = json.load(f)
+    merged[key] = out
+    if "paged" in merged and "contiguous" in merged:
+        merged["slots_gain_at_fixed_hbm"] = (
+            merged["paged"]["max_active"]
+            / max(1, merged["contiguous"]["max_active"]))
+    with open(json_path, "w") as f:
+        json.dump(merged, f, indent=2)
+
+
+def bench_speculate(json_path: str | None = None, speculate_k: int = 4,
+                    draft_tracks: int = 1) -> dict:
+    """Track-speculative toy smoke: plain paged decode vs draft/verify on
+    the SAME small PT model (8 layers, 4 tracks, D=2, vocab 512).
+
+    Tracks are tied (every track identical) so the d-track drafter agrees
+    with the full model — speculative decoding's win scales with draft
+    agreement, and tied tracks are the measured-upper-bound stand-in for
+    a trained PT model whose tracks correlate.  The random-init (untied)
+    agreement is also measured and reported, so the JSON records both
+    ends of the acceptance range.  Both engines are warmed up first so
+    compile time stays out of the TPOT numbers.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.common.types import LayerSpec, ModelConfig
+    from repro.core.track import pt_ify
+    from repro.launch import steps as steps_lib
+    from repro.serving.engine import Engine
+
+    dense = ModelConfig(
+        name="spec-bench", family="dense", n_layers=8, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=512,
+        layer_specs={"full": LayerSpec(mixer="gqa", mlp="swiglu")},
+        pattern_unit=("full",), tie_embeddings=False, dtype="float32")
+    cfg = pt_ify(dense, 4, 2, width_mult=8)
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    untied = jax.tree_util.tree_map(lambda x: x, params)
+    params["blocks"] = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[:, :, :1], l.shape), params["blocks"])
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, 8).tolist() for _ in range(8)]
+
+    def run(p, k):
+        eng = Engine(cfg, p, max_slots=4, max_seq_len=96, block_size=8,
+                     speculate_k=k, draft_tracks=draft_tracks)
+        # warm-up replays the measured workload shape so every prefill
+        # batch-size variant (4 slots filling, then 1..3 as slots free)
+        # compiles before the timed region
+        for prompt in prompts:
+            eng.submit(prompt, max_new_tokens=8)
+        eng.run()
+        eng.metrics = type(eng.metrics)()
+        for prompt in prompts:
+            eng.submit(prompt, max_new_tokens=32)
+        eng.run()
+        return eng.metrics.summary()
+
+    plain = run(params, 0)
+    spec = run(params, speculate_k)
+    untied_spec = run(untied, speculate_k)
+    out = {
+        "model": cfg.name,
+        "speculate_k": speculate_k,
+        "draft_tracks": draft_tracks,
+        "n_tracks": cfg.pt.n_tracks,
+        "plain_tpot_mean_ms": plain["tpot_ms"]["mean"],
+        "spec_tpot_mean_ms": spec["tpot_ms"]["mean"],
+        "tpot_speedup": (plain["tpot_ms"]["mean"]
+                         / max(1e-9, spec["tpot_ms"]["mean"])),
+        "acceptance_rate": spec["acceptance_rate"],
+        "acceptance_ema": spec["acceptance_ema"],
+        "spec_steps": spec["spec_steps"],
+        "untied_acceptance_rate": untied_spec["acceptance_rate"],
+        "throughput_tok_s": spec["throughput_tok_s"],
+        "plain_throughput_tok_s": plain["throughput_tok_s"],
+    }
+    print(f"speculate,K={speculate_k},d={draft_tracks}/{cfg.pt.n_tracks},"
+          f"tpot {plain['tpot_ms']['mean']:.2f} -> "
+          f"{spec['tpot_ms']['mean']:.2f} ms "
+          f"({out['tpot_speedup']:.2f}x),accept "
+          f"{out['acceptance_rate']:.2f} (untied "
+          f"{out['untied_acceptance_rate']:.2f})")
+    if json_path:
+        _merge_json(json_path, "speculate", out)
     return out
 
 
@@ -182,14 +274,23 @@ if __name__ == "__main__":
                     help="toy serving smoke, paged cache + chunked prefill")
     ap.add_argument("--contiguous", action="store_true",
                     help="toy serving smoke, contiguous per-slot cache")
+    ap.add_argument("--speculate", action="store_true",
+                    help="toy smoke, track-speculative vs plain paged "
+                    "decode on a small PT model")
+    ap.add_argument("--speculate-k", type=int, default=4,
+                    help="draft length K for --speculate")
+    ap.add_argument("--draft-tracks", type=int, default=1,
+                    help="drafter track count for --speculate")
     ap.add_argument("--json", default=None,
                     help="merge smoke results into this JSON file")
     args = ap.parse_args()
-    if args.paged or args.contiguous:
+    if args.paged or args.contiguous or args.speculate:
         if args.paged:
             bench_smoke(True, args.json)
         if args.contiguous:
             bench_smoke(False, args.json)
+        if args.speculate:
+            bench_speculate(args.json, args.speculate_k, args.draft_tracks)
     else:
         if args.metric in ("ttft", "both"):
             ttft_table()

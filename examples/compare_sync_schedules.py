@@ -9,8 +9,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
 
+from repro.common.compat import make_mesh
 from repro.configs import pt_paper
 from repro.core.track import pt_ify, pt_sync_points
 from repro.launch import steps as S
@@ -37,16 +37,14 @@ def all_reduce_count(cfg, mesh):
 def main():
     L = 8
     dense = pt_paper.reduced_dense().replace(n_layers=L, remat=False)
-    mesh_d = jax.make_mesh((1, 8), ("data", "model"),
-                           axis_types=(AxisType.Auto,) * 2)
+    mesh_d = make_mesh((1, 8), ("data", "model"))
     n_d, b_d = all_reduce_count(dense, mesh_d)
     print(f"dense Megatron-TP ({L} layers, 8-way): "
           f"{n_d} all-reduces/fwd ({b_d/1e6:.1f} MB wire)   [theory 2L={2*L}]")
 
     for D in (2, 4, 8):
         pt = pt_ify(dense, 4, D, width_mult=16).replace(remat=False)
-        mesh_t = jax.make_mesh((2, 4), ("data", "track"),
-                               axis_types=(AxisType.Auto,) * 2)
+        mesh_t = make_mesh((2, 4), ("data", "track"))
         n_t, b_t = all_reduce_count(pt, mesh_t)
         print(f"PT D={D} (4 tracks):        {n_t} all-reduces/fwd "
               f"({b_t/1e6:.1f} MB wire)   [theory L/D={pt_sync_points(L, D)}]"

@@ -1,7 +1,9 @@
 """Serve a small PT model with batched requests through the
 continuous-batching engine: paged block-pool KV cache, chunked prefill
-interleaved with decode, device-side sampling, streaming token callbacks,
-and the engine's aggregate TTFT/TPOT metrics.
+interleaved with decode, track-speculative decoding (the first
+``draft_tracks`` tracks draft K tokens per step, one verify forward
+scores them all), device-side sampling, streaming token callbacks, and
+the engine's aggregate TTFT/TPOT/acceptance metrics.
 
   PYTHONPATH=src python examples/serve_pt.py
 """
@@ -20,10 +22,15 @@ def main():
     params = fns["init"](jax.random.PRNGKey(0), cfg)
     # paged cache: 4 slots share a 10-block pool (80 of the 4*96=384
     # tokens a contiguous cache would reserve); prompts stream in 8-token
-    # chunks between decode steps
+    # chunks between decode steps; 2 of the 4 tracks draft 3 tokens per
+    # step and one verify forward scores them (sampled output still
+    # follows the target distribution exactly — acceptance only changes
+    # speed)
     eng = Engine(cfg, params, max_slots=4, max_seq_len=96,
-                 block_size=8, num_blocks=10, prefill_chunk=8)
+                 block_size=8, num_blocks=10, prefill_chunk=8,
+                 speculate_k=3, draft_tracks=2)
     assert eng.runner.paged and eng.runner.prefill_chunk == 8
+    assert eng.runner.speculate_k == 3 and eng.runner.draft_tracks == 2
 
     streamed = {}                            # rid -> tokens seen so far
     peak_blocks = 0
@@ -62,6 +69,10 @@ def main():
           f"{eng.max_slots * eng.max_seq_len} token rows)")
     print(f"chunked prefill variants: {sorted(eng.runner.chunk_shapes)} "
           f"(chunks of {eng.runner.prefill_chunk}, interleaved with decode)")
+    print(f"speculative decode: K={eng.runner.speculate_k} on "
+          f"{eng.runner.draft_tracks}/{cfg.pt.n_tracks} tracks | "
+          f"{m['spec_steps']} spec steps | acceptance "
+          f"{m['acceptance_rate']:.2f} (ema {m['acceptance_ema']:.2f})")
     print(f"aggregate: {m['throughput_tok_s']:.1f} tok/s | "
           f"TTFT p50 {m['ttft_ms']['p50']:.1f} ms | "
           f"TPOT p50 {m['tpot_ms']['p50']:.1f} ms")

@@ -335,16 +335,75 @@ def pt_decode_step(params, cache, tokens: jax.Array, pos: jax.Array,
 
 def pt_chunk_step(params, cache, tokens: jax.Array, pos: jax.Array,
                   cfg: ModelConfig, par: Parallelism = NO_PARALLEL,
-                  block_table=None):
-    """Chunked-prefill step: tokens [B, C] appended at positions
-    pos[:, None] + arange(C) against a paged cache.  Returns
-    (logits [B, C, V], updated cache)."""
+                  block_table=None, kv_max_len=None):
+    """Chunked-prefill / K-token verify step: tokens [B, C] appended at
+    positions pos[:, None] + arange(C) against a paged cache.  Returns
+    (logits [B, C, V], updated cache).  ``kv_max_len`` (static) bounds
+    the paged gather to the live cache prefix — the speculative verify
+    path scores K+1 draft tokens per slot in one such forward."""
     positions = pos[:, None] + jnp.arange(tokens.shape[1], dtype=jnp.int32)[None]
     x = _embed(params, tokens, cfg, positions, par)
     h, new_cache = _pt_step(params, cache, x, pos, cfg, par, "chunk",
-                            block_table)
+                            block_table, kv_max_len)
     logits = _head(params, h, cfg, par)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# track-subset drafter (speculative decoding)
+# ---------------------------------------------------------------------------
+
+def pt_draft_config(cfg: ModelConfig, draft_tracks: int) -> ModelConfig:
+    """Config of the track-subset drafter: the same PT stack restricted
+    to its first ``draft_tracks`` tracks.  Per-track widths/heads are
+    unchanged — only the fusion mean runs over fewer tracks — so sliced
+    parameters drive it directly."""
+    import dataclasses
+    pt = _pt(cfg)
+    if not 1 <= draft_tracks <= pt.n_tracks:
+        raise ValueError(f"draft_tracks={draft_tracks} not in "
+                         f"[1, {pt.n_tracks}]")
+    return cfg.replace(
+        name=f"{cfg.name}-draft{draft_tracks}",
+        pt=dataclasses.replace(pt, n_tracks=draft_tracks))
+
+
+def pt_draft_params(params, cfg: ModelConfig, draft_tracks: int):
+    """Slice the first ``draft_tracks`` tracks out of stacked PT params.
+
+    blocks leaves [R, D, n, ...] -> [R, D, d, ...]; tail [rem, n, ...]
+    -> [rem, d, ...]; embed / final_norm / head are shared as-is.  The
+    result is a free-standing narrow model (the drafter): in a deployment
+    it is replicated per device, so draft decode costs zero sync points.
+    """
+    pt = _pt(cfg)
+    d = draft_tracks
+    if not 1 <= d <= pt.n_tracks:
+        raise ValueError(f"draft_tracks={d} not in [1, {pt.n_tracks}]")
+    R, rem = _block_counts(cfg)
+    out = dict(params)
+    if R:
+        out["blocks"] = jax.tree_util.tree_map(lambda l: l[:, :, :d],
+                                               params["blocks"])
+    if rem:
+        out["tail"] = jax.tree_util.tree_map(lambda l: l[:, :d],
+                                             params["tail"])
+    return out
+
+
+def pt_draft_step(draft_params, cache, tokens: jax.Array, pos: jax.Array,
+                  cfg_draft: ModelConfig, par: Parallelism = NO_PARALLEL):
+    """One decode step of the track-subset drafter — ZERO sync points.
+
+    ``cfg_draft`` is ``pt_draft_config(cfg, d)`` and ``draft_params`` the
+    matching ``pt_draft_params`` slice.  The 'track' mesh axis is
+    stripped from the parallelism rules: the d-track stack is local
+    (replicated) on every device, the fusion mean is plain compute, and
+    the compiled HLO contains no cross-track all-reduce at all — drafting
+    K tokens costs K × (narrow forward) and no communication.
+    """
+    return pt_decode_step(draft_params, cache, tokens, pos, cfg_draft,
+                          par.without_axis("track"))
 
 
 def pt_init_cache(cfg: ModelConfig, batch: int, seq_len: int):

@@ -42,6 +42,12 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill: prompt tokens fed per engine "
                     "step (0 = whole-prompt prefill)")
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="track-speculative decoding: draft K tokens per "
+                    "engine step and verify them in one forward (PT "
+                    "configs with a paged cache only; 0 = off)")
+    ap.add_argument("--draft-tracks", type=int, default=0,
+                    help="tracks the drafter runs on (default n_tracks/2)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -57,7 +63,12 @@ def main() -> None:
                  max_waiting_prefill_tokens=args.prefill_budget,
                  paged=not args.contiguous, block_size=args.block_size,
                  num_blocks=args.num_blocks,
-                 prefill_chunk=args.prefill_chunk)
+                 prefill_chunk=args.prefill_chunk,
+                 speculate_k=args.speculate_k,
+                 draft_tracks=args.draft_tracks)
+    if args.speculate_k and not eng.runner.speculate_k:
+        print("[serve] --speculate-k ignored: needs a PT config with a "
+              "paged cache (full attention, no MoE/recurrent layers)")
     rng = np.random.default_rng(args.seed)
     sp = SampleParams(temperature=args.temperature)
 
@@ -81,6 +92,11 @@ def main() -> None:
           f"p90 {m['ttft_ms']['p90']:8.1f}  p99 {m['ttft_ms']['p99']:8.1f}")
     print(f"[serve] TPOT ms: p50 {m['tpot_ms']['p50']:8.1f}  "
           f"p90 {m['tpot_ms']['p90']:8.1f}  p99 {m['tpot_ms']['p99']:8.1f}")
+    if eng.runner.speculate_k:
+        print(f"[serve] speculative: K={eng.runner.speculate_k} on "
+              f"{eng.runner.draft_tracks} draft tracks | acceptance "
+              f"{m['acceptance_rate']:.2f} (ema {m['acceptance_ema']:.2f}) "
+              f"over {m['spec_steps']} spec steps")
 
 
 if __name__ == "__main__":

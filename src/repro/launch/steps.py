@@ -65,6 +65,11 @@ def wants_fsdp(cfg: ModelConfig, kind: str) -> bool:
 # --------------------------------------------------------------------------
 
 def model_fns(cfg: ModelConfig):
+    # 'verify' is the chunk step used as a speculative scorer: per-
+    # position logits over K+1 tokens against the paged cache, with a
+    # static bound on the gather ('chunk' and 'verify' share the program;
+    # the split names the two call sites).  'draft' (PT only) is the
+    # sync-free track-subset decode step.
     if cfg.pt is not None:
         return {
             "init": pt_lib.init_pt,
@@ -72,6 +77,8 @@ def model_fns(cfg: ModelConfig):
             "forward": pt_lib.pt_forward,
             "decode": pt_lib.pt_decode_step,
             "chunk": pt_lib.pt_chunk_step,
+            "verify": pt_lib.pt_chunk_step,
+            "draft": pt_lib.pt_draft_step,
             "init_cache": lambda c, b, s, enc_len=0: pt_lib.pt_init_cache(c, b, s),
         }
     return {
@@ -80,6 +87,7 @@ def model_fns(cfg: ModelConfig):
         "forward": dec_lib.lm_forward,
         "decode": dec_lib.lm_decode_step,
         "chunk": dec_lib.lm_chunk_step,
+        "verify": dec_lib.lm_chunk_step,
         "init_cache": dec_lib.init_cache,
     }
 
@@ -253,3 +261,32 @@ def make_serve_step(cfg: ModelConfig, par: Parallelism):
         return fns["decode"](params, cache, tokens, pos, cfg, par)
 
     return serve
+
+
+def make_draft_step(cfg: ModelConfig, par: Parallelism, draft_tracks: int):
+    """Speculative drafter for a PT config: (draft_params, cache, tokens,
+    pos) -> (logits, cache), plus the draft config whose ``init_cache``/
+    ``pt_draft_params`` shapes match.  The compiled step carries ZERO
+    cross-track collectives (the 'track' mesh axis is stripped — the
+    d-track stack runs replicated)."""
+    draft_cfg = pt_lib.pt_draft_config(cfg, draft_tracks)
+
+    def draft(draft_params, cache, tokens, pos):
+        return pt_lib.pt_draft_step(draft_params, cache, tokens, pos,
+                                    draft_cfg, par)
+
+    return draft, draft_cfg
+
+
+def make_verify_step(cfg: ModelConfig, par: Parallelism):
+    """Speculative verifier: (params, cache, tokens [B, K+1], pos,
+    block_table) -> (per-position logits [B, K+1, V], cache) against the
+    paged cache — one target forward scores a whole draft."""
+    fns = model_fns(cfg)
+
+    def verify(params, cache, tokens, pos, block_table, kv_max_len=None):
+        return fns["verify"](params, cache, tokens, pos, cfg, par,
+                             block_table=block_table,
+                             kv_max_len=kv_max_len)
+
+    return verify

@@ -443,15 +443,26 @@ def _paged_decode(params, q, k_new, v_new, k_leaf: PagedLeaf,
 def attention_chunk(params, x: jax.Array, cache, *, spec: LayerSpec,
                     cfg: ModelConfig, pos: jax.Array,
                     par: Parallelism = NO_PARALLEL,
-                    block_table: Optional[jax.Array] = None):
-    """Chunked-prefill step: C new tokens per row against a paged cache.
+                    block_table: Optional[jax.Array] = None,
+                    kv_max_len: Optional[int] = None):
+    """Chunked-prefill / multi-token verify step: C new tokens per row
+    against a paged cache.
 
     x: [B, C, d]; cache: (PagedLeaf, PagedLeaf) pools; pos: [B] absolute
     position of each row's first chunk token.  Writes the chunk's K/V
     through the block table, then attends every chunk row causally against
     the full paged cache (which now contains the chunk itself) — the C=1
-    decode step generalized to a block of queries, so a long prompt can be
-    fed ``prefill_chunk`` tokens at a time between decode steps.
+    decode step generalized to a block of queries.  Two callers: chunked
+    prefill (a long prompt fed ``prefill_chunk`` tokens at a time between
+    decode steps) and speculative verify (K draft tokens + the carry token
+    scored in one forward, per-position logits).
+
+    ``kv_max_len`` (static, host-known bound on pos + C) truncates the
+    gathered cache view to the live prefix — bitwise-neutral (the dropped
+    columns are causally masked, and masked columns contribute exact
+    zeros to the online softmax) but skips dead-block bandwidth.  Writes
+    always go through the full table so out-of-range positions land in
+    the trash block.
 
     Full-attention (non-ring) layers only: chunked prefill is gated off
     for windowed/recurrent/MoE architectures by the engine.  Rows past a
@@ -477,8 +488,11 @@ def attention_chunk(params, x: jax.Array, cache, *, spec: LayerSpec,
     flat_k, flat_v = _paged_write(pool_k, pool_v, k_new, v_new, w_idx)
     new_cache = (PagedLeaf(flat_k.reshape(pool_k.shape)),
                  PagedLeaf(flat_v.reshape(pool_v.shape)))
-    k_g = _paged_gather(flat_k, block_table, bs, par)
-    v_g = _paged_gather(flat_v, block_table, bs, par)
+    read_table = block_table
+    if kv_max_len is not None:
+        read_table = block_table[:, :-(-kv_max_len // bs)]
+    k_g = _paged_gather(flat_k, read_table, bs, par)
+    v_g = _paged_gather(flat_v, read_table, bs, par)
     S_cap = k_g.shape[1]
     scale = q.shape[-1] ** -0.5
     qg = (q * scale).astype(k_g.dtype).reshape(B, C, KH, G, -1)

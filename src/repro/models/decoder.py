@@ -289,17 +289,21 @@ def lm_decode_step(params, cache, tokens: jax.Array, pos: jax.Array,
 
 def lm_chunk_step(params, cache, tokens: jax.Array, pos: jax.Array,
                   cfg: ModelConfig, par: Parallelism = NO_PARALLEL,
-                  block_table: Optional[jax.Array] = None):
-    """Chunked-prefill step: tokens [B, C] appended at positions
-    pos[:, None] + arange(C) against a paged cache.  Returns
-    (logits [B, C, V], updated cache).  Full-attention archs only (the
-    engine gates recurrent/MoE/windowed configs to whole-prompt prefill).
+                  block_table: Optional[jax.Array] = None,
+                  kv_max_len: Optional[int] = None):
+    """Chunked-prefill / K-token verify step: tokens [B, C] appended at
+    positions pos[:, None] + arange(C) against a paged cache.  Returns
+    (logits [B, C, V], updated cache) — per-position logits, so the same
+    program scores a speculative draft (C = K+1) or streams a prompt
+    chunk.  ``kv_max_len`` (static) bounds the paged gather to the live
+    cache prefix.  Full-attention archs only (the engine gates
+    recurrent/MoE/windowed configs to whole-prompt prefill).
     """
     B, C = tokens.shape
     positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
     h = _embed(params, tokens, cfg, positions, par)
     h, new_cache = _step_layers(params, cache, h, pos, cfg, par, "chunk",
-                                block_table)
+                                block_table, kv_max_len)
     logits = _head(params, h, cfg, par)
     return logits, new_cache
 

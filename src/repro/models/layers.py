@@ -75,7 +75,8 @@ def _mixer(params, h, *, cfg, spec, mode, positions, pos, cache, par,
         if mode == "chunk":
             return attn.attention_chunk(params, h, cache, spec=spec,
                                         cfg=cfg, pos=pos, par=par,
-                                        block_table=block_table)
+                                        block_table=block_table,
+                                        kv_max_len=kv_max_len)
         return attn.attention_apply(params, h, spec=spec, cfg=cfg,
                                     positions=positions, par=par,
                                     return_cache=(mode == "prefill"),

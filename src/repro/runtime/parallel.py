@@ -137,6 +137,23 @@ class Parallelism:
         r.update(kw)
         return replace(self, rules=r)
 
+    def without_axis(self, axis: str) -> "Parallelism":
+        """Drop one MESH axis from every rule: no logical dim maps to it
+        any more, so nothing is sharded (or synced) over that axis.  The
+        track-subset drafter uses this to run with its parameters
+        replicated over 'track' — its fusion mean is local compute and
+        the compiled draft step carries zero cross-track collectives."""
+        def strip(v: AxisSpec) -> AxisSpec:
+            if v is None:
+                return None
+            if isinstance(v, str):
+                return None if v == axis else v
+            kept = tuple(a for a in v if a != axis)
+            return kept or None
+
+        return replace(self, rules={k: strip(v)
+                                    for k, v in self.rules.items()})
+
     @property
     def dp_axes(self) -> Tuple[str, ...]:
         """Mesh axes carrying the token batch (pod, data when present)."""

@@ -38,6 +38,21 @@ Memory + latency structure (this PR's point):
   * Device-side batched sampling: model + per-slot sampling + done flags
     jit into one program; the host sees exactly ONE transfer per decode
     step — a packed [2, slots] int32 array of (token, done).
+  * Track-speculative decoding (PT configs, ``speculate_k=K`` +
+    ``draft_tracks=d``): the first d of n tracks are sliced out of the
+    stacked PT params into a free-standing narrow drafter with its own
+    dense per-slot cache.  Each engine step runs ONE jitted program —
+    K sync-free draft steps (no cross-track all-reduce at all), one
+    K+1-token verify forward for every slot against the paged cache
+    (the chunked-prefill path generalized to per-position logits), and
+    batched rejection sampling — and still lands exactly ONE packed
+    [K+2, slots] host transfer.  Slots advance 1..K+1 tokens per step
+    (per-slot variable acceptance); greedy output is bitwise-identical
+    to plain decode, sampled output keeps the target distribution
+    exactly.  Non-PT / non-paged configs fall back to plain decode.
+  * Per-request PRNG seeds: every sampling draw is keyed by (request
+    seed, token counter), never by an engine-global key, so a request's
+    output replays bit-identically regardless of batch composition.
 """
 from __future__ import annotations
 
@@ -53,12 +68,14 @@ import numpy as np
 
 from repro.common.paged import unwrap_paged, wrap_paged
 from repro.common.types import ModelConfig
+from repro.core import track as pt_lib
 from repro.launch import steps as steps_lib
 from repro.runtime.parallel import NO_PARALLEL
 from repro.serving.cache import (PagedKVCache, batch_axes, insert_rows,
                                  paged_insert_rows)
-from repro.serving.sampler import (SampleParams, sample_batched, sample_step,
-                                   stack_params)
+from repro.serving.sampler import (SALT_DRAFT, SALT_SAMPLE, SampleParams,
+                                   accept_step, row_keys, sample_rows,
+                                   sample_step, stack_params)
 
 RECURRENT_MIXERS = ("mamba", "rglru")
 
@@ -78,6 +95,7 @@ class Request:
     eos_id: Optional[int] = None
     params: SampleParams = dataclasses.field(default_factory=SampleParams)
     on_token: Optional[Callable[["Request", int], None]] = None
+    seed: int = 0                      # per-request PRNG seed (sampling)
     # filled by the engine
     state: RequestState = RequestState.QUEUED
     output: List[int] = dataclasses.field(default_factory=list)
@@ -112,6 +130,11 @@ class EngineMetrics:
         self.max_active = 0            # peak concurrently-running requests
         self.t_start: Optional[float] = None
         self.t_last: Optional[float] = None
+        # speculative decoding
+        self.spec_steps = 0
+        self.draft_proposed = 0        # K per active slot per spec step
+        self.draft_accepted = 0        # drafts the verify forward kept
+        self.acceptance_ema: Optional[float] = None
 
     def start(self) -> None:
         if self.t_start is None:
@@ -124,15 +147,31 @@ class EngineMetrics:
         self.output_tokens += len(req.output)
         self.t_last = req.t_done
 
+    def observe_spec(self, accepted: int, proposed: int,
+                     alpha: float = 0.2) -> None:
+        """One speculative step's acceptance, summed over active slots."""
+        if proposed <= 0:
+            return
+        self.spec_steps += 1
+        self.draft_accepted += accepted
+        self.draft_proposed += proposed
+        rate = accepted / proposed
+        self.acceptance_ema = (rate if self.acceptance_ema is None
+                               else (1 - alpha) * self.acceptance_ema
+                               + alpha * rate)
+
     def summary(self) -> Dict[str, Any]:
-        """TTFT/TPOT percentiles (ms) + output-token throughput."""
+        """TTFT/TPOT percentiles (ms) + output-token throughput.  Safe on
+        an engine that never finished a request: every percentile list
+        may be empty and every denominator zero."""
         def pct(xs: List[float]) -> Dict[str, float]:
             if not xs:
-                return {"p50": 0.0, "p90": 0.0, "p99": 0.0}
-            a = np.asarray(xs) * 1e3
+                return {"p50": 0.0, "p90": 0.0, "p99": 0.0, "mean": 0.0}
+            a = np.asarray(xs, np.float64) * 1e3
             return {"p50": float(np.percentile(a, 50)),
                     "p90": float(np.percentile(a, 90)),
-                    "p99": float(np.percentile(a, 99))}
+                    "p99": float(np.percentile(a, 99)),
+                    "mean": float(np.mean(a))}
 
         elapsed = ((self.t_last or time.time()) - self.t_start
                    if self.t_start is not None else 0.0)
@@ -146,6 +185,11 @@ class EngineMetrics:
                                  if elapsed > 0 else 0.0),
             "ttft_ms": pct(self.ttfts),
             "tpot_ms": pct(self.tpots),
+            "spec_steps": self.spec_steps,
+            "acceptance_rate": (self.draft_accepted / self.draft_proposed
+                                if self.draft_proposed else 0.0),
+            "acceptance_ema": (self.acceptance_ema
+                               if self.acceptance_ema is not None else 0.0),
         }
 
 
@@ -242,7 +286,8 @@ class ModelRunner:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
                  max_seq_len: int, par=NO_PARALLEL, min_bucket: int = 16,
                  paged: bool = True, block_size: int = 16,
-                 num_blocks: Optional[int] = None, prefill_chunk: int = 0):
+                 num_blocks: Optional[int] = None, prefill_chunk: int = 0,
+                 speculate_k: int = 0, draft_tracks: int = 0):
         if cfg.encdec is not None:
             raise ValueError("engine serves decoder-only models")
         self.cfg = cfg
@@ -290,6 +335,37 @@ class ModelRunner:
                         for nm in cfg.layer_names)):
             self.prefill_chunk = 0
 
+        # track-speculative decoding: needs the PT fusion structure (the
+        # drafter is a track slice), the paged cache (the verify forward
+        # is the chunk path) and full attention everywhere; anything else
+        # falls back to plain decode
+        self.speculate_k = 0
+        self.draft_tracks = 0
+        spec_ok = (speculate_k > 0 and cfg.pt is not None and self.paged
+                   and not self.exact_prefill
+                   and all(cfg.spec(nm).window is None
+                           for nm in cfg.layer_names))
+        if spec_ok:
+            self.speculate_k = speculate_k
+            d = draft_tracks or max(1, cfg.pt.n_tracks // 2)
+            self.draft_tracks = min(d, cfg.pt.n_tracks)
+            self.draft_cfg = pt_lib.pt_draft_config(cfg, self.draft_tracks)
+            self.draft_params = pt_lib.pt_draft_params(params, cfg,
+                                                       self.draft_tracks)
+            # lightweight per-slot draft cache: dense, since the drafter
+            # is narrow (d of n tracks) — no paging machinery needed
+            self.draft_cache = pt_lib.pt_init_cache(self.draft_cfg,
+                                                    max_slots, max_seq_len)
+            self._draft_axes = batch_axes(
+                lambda c, b, s: pt_lib.pt_init_cache(self.draft_cfg, b, s),
+                cfg)
+            self._draft_prefill = jax.jit(self._draft_prefill_impl)
+            self._draft_insert = jax.jit(self._draft_insert_impl,
+                                         donate_argnums=(0,))
+            self._spec = jax.jit(self._spec_impl, donate_argnums=(2, 3),
+                                 static_argnames=("max_len",))
+            self.draft_prefill_shapes: set = set()
+
         # the cache argument is dead after each call (self.cache is
         # rebound to the result), so donate it — on GPU/TPU the update
         # happens in place instead of copying the full KV cache per
@@ -336,15 +412,17 @@ class ModelRunner:
         return stats
 
     # -- jitted programs -------------------------------------------------
-    def _prefill_impl(self, params, tokens, lengths, key, temps, tks, tps):
+    def _prefill_impl(self, params, tokens, lengths, seeds, temps, tks, tps):
         """tokens [n, bucket] right-padded; lengths [n] true lengths.
-        Returns (first sampled token [n], prefill cache)."""
+        Returns (first sampled token [n], prefill cache).  The first
+        token is draw 0 of each request's own key stream."""
         batch = {"inputs": tokens, "lengths": lengths}
         logits, cache, _ = self.fns["forward"](params, batch, self.cfg,
                                                self.par, mode="prefill")
         last = jnp.take_along_axis(
             logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
-        toks = sample_batched(last, key, temps, tks, tps)
+        keys = row_keys(seeds, jnp.zeros_like(seeds, jnp.int32), SALT_SAMPLE)
+        toks = sample_rows(last, keys, temps, tks, tps)
         return toks, cache
 
     def _insert_impl(self, dst, src, slots, table_rows):
@@ -355,8 +433,8 @@ class ModelRunner:
             return wrap_paged(out, self._pageable)
         return insert_rows(dst, src, self._axes, slots)
 
-    def _decode_impl(self, params, cache, toks, pos, active, table, key,
-                     temps, tks, tps, eos, remaining, max_len=None):
+    def _decode_impl(self, params, cache, toks, pos, active, table, seeds,
+                     counts, temps, tks, tps, eos, remaining, max_len=None):
         """One decode step for all slots + sampling + done flags, all on
         device.  Returns (cache, packed [2, slots] int32 = (token, done))."""
         if self.paged:
@@ -367,11 +445,12 @@ class ModelRunner:
         else:
             logits, cache = self.fns["decode"](params, cache, toks, pos,
                                                self.cfg, self.par)
-        return cache, sample_step(logits, key, temps, tks, tps, active,
+        keys = row_keys(seeds, counts, SALT_SAMPLE)
+        return cache, sample_step(logits, keys, temps, tks, tps, active,
                                   eos, remaining)
 
     def _chunk_impl(self, params, cache, toks, pos, table_rows, last_idx,
-                    key, temps, tks, tps):
+                    seeds, temps, tks, tps):
         """One prefill chunk for n requests: toks [n, C] appended at
         positions pos[:, None] + arange(C).  Returns (cache, candidate
         first token [n] sampled at each row's last real prompt row —
@@ -381,11 +460,60 @@ class ModelRunner:
                                           block_table=table_rows)
         last = jnp.take_along_axis(
             logits, last_idx[:, None, None], axis=1)[:, 0]
-        return cache, sample_batched(last, key, temps, tks, tps)
+        keys = row_keys(seeds, jnp.zeros_like(seeds, jnp.int32), SALT_SAMPLE)
+        return cache, sample_rows(last, keys, temps, tks, tps)
+
+    def _draft_prefill_impl(self, draft_params, tokens, lengths):
+        """Populate the drafter's dense cache for one admitted prompt
+        (the sampled first token comes from the TARGET prefill; only the
+        draft KV is needed here)."""
+        batch = {"inputs": tokens, "lengths": lengths}
+        _, cache, _ = pt_lib.pt_forward(draft_params, batch, self.draft_cfg,
+                                        self.par.without_axis("track"),
+                                        mode="prefill")
+        return cache
+
+    def _draft_insert_impl(self, dst, src, slots):
+        return insert_rows(dst, src, self._draft_axes, slots)
+
+    def _spec_impl(self, params, draft_params, cache, draft_cache, toks,
+                   pos, active, table, seeds, counts, temps, tks, tps,
+                   max_len=None):
+        """One speculative step, fully on device: K sync-free draft steps
+        (track-subset model, dense cache), ONE K+1-token verify forward
+        for all slots against the paged cache, and batched rejection
+        sampling.  Returns (cache, draft_cache, packed [K+2, slots])."""
+        K = self.speculate_k
+        tok = toks
+        d_toks, d_logits = [], []
+        for j in range(K):
+            logits, draft_cache = pt_lib.pt_draft_step(
+                draft_params, draft_cache, tok, pos + j, self.draft_cfg,
+                self.par)
+            keys = row_keys(seeds, counts + j, SALT_DRAFT)
+            tok = sample_rows(logits, keys, temps, tks, tps)
+            d_toks.append(tok)
+            d_logits.append(logits)
+        # one extra draft forward feeds d_K so its K/V lands at pos+K:
+        # on the all-accepted path the next step starts from pos+K+1 and
+        # the drafter must have seen every accepted position (a rejected
+        # tail is simply overwritten next step).  Logits are discarded.
+        _, draft_cache = pt_lib.pt_draft_step(
+            draft_params, draft_cache, tok, pos + K, self.draft_cfg,
+            self.par)
+        seq = jnp.concatenate([toks[:, None]] + [t[:, None] for t in d_toks],
+                              axis=1)                       # [B, K+1]
+        tgt, cache = self.fns["verify"](params, cache, seq, pos, self.cfg,
+                                        self.par, block_table=table,
+                                        kv_max_len=max_len)
+        packed = accept_step(tgt, jnp.stack(d_logits, axis=1),
+                             jnp.stack(d_toks, axis=1), seeds, counts,
+                             temps, tks, tps, active)
+        return cache, draft_cache, packed
 
     # -- host-facing ops -------------------------------------------------
     def prefill(self, prompts: Sequence[Sequence[int]], bucket: int,
-                slots: Sequence[int], key,
+                slots: Sequence[int], seeds: Sequence[int],
                 params_list: Sequence[SampleParams]) -> np.ndarray:
         """Batched prefill of ``prompts`` into cache ``slots``.  One
         jitted forward per (n, bucket) shape; returns first tokens [n]."""
@@ -397,7 +525,8 @@ class ModelRunner:
             lengths[i] = len(p)
         temps, tks, tps = stack_params(params_list)
         toks, cache = self._prefill(self.params, jnp.asarray(tokens),
-                                    jnp.asarray(lengths), key,
+                                    jnp.asarray(lengths),
+                                    jnp.asarray(seeds, jnp.uint32),
                                     jnp.asarray(temps), jnp.asarray(tks),
                                     jnp.asarray(tps))
         table_rows = (self.kv.table_rows(slots) if self.paged
@@ -408,19 +537,67 @@ class ModelRunner:
         return np.asarray(toks)
 
     def chunk(self, toks: np.ndarray, pos: np.ndarray, slots: Sequence[int],
-              last_idx: np.ndarray, key,
+              last_idx: np.ndarray, seeds: Sequence[int],
               params_list: Sequence[SampleParams]) -> np.ndarray:
         """One chunk step for the currently-prefilling requests."""
         temps, tks, tps = stack_params(params_list)
         self.cache, cand = self._chunk(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
-            self.kv.table_rows(slots), jnp.asarray(last_idx), key,
+            self.kv.table_rows(slots), jnp.asarray(last_idx),
+            jnp.asarray(seeds, jnp.uint32),
             jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps))
         self.chunk_shapes.add(tuple(toks.shape))
         return np.asarray(cand)
 
-    def decode(self, toks, pos, active, key, temps, tks, tps, eos,
-               remaining) -> Tuple[np.ndarray, np.ndarray]:
+    def draft_prefill(self, prompts: Sequence[Sequence[int]], bucket: int,
+                      slots: Sequence[int]) -> None:
+        """Populate the drafter's dense cache for newly-started requests
+        (one batched narrow forward; the drafter is d of n tracks).
+
+        Known limit: this is a whole-prompt forward even when the target
+        prefill was chunked, so a very long prompt briefly stalls the
+        step loop at decode start (bounded: the drafter is narrow).
+        Chunked draft fill is a ROADMAP item — it needs a dense
+        multi-token cache-append path."""
+        n = len(prompts)
+        tokens = np.zeros((n, bucket), np.int32)
+        lengths = np.empty((n,), np.int32)
+        for i, p in enumerate(prompts):
+            tokens[i, :len(p)] = p
+            lengths[i] = len(p)
+        cache = self._draft_prefill(self.draft_params, jnp.asarray(tokens),
+                                    jnp.asarray(lengths))
+        self.draft_cache = self._draft_insert(
+            self.draft_cache, cache, jnp.asarray(slots, jnp.int32))
+        self.draft_prefill_shapes.add((n, bucket))
+
+    def _masked_table(self, active) -> Any:
+        """Device block table with inactive lanes zeroed (their writes
+        land in the trash block).  Cached across steps; only rebuilt on
+        allocate/free/active-set transitions."""
+        act = np.asarray(active, bool)
+        key_now = (self.kv.version, act.tobytes())
+        if key_now != self._table_key:
+            self._table_dev = jnp.asarray(
+                self.kv.table_np * act.astype(np.int32)[:, None])
+            self._table_key = key_now
+        return self._table_dev
+
+    def _live_max_len(self, pos, active, extra: int = 0) -> Optional[int]:
+        """Static power-of-two-block bound on the live cache prefix
+        (compile variants stay O(log blocks))."""
+        act = np.asarray(active, bool)
+        if not act.any():
+            return None
+        bs = self.kv.block_size
+        need = -(-(int(np.asarray(pos)[act].max()) + 1 + extra) // bs)
+        p2 = 1
+        while p2 < need:
+            p2 *= 2
+        return min(self.kv.blocks_per_seq, p2) * bs
+
+    def decode(self, toks, pos, active, seeds, counts, temps, tks, tps,
+               eos, remaining) -> Tuple[np.ndarray, np.ndarray]:
         """One decode step.  Exactly one host transfer: the packed
         (token, done) array."""
         max_len = None
@@ -428,37 +605,47 @@ class ModelRunner:
             # lanes not actively decoding (idle, or mid-chunked-prefill)
             # get zeroed table rows: their stale-position writes land in
             # the trash block, never in blocks owned by live requests.
-            # The masked table only changes on allocate/free/active-set
-            # transitions, so the device copy is cached across steps.
-            act = np.asarray(active, bool)
-            key_now = (self.kv.version, act.tobytes())
-            if key_now != self._table_key:
-                self._table_dev = jnp.asarray(
-                    self.kv.table_np * act.astype(np.int32)[:, None])
-                self._table_key = key_now
-            table = self._table_dev
-            # static bound on the live cache prefix (rounded to a power-
-            # of-two block count so compile variants stay O(log blocks)):
-            # the paged kernel sweeps only these blocks.  Only the Pallas
-            # path consumes it — the jnp reference path stays a single
-            # compile (and bit-identical to the dense cache)
-            if act.any() and self.cfg.use_pallas:
-                bs = self.kv.block_size
-                need = -(-(int(np.asarray(pos)[act].max()) + 1) // bs)
-                p2 = 1
-                while p2 < need:
-                    p2 *= 2
-                max_len = min(self.kv.blocks_per_seq, p2) * bs
+            table = self._masked_table(active)
+            # the paged kernel sweeps only the live blocks.  Only the
+            # Pallas path consumes the bound — the jnp reference path
+            # stays a single compile (and bit-identical to the dense
+            # cache)
+            if self.cfg.use_pallas:
+                max_len = self._live_max_len(pos, active)
         else:
             table = jnp.zeros((len(toks), 1), jnp.int32)
         self.cache, packed = self._decode(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(active), table, key, jnp.asarray(temps),
+            jnp.asarray(active), table, jnp.asarray(seeds, jnp.uint32),
+            jnp.asarray(counts, jnp.int32), jnp.asarray(temps),
             jnp.asarray(tks), jnp.asarray(tps), jnp.asarray(eos),
             jnp.asarray(remaining), max_len=max_len)
         host = np.asarray(packed)                  # THE transfer
         self.decode_transfers += 1
         return host[0], host[1].astype(bool)
+
+    def draft_verify(self, toks, pos, active, seeds, counts, temps, tks,
+                     tps) -> Tuple[np.ndarray, np.ndarray]:
+        """One speculative step for all decoding slots.  Exactly one host
+        transfer: the packed (tokens ‖ emitted-count) array.  Returns
+        (tokens [slots, K+1], counts [slots])."""
+        table = self._masked_table(active)
+        # the verify gather bound mirrors the decode-kernel bound; the
+        # jnp path skips it so verify logits stay bitwise-identical to
+        # the single-token decode path (greedy spec == greedy plain)
+        max_len = None
+        if self.cfg.use_pallas:
+            max_len = self._live_max_len(pos, active,
+                                         extra=self.speculate_k)
+        self.cache, self.draft_cache, packed = self._spec(
+            self.params, self.draft_params, self.cache, self.draft_cache,
+            jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(active), table,
+            jnp.asarray(seeds, jnp.uint32), jnp.asarray(counts, jnp.int32),
+            jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps),
+            max_len=max_len)
+        host = np.asarray(packed)                  # THE transfer
+        self.decode_transfers += 1
+        return host[:-1].T, host[-1]
 
 
 # ---------------------------------------------------------------------------
@@ -471,7 +658,8 @@ class Engine:
                  max_waiting_prefill_tokens: int = 4096,
                  min_bucket: int = 16, paged: bool = True,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, speculate_k: int = 0,
+                 draft_tracks: int = 0):
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
@@ -480,12 +668,14 @@ class Engine:
                                   min_bucket=min_bucket, paged=paged,
                                   block_size=block_size,
                                   num_blocks=num_blocks,
-                                  prefill_chunk=prefill_chunk)
+                                  prefill_chunk=prefill_chunk,
+                                  speculate_k=speculate_k,
+                                  draft_tracks=draft_tracks)
         self.scheduler = Scheduler(max_slots, self.runner.bucket_for,
                                    max_waiting_prefill_tokens,
                                    charge_fn=self.runner.admission_charge)
         self.metrics = EngineMetrics()
-        self.key = jax.random.PRNGKey(seed)
+        self.seed = seed               # base for derived per-request seeds
         self._next_rid = 0
         self.steps_run = 0
 
@@ -499,6 +689,8 @@ class Engine:
         self._topps = np.ones((B,), np.float32)
         self._eos = np.full((B,), -1, np.int32)
         self._remaining = np.zeros((B,), np.int32)
+        self._seeds = np.zeros((B,), np.uint32)    # per-request PRNG seed
+        self._counts = np.zeros((B,), np.int32)    # tokens emitted so far
 
     # ------------------------------------------------------------------
     def _reserve_tokens(self, req: Request) -> int:
@@ -511,10 +703,16 @@ class Engine:
     def submit(self, prompt: List[int], max_new_tokens: int = 32,
                eos_id: Optional[int] = None,
                params: SampleParams = SampleParams(),
-               on_token: Optional[Callable[[Request, int], None]] = None
-               ) -> Request:
+               on_token: Optional[Callable[[Request, int], None]] = None,
+               seed: Optional[int] = None) -> Request:
+        """``seed`` keys this request's sampling stream; with the same
+        seed a request replays bit-identically regardless of what else
+        shares its batch.  Defaults to a deterministic function of the
+        engine seed and the submission index."""
+        if seed is None:
+            seed = (self.seed * 1_000_003 + self._next_rid) & 0x7FFFFFFF
         req = Request(self._next_rid, list(prompt), max_new_tokens, eos_id,
-                      params, on_token)
+                      params, on_token, seed=seed)
         if not req.prompt:
             raise ValueError("empty prompt")
         self.runner.bucket_for(len(req.prompt))    # validates length
@@ -565,8 +763,11 @@ class Engine:
 
         return can_fit
 
-    def _start_decode(self, slot: int, req: Request, tok: int) -> None:
-        """First token sampled: move the request into the decode batch."""
+    def _start_decode(self, slot: int, req: Request, tok: int,
+                      batch_draft: bool = False) -> None:
+        """First token sampled: move the request into the decode batch.
+        ``batch_draft``: the caller (bucketed admission) will run one
+        batched draft prefill for the whole group afterwards."""
         req.t_first = time.time()
         req.state = RequestState.DECODE
         L = len(req.prompt)
@@ -577,10 +778,16 @@ class Engine:
         self._pos[slot] = L
         self._active[slot] = True
         self._remaining[slot] = min(req.max_new_tokens, cap) - 1
+        self._counts[slot] = 1
         self._emit(slot, req, int(tok))
         if (self._remaining[slot] <= 0
                 or (req.eos_id is not None and tok == req.eos_id)):
             self._finish(slot, req)
+        elif self.runner.speculate_k and not batch_draft:
+            # the drafter joins here: one narrow forward fills its dense
+            # per-slot cache with the prompt's K/V
+            self.runner.draft_prefill([req.prompt],
+                                      self.runner.bucket_for(L), [slot])
 
     def _admit(self) -> None:
         chunked = self.runner.prefill_chunk > 0
@@ -596,14 +803,25 @@ class Engine:
                 self._topks[slot] = req.params.top_k
                 self._topps[slot] = req.params.top_p
                 self._eos[slot] = -1 if req.eos_id is None else req.eos_id
+                self._seeds[slot] = req.seed
+                self._counts[slot] = 0
             if chunked:
                 continue                 # chunks run in _prefill_chunks
-            self.key, k = jax.random.split(self.key)
             toks = self.runner.prefill([r.prompt for r in reqs], bucket,
-                                       slots, k, [r.params for r in reqs])
+                                       slots, [r.seed for r in reqs],
+                                       [r.params for r in reqs])
             for slot, req, tok in zip(slots, reqs, toks):
                 req.prefilled = len(req.prompt)
-                self._start_decode(slot, req, tok)
+                self._start_decode(slot, req, tok, batch_draft=True)
+            if self.runner.speculate_k:
+                # one batched narrow forward fills the drafter's cache
+                # for every request of the group still decoding
+                started = [(s, r) for s, r in zip(slots, reqs)
+                           if r.state is RequestState.DECODE]
+                if started:
+                    self.runner.draft_prefill(
+                        [r.prompt for _, r in started], bucket,
+                        [s for s, _ in started])
 
     def _prefill_chunks(self) -> None:
         """Advance every prefilling request by one chunk (one batched
@@ -622,9 +840,9 @@ class Engine:
             toks[i, :len(chunk)] = chunk
             pos[i] = req.prefilled
             last_idx[i] = min(C - 1, len(req.prompt) - 1 - req.prefilled)
-        self.key, k = jax.random.split(self.key)
         cand = self.runner.chunk(toks, pos, [s for s, _ in rows], last_idx,
-                                 k, [r.params for _, r in rows])
+                                 [r.seed for _, r in rows],
+                                 [r.params for _, r in rows])
         for i, (slot, req) in enumerate(rows):
             req.prefilled += C
             if req.prefilled >= len(req.prompt):
@@ -632,9 +850,36 @@ class Engine:
                 self._start_decode(slot, req, cand[i])
 
     # ------------------------------------------------------------------
+    def _spec_step(self, active: List[Tuple[int, Request]]) -> None:
+        """One track-speculative step: every decoding slot advances by
+        1..K+1 tokens (per-slot variable acceptance).  EOS and the
+        remaining-budget cap are applied host-side on the packed result,
+        so a slot never advances past its reservation."""
+        toks_mat, counts = self.runner.draft_verify(
+            self._tok, self._pos, self._active, self._seeds, self._counts,
+            self._temps, self._topks, self._topps)
+        acc = prop = 0
+        for slot, req in active:
+            m = int(counts[slot])
+            prop += self.runner.speculate_k
+            acc += max(0, m - 1)
+            for j in range(m):
+                tok = int(toks_mat[slot, j])
+                self._emit(slot, req, tok)
+                self._tok[slot] = tok
+                self._pos[slot] += 1
+                self._counts[slot] += 1
+                self._remaining[slot] -= 1
+                if (self._remaining[slot] <= 0
+                        or (req.eos_id is not None and tok == req.eos_id)):
+                    self._finish(slot, req)
+                    break
+        self.metrics.observe_spec(acc, prop)
+
     def step(self) -> int:
         """Admit queued requests, advance prefill chunks, and run one
-        decode step for all decoding slots.  Returns slots advanced."""
+        decode (or speculative draft+verify) step for all decoding
+        slots.  Returns slots advanced."""
         self._admit()
         if self.runner.prefill_chunk:
             self._prefill_chunks()
@@ -646,15 +891,20 @@ class Engine:
             # chunked prefill may still be in flight with nothing decoding
             return len([1 for _, r in self.scheduler.active_slots()
                         if r.state is RequestState.PREFILL])
-        self.key, k = jax.random.split(self.key)
+        if self.runner.speculate_k:
+            self._spec_step(active)
+            self.steps_run += 1
+            return len(active)
         toks, done = self.runner.decode(
-            self._tok, self._pos, self._active, k, self._temps,
-            self._topks, self._topps, self._eos, self._remaining)
+            self._tok, self._pos, self._active, self._seeds, self._counts,
+            self._temps, self._topks, self._topps, self._eos,
+            self._remaining)
         for slot, req in active:
             tok = int(toks[slot])
             self._emit(slot, req, tok)
             self._tok[slot] = tok
             self._pos[slot] += 1
+            self._counts[slot] += 1
             self._remaining[slot] -= 1
             if done[slot]:
                 self._finish(slot, req)

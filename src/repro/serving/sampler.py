@@ -1,15 +1,26 @@
-"""Token samplers: greedy / temperature / top-k / top-p.
+"""Token samplers: greedy / temperature / top-k / top-p, plus the
+speculative-decoding accept step.
 
-Two entry points:
+Entry points:
 
   sample(logits, key, params)            — single SampleParams for the whole
       batch, Python-branching on the param values (kept for tests/tools).
   sample_batched(logits, key, t, k, p)   — per-row params as *traced arrays*,
-      fully branch-free, so the serving engine can fuse sampling into the
-      jitted decode step (one compile, zero host sync per token).
+      fully branch-free, one shared key.
+  sample_rows(logits, keys, t, k, p)     — same, but with PER-ROW keys
+      [B, 2]: each slot's randomness depends only on its own request seed
+      and token counter, never on batch composition.
+  sample_step(...)                       — fused decode-step epilogue:
+      per-slot sampling + done flags, packed [2, B] int32 (ONE transfer).
+  accept_step(...)                       — speculative decoding: batched
+      rejection sampling over K draft tokens + a bonus token per slot,
+      packed [K+2, B] int32 (tokens ‖ emitted-count; still ONE transfer).
 
-``stack_params`` converts a list of SampleParams into the three arrays the
-batched sampler consumes.
+``row_keys(seeds, counters, salt)`` derives the per-row keys; distinct
+salts separate the draft / accept / resample randomness streams so a
+request replays bit-identically regardless of who shares its batch.
+``stack_params`` converts a list of SampleParams into the three arrays
+the batched samplers consume.
 """
 from __future__ import annotations
 
@@ -21,6 +32,11 @@ import jax.numpy as jnp
 import numpy as np
 
 NEG = -1e30
+
+# salts for the per-request randomness streams (row_keys)
+SALT_SAMPLE = 0        # plain decode / resample / bonus token draws
+SALT_ACCEPT = 1        # speculative accept uniforms
+SALT_DRAFT = 2         # drafter's own sampling
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +52,20 @@ def stack_params(params: Sequence[SampleParams]
     return (np.asarray([p.temperature for p in params], np.float32),
             np.asarray([p.top_k for p in params], np.int32),
             np.asarray([p.top_p for p in params], np.float32))
+
+
+def row_keys(seeds: jax.Array, counters: jax.Array, salt: int) -> jax.Array:
+    """Per-row PRNG keys [B, 2] from (request seed, token counter, salt).
+
+    The key depends ONLY on the request's own seed and its position in
+    the output stream, so decode (and spec-decode accept/resample) is
+    reproducible per request regardless of batch composition."""
+    def one(s, c):
+        return jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(s), c), salt)
+
+    return jax.vmap(one)(seeds.astype(jnp.uint32),
+                         counters.astype(jnp.int32))
 
 
 def sample(logits: jax.Array, key: jax.Array,
@@ -57,38 +87,16 @@ def sample(logits: jax.Array, key: jax.Array,
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
-def sample_step(logits: jax.Array, key: jax.Array, temperature: jax.Array,
-                top_k: jax.Array, top_p: jax.Array, active: jax.Array,
-                eos: jax.Array, remaining: jax.Array) -> jax.Array:
-    """One fused device-side decode-step epilogue: per-slot sampling plus
-    done-flag computation, packed as [2, B] int32 = (token, done) — the
-    single host transfer of the decode loop.
+def filter_logits(logits: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Temperature-scale + per-row top-k / top-p mask.  logits [B, V] with
+    params [B] -> filtered scaled logits [B, V] (NEG outside the support).
 
-    ``done`` rows are the engine's reclamation signal: the slot is
-    released and (in paged mode) its KV blocks go back to the free pool
-    the moment the packed array lands on the host, so a finished short
-    request frees memory for queued work without waiting for the batch.
-    """
-    new = sample_batched(logits, key, temperature, top_k, top_p)
-    new = jnp.where(active, new, 0)
-    done = active & ((remaining <= 1) | ((eos >= 0) & (new == eos)))
-    return jnp.stack([new, done.astype(jnp.int32)])
-
-
-def sample_batched(logits: jax.Array, key: jax.Array,
-                   temperature: jax.Array, top_k: jax.Array,
-                   top_p: jax.Array) -> jax.Array:
-    """Per-row sampling with traced params.  logits [B,V] -> tokens [B].
-
-    temperature [B] f32 (<=0 row => greedy), top_k [B] i32 (<=0 => off),
-    top_p [B] f32 (>=1 => off).  All filters are data-dependent `where`
-    masks over a per-row sort, so the whole function jits once regardless
-    of the parameter mix across slots.
+    All filters are data-dependent `where` masks over a per-row sort, so
+    every caller jits once regardless of the parameter mix across slots.
     """
     logits = logits.astype(jnp.float32)
     V = logits.shape[-1]
-    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-
     t = jnp.maximum(temperature, 1e-6)[:, None]
     scaled = logits / t
     # top-k: per-row k-th largest value as the cutoff (rank-based)
@@ -103,7 +111,142 @@ def sample_batched(logits: jax.Array, key: jax.Array,
     cutoff_idx = jnp.clip(jnp.sum(cum < top_p[:, None], axis=-1,
                                   keepdims=True), 0, V - 1)
     cutoff = jnp.take_along_axis(sorted_desc, cutoff_idx, axis=-1)
-    scaled = jnp.where((top_p[:, None] < 1.0) & (scaled < cutoff), NEG,
-                       scaled)
+    return jnp.where((top_p[:, None] < 1.0) & (scaled < cutoff), NEG,
+                     scaled)
+
+
+def sample_batched(logits: jax.Array, key: jax.Array,
+                   temperature: jax.Array, top_k: jax.Array,
+                   top_p: jax.Array) -> jax.Array:
+    """Per-row sampling with traced params, one shared key.
+    logits [B,V] -> tokens [B].  temperature [B] f32 (<=0 row => greedy),
+    top_k [B] i32 (<=0 => off), top_p [B] f32 (>=1 => off)."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = filter_logits(logits, temperature, top_k, top_p)
     sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
     return jnp.where(temperature <= 0.0, greedy, sampled)
+
+
+def sample_rows(logits: jax.Array, keys: jax.Array,
+                temperature: jax.Array, top_k: jax.Array,
+                top_p: jax.Array) -> jax.Array:
+    """``sample_batched`` with per-row keys [B, 2] (see ``row_keys``)."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = filter_logits(logits, temperature, top_k, top_p)
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)
+
+
+def sample_step(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
+                top_k: jax.Array, top_p: jax.Array, active: jax.Array,
+                eos: jax.Array, remaining: jax.Array) -> jax.Array:
+    """One fused device-side decode-step epilogue: per-slot sampling plus
+    done-flag computation, packed as [2, B] int32 = (token, done) — the
+    single host transfer of the decode loop.  ``keys`` [B, 2] are per-row
+    (request-seeded) keys.
+
+    ``done`` rows are the engine's reclamation signal: the slot is
+    released and (in paged mode) its KV blocks go back to the free pool
+    the moment the packed array lands on the host, so a finished short
+    request frees memory for queued work without waiting for the batch.
+    """
+    new = sample_rows(logits, keys, temperature, top_k, top_p)
+    new = jnp.where(active, new, 0)
+    done = active & ((remaining <= 1) | ((eos >= 0) & (new == eos)))
+    return jnp.stack([new, done.astype(jnp.int32)])
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: batched accept / resample
+# ---------------------------------------------------------------------------
+
+def _filtered_probs(logits: jax.Array, temperature: jax.Array,
+                    top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Probability vectors of the filtered distribution; greedy rows
+    (temp <= 0) are EXACT one-hots at the argmax, so the generic
+    accept/resample math reduces to deterministic argmax agreement —
+    greedy spec decode is bitwise-identical to greedy plain decode."""
+    greedy = jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1],
+                            dtype=jnp.float32)
+    probs = jax.nn.softmax(filter_logits(logits, temperature, top_k, top_p),
+                           axis=-1)
+    return jnp.where((temperature <= 0.0)[:, None], greedy, probs)
+
+
+def accept_step(target_logits: jax.Array, draft_logits: jax.Array,
+                draft_toks: jax.Array, seeds: jax.Array,
+                counters: jax.Array, temperature: jax.Array,
+                top_k: jax.Array, top_p: jax.Array,
+                active: jax.Array) -> jax.Array:
+    """Batched speculative accept/resample over K draft tokens per slot.
+
+    target_logits [B, K+1, V]: verify-forward logits (row j scores the
+    token at position pos+j+1); draft_logits [B, K, V] and draft_toks
+    [B, K]: the drafter's distributions and sampled tokens.  Standard
+    rejection sampling per slot under the slot's own filtered
+    (temperature/top-k/top-p) distributions:
+
+      accept d_j  with prob min(1, p_j[d_j] / q_j[d_j]);
+      on first rejection, emit a token from norm(max(p_j - q_j, 0));
+      if all K accepted, emit a bonus token from p_K.
+
+    The emitted-token marginal equals the target distribution exactly for
+    ANY drafter — acceptance rate only changes throughput, never the
+    distribution.  Greedy rows use one-hot p/q, so acceptance degenerates
+    to argmax agreement and every emitted token is the target argmax.
+
+    Returns packed int32 [K+2, B]: rows 0..K the emitted tokens (padded
+    with 0), row K+1 the per-slot emitted count m = n_accepted + 1
+    (0 for inactive slots) — one host transfer for the whole spec step.
+    EOS / remaining-budget truncation happens host-side on the packed
+    result, so no extra device round-trip is needed.
+    """
+    B, K1, V = target_logits.shape
+    K = K1 - 1
+
+    def per_pos(probs_fn, logits3):
+        n = logits3.shape[1]
+        flat = logits3.reshape(B * n, V)
+        rep = lambda a: jnp.repeat(a, n, axis=0)
+        out = probs_fn(flat, rep(temperature), rep(top_k), rep(top_p))
+        return out.reshape(B, n, V)
+
+    p = per_pos(_filtered_probs, target_logits)          # [B, K+1, V]
+    q = per_pos(_filtered_probs, draft_logits)           # [B, K, V]
+
+    # accept test per draft position
+    p_at = jnp.take_along_axis(p[:, :K], draft_toks[..., None],
+                               axis=-1)[..., 0]          # [B, K]
+    q_at = jnp.take_along_axis(q, draft_toks[..., None], axis=-1)[..., 0]
+    u = jnp.stack(
+        [jax.vmap(lambda k: jax.random.uniform(k, ()))(
+            row_keys(seeds, counters + j, SALT_ACCEPT))
+         for j in range(K)], axis=1)                     # [B, K]
+    accept = u < p_at / jnp.maximum(q_at, 1e-30)         # [B, K]
+    n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
+
+    # residual (or bonus) distribution at the first rejected position;
+    # padding q with zeros makes the all-accepted case max(p_K - 0, 0)
+    # = p_K — the bonus draw — with no branch.
+    q_pad = jnp.concatenate([q, jnp.zeros((B, 1, V), q.dtype)], axis=1)
+    p_n = jnp.take_along_axis(p, n_acc[:, None, None], axis=1)[:, 0]
+    q_n = jnp.take_along_axis(q_pad, n_acc[:, None, None], axis=1)[:, 0]
+    res = jnp.maximum(p_n - q_n, 0.0)
+    res_sum = jnp.sum(res, axis=-1, keepdims=True)
+    res = jnp.where(res_sum > 0, res / jnp.maximum(res_sum, 1e-30), p_n)
+    res_keys = row_keys(seeds, counters + n_acc, SALT_SAMPLE)
+    extra = jax.vmap(jax.random.categorical)(
+        res_keys, jnp.log(jnp.maximum(res, 1e-38))).astype(jnp.int32)
+    # greedy rows: deterministic argmax of the (one-hot) residual — the
+    # categorical above would also land there, but keep it exact.
+    extra = jnp.where(temperature <= 0.0,
+                      jnp.argmax(res, axis=-1).astype(jnp.int32), extra)
+
+    jr = jnp.arange(K1, dtype=jnp.int32)[None]           # [1, K+1]
+    d_pad = jnp.concatenate(
+        [draft_toks, jnp.zeros((B, 1), jnp.int32)], axis=1)
+    toks = jnp.where(jr < n_acc[:, None], d_pad,
+                     jnp.where(jr == n_acc[:, None], extra[:, None], 0))
+    m = jnp.where(active, n_acc + 1, 0)
+    toks = jnp.where(active[:, None], toks, 0)
+    return jnp.concatenate([toks.T.astype(jnp.int32), m[None]], axis=0)

@@ -1,8 +1,9 @@
 """Serving engine: bucketed-prefill parity with the naive autoregressive
 reference (dense, windowed, recurrent and PT configs), paged-vs-dense
 cache equivalence, chunked prefill, batched admission, scheduler policy,
-per-request sampling isolation, device-side sampling, streaming callbacks
-and metrics."""
+per-request sampling isolation, device-side sampling, per-request seeded
+reproducibility, track-speculative decoding (greedy bitwise parity +
+distribution preservation), streaming callbacks and metrics."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,14 +12,18 @@ import pytest
 from repro.common.paged import PagedLeaf, wrap_paged
 from repro.common.types import LayerSpec, ModelConfig
 from repro.configs import reduced_config
+from repro.core.track import pt_ify
 from repro.launch import steps as steps_lib
-from repro.models.attention import attention_decode, attention_init
+from repro.models.attention import (attention_chunk, attention_decode,
+                                    attention_init)
 from repro.models.decoder import init_lm, lm_forward
 from repro.serving.cache import (PagedKVCache, batch_axes, insert_rows,
                                  paged_insert_rows, seq_axes)
-from repro.serving.engine import (Engine, Request, RequestState, Scheduler)
-from repro.serving.sampler import (SampleParams, sample, sample_batched,
-                                   stack_params)
+from repro.serving.engine import (Engine, EngineMetrics, Request,
+                                  RequestState, Scheduler)
+from repro.serving.sampler import (SALT_DRAFT, SampleParams, accept_step,
+                                   row_keys, sample, sample_batched,
+                                   sample_rows, stack_params)
 
 
 def _naive_greedy(params, cfg, prompt, n_new):
@@ -600,3 +605,396 @@ def test_eos_stops_generation():
     eng.run()
     assert req.output == out[:3]
     assert req.state is RequestState.DONE
+
+
+# ---------------------------------------------------------------------------
+# per-request seeded reproducibility
+# ---------------------------------------------------------------------------
+
+def test_per_request_seed_reproducible_across_batch_composition():
+    """Sampling randomness is keyed by (request seed, token counter), so
+    a sampled request replays BIT-IDENTICALLY whether it runs alone or
+    next to other (differently-parameterized) requests."""
+    cfg, params = _tinyllama()
+    sp = SampleParams(temperature=0.9, top_k=20)
+    solo = Engine(cfg, params, max_slots=2, max_seq_len=32, seed=0)
+    r_solo = solo.submit([1, 2, 3, 4], 6, params=sp, seed=1234)
+    solo.run()
+
+    mixed = Engine(cfg, params, max_slots=2, max_seq_len=32, seed=99)
+    r_other = mixed.submit([9, 8, 7, 6, 5], 6,
+                           params=SampleParams(temperature=1.3), seed=777)
+    r_same = mixed.submit([1, 2, 3, 4], 6, params=sp, seed=1234)
+    mixed.run()
+    assert r_same.output == r_solo.output
+    assert all(0 <= t < cfg.vocab_size for t in r_other.output)
+
+    # and two identical engines are trivially bitwise-equal end to end
+    again = Engine(cfg, params, max_slots=2, max_seq_len=32, seed=99)
+    a = again.submit([9, 8, 7, 6, 5], 6,
+                     params=SampleParams(temperature=1.3), seed=777)
+    b = again.submit([1, 2, 3, 4], 6, params=sp, seed=1234)
+    again.run()
+    assert a.output == r_other.output and b.output == r_same.output
+
+
+def test_default_seeds_deterministic_per_engine_seed():
+    """Without explicit per-request seeds, outputs are still a pure
+    function of (engine seed, submission order)."""
+    cfg, params = _tinyllama()
+    outs = []
+    for _ in range(2):
+        eng = Engine(cfg, params, max_slots=2, max_seq_len=32, seed=5)
+        outs.append(eng.generate([[1, 2, 3], [4, 5, 6]], 5,
+                                 params=SampleParams(temperature=1.0)))
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# sampler parity grids
+# ---------------------------------------------------------------------------
+
+def test_sampler_parity_grid_scalar_vs_batched():
+    """sample_batched with uniform rows is bitwise-equal to the scalar
+    sampler across the temperature/top-k/top-p grid (same key, same
+    filter, same categorical draw)."""
+    logits = jax.random.normal(jax.random.PRNGKey(1), (5, 64))
+    for temp in (0.0, 0.7, 1.0):
+        for tk in (0, 3, 16):
+            for tp in (1.0, 0.9, 0.5):
+                sp = SampleParams(temperature=temp, top_k=tk, top_p=tp)
+                key = jax.random.PRNGKey(int(temp * 10 + tk + tp * 100))
+                ref = sample(logits, key, sp)
+                t, k, p = stack_params([sp] * 5)
+                out = sample_batched(logits, key, jnp.asarray(t),
+                                     jnp.asarray(k), jnp.asarray(p))
+                assert (np.asarray(ref) == np.asarray(out)).all(), sp
+
+
+def test_sample_rows_respects_filters_per_row():
+    """Per-row-keyed sampling stays inside each row's own filtered
+    support: greedy rows are exactly argmax, top-k rows land in the
+    row's top-k set, top-p rows inside the nucleus."""
+    logits = jax.random.normal(jax.random.PRNGKey(2), (4, 64))
+    mix = [SampleParams(), SampleParams(temperature=1.0, top_k=3),
+           SampleParams(temperature=0.8, top_p=0.7),
+           SampleParams(temperature=1.2, top_k=8, top_p=0.9)]
+    t, k, p = stack_params(mix)
+    am = np.asarray(jnp.argmax(logits, -1))
+    for trial in range(20):
+        keys = row_keys(jnp.full((4,), trial, jnp.uint32),
+                        jnp.arange(4, dtype=jnp.int32), 0)
+        out = np.asarray(sample_rows(logits, keys, jnp.asarray(t),
+                                     jnp.asarray(k), jnp.asarray(p)))
+        assert out[0] == am[0]
+        top3 = np.asarray(jax.lax.top_k(logits[1], 3)[1])
+        assert out[1] in top3.tolist()
+        top8 = np.asarray(jax.lax.top_k(logits[3], 8)[1])
+        assert out[3] in top8.tolist()
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: accept_step math
+# ---------------------------------------------------------------------------
+
+def test_accept_step_greedy_semantics():
+    """Greedy rows: acceptance is exact argmax agreement; the first
+    disagreement is replaced by the target argmax; full agreement earns
+    the bonus token."""
+    V, K = 8, 3
+    tgt = np.full((2, K + 1, V), -5.0, np.float32)
+    # target argmax chain: 3, 4, 5, 6
+    for j, a in enumerate((3, 4, 5, 6)):
+        tgt[:, j, a] = 5.0
+    dl = np.full((2, K, V), -5.0, np.float32)
+    # row 0 drafts agree everywhere; row 1 disagrees at position 1
+    for j, a in enumerate((3, 4, 5)):
+        dl[0, j, a] = 5.0
+    for j, a in enumerate((3, 0, 5)):
+        dl[1, j, a] = 5.0
+    d_toks = jnp.asarray([[3, 4, 5], [3, 0, 5]], jnp.int32)
+    zeros = jnp.zeros((2,), jnp.int32)
+    packed = accept_step(jnp.asarray(tgt), jnp.asarray(dl), d_toks,
+                         jnp.zeros((2,), jnp.uint32), zeros,
+                         jnp.zeros((2,), jnp.float32), zeros,
+                         jnp.ones((2,), jnp.float32),
+                         jnp.ones((2,), bool))
+    toks = np.asarray(packed[:-1].T)
+    m = np.asarray(packed[-1])
+    assert m.tolist() == [K + 1, 2]
+    assert toks[0].tolist() == [3, 4, 5, 6]          # all + bonus argmax
+    assert toks[1, :2].tolist() == [3, 4]            # d_1, then target argmax
+
+
+def test_accept_step_inactive_rows_emit_nothing():
+    V, K = 8, 2
+    rng = np.random.default_rng(0)
+    packed = accept_step(
+        jnp.asarray(rng.normal(size=(3, K + 1, V)), jnp.float32),
+        jnp.asarray(rng.normal(size=(3, K, V)), jnp.float32),
+        jnp.asarray(rng.integers(0, V, (3, K)), jnp.int32),
+        jnp.arange(3, dtype=jnp.uint32), jnp.zeros((3,), jnp.int32),
+        jnp.ones((3,), jnp.float32), jnp.zeros((3,), jnp.int32),
+        jnp.ones((3,), jnp.float32), jnp.asarray([True, False, True]))
+    m = np.asarray(packed[-1])
+    toks = np.asarray(packed[:-1].T)
+    assert m[1] == 0 and (toks[1] == 0).all()
+    assert m[0] >= 1 and m[2] >= 1
+
+
+def test_accept_step_matches_target_distribution():
+    """The statistical heart of speculative decoding: whatever the
+    drafter proposes, the emitted-token marginal equals the target
+    softmax.  4000 seeded trials of the same (target, draft) logits;
+    position-0 and accepted-position-1 frequencies must match the target
+    distribution (binomial tolerance)."""
+    V, K, N = 16, 3, 4000
+    rng = np.random.default_rng(0)
+    t_log = (rng.normal(size=(K + 1, V)) * 1.5).astype(np.float32)
+    d_log = (rng.normal(size=(K, V)) * 1.5).astype(np.float32)
+    seeds = jnp.arange(N, dtype=jnp.uint32)
+    counters = jnp.zeros((N,), jnp.int32)
+    temps = jnp.ones((N,), jnp.float32)
+    tks = jnp.zeros((N,), jnp.int32)
+    tps = jnp.ones((N,), jnp.float32)
+    # drafts sampled from q exactly as the runner's draft loop does
+    d_toks = jnp.stack(
+        [sample_rows(jnp.broadcast_to(jnp.asarray(d_log[j]), (N, V)),
+                     row_keys(seeds, counters + j, SALT_DRAFT),
+                     temps, tks, tps) for j in range(K)], axis=1)
+    packed = accept_step(
+        jnp.broadcast_to(jnp.asarray(t_log)[None], (N, K + 1, V)),
+        jnp.broadcast_to(jnp.asarray(d_log)[None], (N, K, V)),
+        d_toks, seeds, counters, temps, tks, tps, jnp.ones((N,), bool))
+    toks = np.asarray(packed[:-1].T)
+    m = np.asarray(packed[-1])
+    assert (m >= 1).all() and (m <= K + 1).all()
+    p0 = np.asarray(jax.nn.softmax(jnp.asarray(t_log[0])))
+    freq = np.bincount(toks[:, 0], minlength=V) / N
+    assert np.abs(freq - p0).max() < 4 * np.sqrt(0.25 / N) + 0.01
+    # conditional correctness at position 1, among rows that accepted d_1
+    deep = m >= 2
+    assert deep.sum() > 300
+    p1 = np.asarray(jax.nn.softmax(jnp.asarray(t_log[1])))
+    freq1 = np.bincount(toks[deep, 1], minlength=V) / deep.sum()
+    assert np.abs(freq1 - p1).max() < 4 * np.sqrt(0.25 / deep.sum()) + 0.02
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: engine end-to-end
+# ---------------------------------------------------------------------------
+
+def _spec_pt_cfg(vocab: int = 64) -> ModelConfig:
+    """Small 4-track PT config (D=2, tiny vocab) for speculative tests."""
+    dense = ModelConfig(
+        name="pt-spec-test", family="dense", n_layers=4, d_model=32,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=vocab,
+        layer_specs={"full": LayerSpec(mixer="gqa", mlp="swiglu")},
+        pattern_unit=("full",), tie_embeddings=False, dtype="float32")
+    return pt_ify(dense, 4, 2, width_mult=8)
+
+
+def test_spec_greedy_bitwise_matches_plain_decode():
+    """THE acceptance bar: greedy track-speculative decode is bitwise-
+    identical to plain greedy decode, whatever the drafter predicts —
+    on the small PT config and on the reduced paper config."""
+    for cfg, n_new in ((_spec_pt_cfg(), 10),
+                       (reduced_config("pt-30b-d8"), 5)):
+        fns = steps_lib.model_fns(cfg)
+        params = fns["init"](jax.random.PRNGKey(0), cfg)
+        prompts = [[5, 9, 2, 7], [11, 3, 1, 8, 4, 2], [17, 23]]
+        plain = Engine(cfg, params, max_slots=2, max_seq_len=48)
+        ref = plain.generate(prompts, max_new_tokens=n_new)
+        spec = Engine(cfg, params, max_slots=2, max_seq_len=48,
+                      speculate_k=3, draft_tracks=2)
+        assert spec.runner.speculate_k == 3
+        out = spec.generate(prompts, max_new_tokens=n_new)
+        assert out == ref, cfg.name
+        m = spec.metrics.summary()
+        assert m["spec_steps"] > 0
+        assert 0.0 <= m["acceptance_rate"] <= 1.0
+
+
+def test_spec_tied_tracks_accept_everything_and_save_steps():
+    """With identical tracks the d-track drafter IS the target model:
+    acceptance hits 1.0, every spec step advances K+1 tokens, and the
+    engine finishes in ~1/(K+1) of the plain step count — while output
+    stays bitwise-identical."""
+    cfg = _spec_pt_cfg()
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    params["blocks"] = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[:, :, :1], l.shape), params["blocks"])
+    prompts = [[1, 2, 3, 4]] * 2
+    plain = Engine(cfg, params, max_slots=2, max_seq_len=64)
+    ref = plain.generate(prompts, max_new_tokens=16)
+    spec = Engine(cfg, params, max_slots=2, max_seq_len=64,
+                  speculate_k=4, draft_tracks=1)
+    out = spec.generate(prompts, max_new_tokens=16)
+    assert out == ref
+    assert spec.metrics.summary()["acceptance_rate"] == 1.0
+    assert spec.steps_run * 3 < plain.steps_run
+
+
+def test_spec_sampled_distribution_matches_plain():
+    """Sampled speculative output follows the target distribution: token
+    frequencies over a few hundred sampled tokens match plain decode
+    within a loose total-variation tolerance (deterministic given the
+    fixed seeds, so this never flakes)."""
+    cfg = _spec_pt_cfg(vocab=32)
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(1), cfg)
+    sp = SampleParams(temperature=1.0)
+    hists = {}
+    for mode, k in (("plain", 0), ("spec", 3)):
+        eng = Engine(cfg, params, max_slots=4, max_seq_len=32,
+                     speculate_k=k, draft_tracks=2, seed=0)
+        toks = []
+        for i in range(40):
+            toks += eng.generate([[1 + (i % 5), 2, 3]], max_new_tokens=8,
+                                 params=sp)[0]
+        hists[mode] = np.bincount(toks, minlength=cfg.vocab_size) \
+            / len(toks)
+    tv = 0.5 * np.abs(hists["plain"] - hists["spec"]).sum()
+    assert tv < 0.22, tv
+
+
+def test_spec_with_chunked_prefill_greedy_parity():
+    """Speculation composes with chunked prefill: the drafter's cache is
+    filled at decode start and greedy outputs still match the naive
+    reference exactly."""
+    cfg = _spec_pt_cfg()
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_slots=2, max_seq_len=48,
+                 prefill_chunk=4, speculate_k=3, draft_tracks=2)
+    assert eng.runner.prefill_chunk == 4 and eng.runner.speculate_k == 3
+    for L in (3, 8, 9):
+        p = [(5 * i + 2) % cfg.vocab_size for i in range(L)]
+        out = eng.generate([p], max_new_tokens=6)[0]
+        ref = _naive_greedy(params, cfg, p, 6)
+        assert out == ref, (L, out, ref)
+
+
+def test_spec_eos_and_capacity_truncation():
+    """EOS inside an accepted run stops the request mid-pack, and the
+    remaining-budget cap truncates a speculative burst exactly like
+    plain decode."""
+    cfg = _spec_pt_cfg()
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    probe = Engine(cfg, params, max_slots=1, max_seq_len=48)
+    out = probe.generate([[1, 2, 3]], max_new_tokens=8)[0]
+    eos = out[3]
+    eng = Engine(cfg, params, max_slots=1, max_seq_len=48,
+                 speculate_k=4, draft_tracks=2)
+    req = eng.submit([1, 2, 3], 8, eos_id=eos)
+    eng.run()
+    assert req.output == out[:4]
+    assert req.state is RequestState.DONE
+    # capacity clamp: prompt 12 + room for 5 positions only
+    plain = Engine(cfg, params, max_slots=1, max_seq_len=16)
+    ref = plain.submit([1] * 12, max_new_tokens=50)
+    plain.run()
+    spec = Engine(cfg, params, max_slots=1, max_seq_len=16,
+                  speculate_k=3, draft_tracks=2)
+    r = spec.submit([1] * 12, max_new_tokens=50)
+    spec.run()
+    assert r.truncated and r.output == ref.output
+
+
+def test_spec_gating_falls_back_to_plain_decode():
+    """speculate_k is silently dropped where the draft/verify structure
+    does not exist: non-PT configs, contiguous caches, recurrent archs."""
+    cfg, params = _tinyllama()
+    eng = Engine(cfg, params, max_slots=1, max_seq_len=32, speculate_k=4)
+    assert eng.runner.speculate_k == 0            # non-PT
+    out = eng.generate([[1, 2, 3]], max_new_tokens=4)[0]
+    assert out == _naive_greedy(params, cfg, [1, 2, 3], 4)
+
+    pt = _spec_pt_cfg()
+    fns = steps_lib.model_fns(pt)
+    pt_params = fns["init"](jax.random.PRNGKey(0), pt)
+    eng = Engine(pt, pt_params, max_slots=1, max_seq_len=32,
+                 paged=False, speculate_k=4)
+    assert eng.runner.speculate_k == 0            # needs the paged cache
+
+    rec = reduced_config("falcon-mamba-7b")
+    rec_params = init_lm(jax.random.PRNGKey(2), rec)
+    eng = Engine(rec, rec_params, max_slots=1, max_seq_len=32,
+                 speculate_k=4)
+    assert eng.runner.speculate_k == 0            # recurrent mixer
+
+
+def test_spec_single_host_transfer_per_step():
+    """The speculative step keeps the one-packed-transfer protocol."""
+    cfg = _spec_pt_cfg()
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_slots=2, max_seq_len=32,
+                 speculate_k=3, draft_tracks=2)
+    eng.generate([[1, 2, 3], [4, 5]], max_new_tokens=6)
+    assert eng.runner.decode_transfers == eng.steps_run
+
+
+def test_attention_chunk_kv_max_len_parity():
+    """Truncating the verify gather to the live prefix must not change
+    the attention output (dropped columns are causally masked and
+    contribute exact zeros to the online softmax)."""
+    cfg = _gqa_cfg()
+    spec = cfg.spec("x")
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    params = attention_init(jax.random.PRNGKey(0), cfg.d_model,
+                            cfg.n_heads, KH, hd)
+    B, S, bs, C = 2, 32, 8, 3
+    init_kv = lambda c, b, s: (jnp.zeros((b, s, KH, hd), jnp.float32),
+                               jnp.zeros((b, s, KH, hd), jnp.float32))
+    kv = PagedKVCache(init_kv, cfg, max_slots=B, max_seq_len=S,
+                      block_size=bs)
+    rng = np.random.default_rng(0)
+    for slot in range(B):
+        kv.allocate(slot, 12)
+        rows = (jnp.asarray(rng.normal(size=(1, 12, KH, hd)), jnp.float32),
+                jnp.asarray(rng.normal(size=(1, 12, KH, hd)), jnp.float32))
+        kv.data = paged_insert_rows(kv.data, rows, kv.axes, kv.seq,
+                                    kv.pageable, [slot],
+                                    kv.table_rows([slot]), bs)
+    x = jnp.asarray(rng.normal(size=(B, C, cfg.d_model)), jnp.float32)
+    pos = jnp.asarray([4, 9], jnp.int32)
+    cache = tuple(PagedLeaf(l) for l in kv.data)
+    full, _ = attention_chunk(params, x, cache, spec=spec, cfg=cfg,
+                              pos=pos, block_table=kv.table())
+    trunc, _ = attention_chunk(params, x, cache, spec=spec, cfg=cfg,
+                               pos=pos, block_table=kv.table(),
+                               kv_max_len=16)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(trunc))
+
+
+# ---------------------------------------------------------------------------
+# metrics hardening
+# ---------------------------------------------------------------------------
+
+def test_metrics_summary_safe_on_empty_and_reports_acceptance():
+    """summary() must not crash before any request finishes (empty
+    percentile lists, no timestamps) and must expose acceptance_rate."""
+    m = EngineMetrics().summary()
+    assert m["requests"] == 0
+    assert m["ttft_ms"]["p50"] == 0.0 and m["tpot_ms"]["p99"] == 0.0
+    assert m["throughput_tok_s"] == 0.0
+    assert m["acceptance_rate"] == 0.0 and m["spec_steps"] == 0
+
+    # engine with work submitted but zero steps run: still safe
+    cfg, params = _tinyllama()
+    eng = Engine(cfg, params, max_slots=1, max_seq_len=32)
+    eng.submit([1, 2, 3], 4)
+    m = eng.metrics.summary()
+    assert m["requests"] == 0 and m["output_tokens"] == 0
+
+    # acceptance accounting
+    em = EngineMetrics()
+    em.observe_spec(3, 4)
+    em.observe_spec(1, 4)
+    s = em.summary()
+    assert s["spec_steps"] == 2
+    assert abs(s["acceptance_rate"] - 0.5) < 1e-9
+    assert 0.0 < s["acceptance_ema"] <= 1.0
