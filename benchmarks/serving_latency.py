@@ -17,6 +17,10 @@ verify, mean TPOT + acceptance rate appended to ``--json``.  The tracks
 are tied (identical parameters) so the track-subset drafter agrees with
 the full model — the trained-model upper bound, reported honestly next
 to the random-init (untied) agreement rate.
+
+``--prefix`` measures shared-prefix TTFT cold vs warm (content-addressed
+prefix cache), and ``--fork`` the n-way copy-on-write fork scenario —
+both appended to ``--json`` under ``prefix_cache`` / ``fork``.
 """
 from __future__ import annotations
 
@@ -161,17 +165,152 @@ def bench_smoke(paged: bool, json_path: str | None = None) -> dict:
 
 
 def _merge_json(json_path: str, key: str, out: dict) -> None:
-    merged = {}
+    """Merge one smoke's result into the benchmark JSON.
+
+    Robust read-modify-write: a corrupt / partially-written / unreadable
+    existing file is discarded instead of crashing the benchmark (CI
+    kills mid-write leave exactly that), and the updated document lands
+    via temp-file + ``os.replace`` so a reader or a killed run never
+    observes a half-written file."""
+    merged: dict = {}
     if os.path.exists(json_path):
-        with open(json_path) as f:
-            merged = json.load(f)
+        try:
+            with open(json_path) as f:
+                loaded = json.load(f)
+            if isinstance(loaded, dict):
+                merged = loaded
+        except (json.JSONDecodeError, OSError, UnicodeDecodeError):
+            pass                       # corrupt/unreadable: start fresh
     merged[key] = out
     if "paged" in merged and "contiguous" in merged:
         merged["slots_gain_at_fixed_hbm"] = (
             merged["paged"]["max_active"]
             / max(1, merged["contiguous"]["max_active"]))
-    with open(json_path, "w") as f:
+    tmp = json_path + ".tmp"
+    with open(tmp, "w") as f:
         json.dump(merged, f, indent=2)
+    os.replace(tmp, json_path)         # atomic on POSIX + Windows
+
+
+def bench_prefix(json_path: str | None = None) -> dict:
+    """Shared-prefix smoke: TTFT of a cold prefill vs requests whose
+    prompt shares a cached block-aligned prefix (system prompt reuse).
+    Warm requests skip prefill for the matched span — only the short
+    tail runs through the chunk program — so warm TTFT collapses toward
+    the per-step overhead.  Compile variants are warmed up on a separate
+    prefix first, so the timed cold/warm split measures prefill work,
+    not tracing."""
+    import jax
+    import numpy as np
+    from repro.configs import reduced_config
+    from repro.launch import steps as steps_lib
+    from repro.serving.engine import Engine
+
+    cfg = reduced_config("tinyllama-1.1b")
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    bs, plen, tail = 8, 120, 8
+    eng = Engine(cfg, params, max_slots=4, max_seq_len=160, block_size=bs)
+    rng = np.random.default_rng(0)
+
+    def prompt(prefix):
+        return prefix + rng.integers(1, cfg.vocab_size, tail).tolist()
+
+    warmup_prefix = rng.integers(1, cfg.vocab_size, plen).tolist()
+    shared_prefix = rng.integers(1, cfg.vocab_size, plen).tolist()
+    # compile warm-up: one cold prefill shape + one warm-tail chunk shape
+    eng.submit(prompt(warmup_prefix), 4)
+    eng.run()
+    eng.submit(prompt(warmup_prefix), 4)
+    eng.run()
+    eng.metrics = type(eng.metrics)()
+    cold = eng.submit(prompt(shared_prefix), 4)
+    eng.run()
+    warm = []
+    for _ in range(6):
+        warm.append(eng.submit(prompt(shared_prefix), 4))
+        eng.run()
+    u = eng.runner.kv.utilization()
+    warm_ms = np.asarray([r.ttft for r in warm]) * 1e3
+    out = {
+        "prefix_len": plen,
+        "tail_len": tail,
+        "block_size": bs,
+        "cold_ttft_ms": cold.ttft * 1e3,
+        "warm_ttft_p50_ms": float(np.percentile(warm_ms, 50)),
+        "warm_over_cold": float(np.percentile(warm_ms, 50)
+                                / max(1e-9, cold.ttft * 1e3)),
+        "warm_cached_prefix": [r.cached_prefix for r in warm],
+        "prefix_queries": u["prefix_queries"],
+        "prefix_hit_tokens": u["prefix_hit_tokens"],
+        "cached_free_blocks": u["cached_free_blocks"],
+    }
+    print(f"prefix,cold_ttft {out['cold_ttft_ms']:.1f} ms,"
+          f"warm_ttft_p50 {out['warm_ttft_p50_ms']:.1f} ms "
+          f"({out['warm_over_cold']:.2f}x),hit "
+          f"{u['prefix_hit_tokens']} tok")
+    if json_path:
+        _merge_json(json_path, "prefix_cache", out)
+    return out
+
+
+def bench_fork(json_path: str | None = None, n_forks: int = 3) -> dict:
+    """n-way fork smoke: one prompt prefilled once, then forked into n
+    sampling children that share every committed block (copy-on-write
+    duplicates only the trailing partial block per diverging child).
+    Records the block cost vs n+1 independent requests and proves the
+    children ran zero extra prefill forwards."""
+    import jax
+    import numpy as np
+    from repro.configs import reduced_config
+    from repro.launch import steps as steps_lib
+    from repro.serving.engine import Engine
+    from repro.serving.sampler import SampleParams
+
+    cfg = reduced_config("tinyllama-1.1b")
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    sp = SampleParams(temperature=1.0)
+    eng = Engine(cfg, params, max_slots=n_forks + 1, max_seq_len=96,
+                 block_size=8)
+    rng = np.random.default_rng(0)
+    # compile warm-up: prefill shape + full-batch decode + fork CoW copy
+    parent = eng.submit(rng.integers(1, cfg.vocab_size, 32).tolist(), 24,
+                        params=sp)
+    eng.step()
+    eng.fork(parent, n_forks)
+    eng.run()
+    eng.metrics = type(eng.metrics)()
+
+    prompt = rng.integers(1, cfg.vocab_size, 32).tolist()
+    parent = eng.submit(prompt, 24, params=sp)
+    eng.step()                       # admit + prefill + first decode step
+    kv = eng.runner.kv
+    blocks_parent = kv.utilization()["used_blocks"]
+    prefills_before = eng.runner.prefill_calls + eng.runner.chunk_calls
+    children = eng.fork(parent, n_forks)
+    blocks_forked = kv.utilization()["used_blocks"]
+    eng.run()
+    prefills_after = eng.runner.prefill_calls + eng.runner.chunk_calls
+    outs = [parent.output] + [c.output for c in children]
+    out = {
+        "n_forks": n_forks,
+        "parent_blocks": blocks_parent,
+        "blocks_after_fork": blocks_forked,
+        "naive_blocks": (n_forks + 1) * blocks_parent,
+        "block_savings": (n_forks + 1) * blocks_parent - blocks_forked,
+        "prefill_forwards_for_children": prefills_after - prefills_before,
+        "cow_copies": kv.utilization()["cow_copies"],
+        "distinct_outputs": len({tuple(o) for o in outs}),
+        "tokens_served": sum(len(o) for o in outs),
+    }
+    print(f"fork,n={n_forks},blocks {blocks_forked} vs naive "
+          f"{out['naive_blocks']},cow {out['cow_copies']},"
+          f"child_prefills {out['prefill_forwards_for_children']},"
+          f"distinct {out['distinct_outputs']}/{n_forks + 1}")
+    if json_path:
+        _merge_json(json_path, "fork", out)
+    return out
 
 
 def bench_speculate(json_path: str | None = None, speculate_k: int = 4,
@@ -277,6 +416,14 @@ if __name__ == "__main__":
     ap.add_argument("--speculate", action="store_true",
                     help="toy smoke, track-speculative vs plain paged "
                     "decode on a small PT model")
+    ap.add_argument("--prefix", action="store_true",
+                    help="toy smoke, shared-prefix TTFT cold vs warm "
+                    "(content-addressed prefix cache)")
+    ap.add_argument("--fork", action="store_true",
+                    help="toy smoke, n-way copy-on-write fork from one "
+                    "prompt's blocks")
+    ap.add_argument("--n-forks", type=int, default=3,
+                    help="children per fork for --fork")
     ap.add_argument("--speculate-k", type=int, default=4,
                     help="draft length K for --speculate")
     ap.add_argument("--draft-tracks", type=int, default=1,
@@ -284,13 +431,18 @@ if __name__ == "__main__":
     ap.add_argument("--json", default=None,
                     help="merge smoke results into this JSON file")
     args = ap.parse_args()
-    if args.paged or args.contiguous or args.speculate:
+    if (args.paged or args.contiguous or args.speculate or args.prefix
+            or args.fork):
         if args.paged:
             bench_smoke(True, args.json)
         if args.contiguous:
             bench_smoke(False, args.json)
         if args.speculate:
             bench_speculate(args.json, args.speculate_k, args.draft_tracks)
+        if args.prefix:
+            bench_prefix(args.json)
+        if args.fork:
+            bench_fork(args.json, args.n_forks)
     else:
         if args.metric in ("ttft", "both"):
             ttft_table()

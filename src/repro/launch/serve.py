@@ -48,6 +48,13 @@ def main() -> None:
                     "configs with a paged cache only; 0 = off)")
     ap.add_argument("--draft-tracks", type=int, default=0,
                     help="tracks the drafter runs on (default n_tracks/2)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable content-addressed prefix caching "
+                    "(on by default for paged full-attention configs)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared tokens to every "
+                    "prompt (system-prompt workload; exercises the "
+                    "prefix cache)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -58,27 +65,30 @@ def main() -> None:
         params = state["params"]
         print(f"[serve] loaded params from {args.ckpt_dir}")
 
-    max_seq = args.input_len + args.output_len + 8
+    max_seq = args.shared_prefix + args.input_len + args.output_len + 8
     eng = Engine(cfg, params, max_slots=args.slots, max_seq_len=max_seq,
                  max_waiting_prefill_tokens=args.prefill_budget,
                  paged=not args.contiguous, block_size=args.block_size,
                  num_blocks=args.num_blocks,
                  prefill_chunk=args.prefill_chunk,
                  speculate_k=args.speculate_k,
-                 draft_tracks=args.draft_tracks)
+                 draft_tracks=args.draft_tracks,
+                 prefix_cache=not args.no_prefix_cache)
     if args.speculate_k and not eng.runner.speculate_k:
         print("[serve] --speculate-k ignored: needs a PT config with a "
               "paged cache (full attention, no MoE/recurrent layers)")
     rng = np.random.default_rng(args.seed)
     sp = SampleParams(temperature=args.temperature)
+    shared = rng.integers(1, cfg.vocab_size,
+                          size=(args.shared_prefix,)).tolist()
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(args.requests):
-        prompt = rng.integers(1, cfg.vocab_size,
-                              size=(args.input_len,)).tolist()
+        prompt = shared + rng.integers(1, cfg.vocab_size,
+                                       size=(args.input_len,)).tolist()
         eng.submit(prompt, args.output_len, params=sp)
     eng.run()
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
 
     m = eng.metrics.summary()
     print(f"[serve] {cfg.name}: {args.requests} reqs x "
@@ -97,6 +107,16 @@ def main() -> None:
               f"{eng.runner.draft_tracks} draft tracks | acceptance "
               f"{m['acceptance_rate']:.2f} (ema {m['acceptance_ema']:.2f}) "
               f"over {m['spec_steps']} spec steps")
+    if eng.runner.paged:
+        u = eng.runner.kv.utilization()
+        if eng.runner.prefix_cache and u["prefix_queries"]:
+            hit = (u["prefix_hit_tokens"]
+                   / max(1, u["prefix_lookup_tokens"]))
+            print(f"[serve] prefix cache: {u['prefix_hit_tokens']} of "
+                  f"{u['prefix_lookup_tokens']} prompt tokens served "
+                  f"from cache ({100 * hit:.0f}%), "
+                  f"{u['cached_free_blocks']} cached blocks retained, "
+                  f"{u['cow_copies']} CoW copies")
 
 
 if __name__ == "__main__":

@@ -36,7 +36,9 @@ helpers, kept for the dense smoke tests.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional, Sequence
+import hashlib
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -183,8 +185,22 @@ def paged_insert_rows(dst: Any, src: Any, axes: Any, seqs: Any,
                                   is_leaf=lambda l: l is None)
 
 
+_HASH_ROOT = b"pkv-root"           # chain-hash seed for position-0 blocks
+
+
+def _chain_hash(parent: bytes, tokens: Sequence[int]) -> bytes:
+    """Content-addressed chain hash of one full block: a block's identity
+    is its token ids AND everything before it (the parent digest), so two
+    prompts share a block only when they share the whole prefix."""
+    h = hashlib.sha256(parent)
+    h.update(np.asarray(tokens, np.int64).tobytes())
+    return h.digest()
+
+
 class PagedKVCache:
-    """vLLM-style block-pool KV cache over an arbitrary cache pytree.
+    """vLLM-style block-pool KV cache over an arbitrary cache pytree,
+    with per-block reference counts, a content-addressed prefix cache and
+    copy-on-write block-table forking.
 
     Every leaf whose probed sequence axis reaches engine capacity is laid
     out as a pool (batch axis -> ``num_blocks``, seq axis ->
@@ -194,13 +210,49 @@ class PagedKVCache:
     layer's pool), so a slot's memory cost is ``blocks * block_size``
     tokens instead of a full ``max_seq_len`` reservation.
 
+    Block sharing (refcounts).  A block may appear in several slots'
+    tables at once: ``_ref[b]`` counts the table rows referencing ``b``,
+    ``free_slot`` only returns a block to the free pool when its count
+    hits zero, and a writer must call ``ensure_writable`` first — a block
+    with ``_ref > 1`` is copied (copy-on-write) before the write so the
+    other readers keep the original bytes.
+
+    Prefix cache (content addressing).  Full blocks whose token ids are
+    known are registered in a radix map over chain hashes
+    (``_chain_hash``: sha256 of the parent digest + the block's tokens —
+    block-granular content addressing of whole prefixes).
+    ``match_prefix(tokens)`` walks the chain and returns the longest
+    cached block-aligned prefix; ``allocate(slot, n, tokens=...)`` shares
+    those blocks (refcount bump, zero compute) and only allocates fresh
+    blocks for the tail.  ``commit_tokens`` registers a slot's own full
+    blocks once their contents are written — prompt blocks after prefill,
+    decode blocks as tokens are emitted (multi-turn reuse).  Blocks whose
+    refcount drops to zero keep their cache entry in an LRU
+    (``_cached_free``); they are resurrected for free by a later match or
+    evicted (hash entry dropped) only when a fresh allocation finds the
+    plain free list empty — eviction under pressure, never eagerly.
+
+    Forking (copy-on-write).  ``fork(src, dst)`` points ``dst``'s table
+    at ``src``'s blocks covering the committed prefix (refcount bump; the
+    trailing partial block is shared too) and allocates fresh blocks for
+    the uncommitted remainder of the reservation.  n-way forks share
+    every byte of the prompt; the first divergent write to the shared
+    partial block triggers exactly one block copy per diverging slot.
+
     Host-side API (pure Python, no device sync):
-      can_allocate(n)      -> enough free blocks for n tokens?
-      allocate(slot, n)    -> reserve blocks covering positions [0, n)
+      can_allocate(n, tokens=None) -> enough free blocks (prefix-aware)?
+      allocate(slot, n, tokens=None) -> reserve blocks for [0, n); with
+          ``tokens`` share the longest cached prefix, return its length
       append(slot, n)      -> grow slot's allocation to cover [0, n)
-      free_slot(slot)      -> reclaim blocks; table row -> trash block
+      fork(src, dst)       -> dst shares src's committed blocks (CoW)
+      ensure_writable(slot, lo, hi) -> CoW pairs [(src, dst)] the caller
+          must copy device-side before writing positions [lo, hi)
+      commit_tokens(slot, tokens) -> register newly-full blocks
+      match_prefix(tokens) -> (matched_tokens, block_ids) peek
+      free_slot(slot)      -> refcount decrement; table row -> trash
       table() / table_rows(slots) -> device block-table views
-      utilization()        -> pool occupancy / token-utilization stats
+      utilization()        -> pool occupancy / prefix-cache stats
+      check_invariants()   -> raise unless block accounting is consistent
 
     Block 0 is reserved as the trash block: zeroed table rows send writes
     from idle decode lanes and padded bucket rows there, never into a
@@ -209,7 +261,8 @@ class PagedKVCache:
 
     def __init__(self, init_cache_fn: Callable, cfg: ModelConfig, *,
                  max_slots: int, max_seq_len: int, block_size: int = 16,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 prefix_cache: bool = True):
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
@@ -246,12 +299,28 @@ class PagedKVCache:
                              "(every layer is a ring or O(1) state)")
 
         # host-side block accounting
+        self.prefix_cache = prefix_cache
         self._free: List[int] = list(range(self.num_blocks - 1, 0, -1))
         self._blocks: List[List[int]] = [[] for _ in range(max_slots)]
         self._tokens: List[int] = [0] * max_slots
+        self._ref: List[int] = [0] * self.num_blocks
+        # prefix cache: content chain hash <-> block id, plus the LRU of
+        # refcount-zero blocks whose cached contents are still valid
+        self._hash_to_block: Dict[bytes, int] = {}
+        self._hash_of: Dict[int, bytes] = {}
+        self._cached_free: "OrderedDict[int, None]" = OrderedDict()
+        # per-slot committed state: how many token ids are known-written,
+        # and the chain digests of the slot's full committed blocks
+        self._committed: List[int] = [0] * max_slots
+        self._chain: List[List[bytes]] = [[] for _ in range(max_slots)]
+        self.prefix_queries = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_lookup_tokens = 0
+        self.cow_copies = 0
         self.table_np = np.zeros((max_slots, self.blocks_per_seq), np.int32)
         self.version = 0          # bumped on any table change (allocate/
-                                  # append/free) so device copies can cache
+                                  # append/fork/cow/free) so device copies
+                                  # can cache
 
     # -- block accounting ----------------------------------------------
     def blocks_for(self, n_tokens: int) -> int:
@@ -259,44 +328,296 @@ class PagedKVCache:
 
     @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        """Blocks available to fresh allocations: the plain free list
+        plus refcount-zero cached blocks (evictable under pressure)."""
+        return len(self._free) + len(self._cached_free)
 
-    def can_allocate(self, n_tokens: int) -> bool:
-        return self.blocks_for(n_tokens) <= len(self._free)
+    def refcount(self, block: int) -> int:
+        return self._ref[block]
 
-    def allocate(self, slot: int, n_tokens: int) -> None:
-        """Reserve blocks for positions [0, n_tokens) of ``slot``."""
+    def committed(self, slot: int) -> int:
+        """Tokens of ``slot`` whose K/V is known-written (prompt after
+        prefill, every emitted token but the last during decode)."""
+        return self._committed[slot]
+
+    def fork_cost(self, src: int) -> int:
+        """Fresh blocks one fork of ``src`` must allocate (the blocks
+        past its committed prefix; everything else is shared)."""
+        n_share = min(self.blocks_for(self._committed[src]),
+                      len(self._blocks[src]))
+        return len(self._blocks[src]) - n_share
+
+    def _take_block(self) -> int:
+        """One block for a fresh (uncached-content) allocation: the plain
+        free list first; under pressure, evict the LRU refcount-zero
+        cached block (its hash entry is dropped — the bytes are about to
+        be overwritten)."""
+        if self._free:
+            return self._free.pop()
+        if self._cached_free:
+            b, _ = self._cached_free.popitem(last=False)
+            self._uncache(b)
+            return b
+        raise MemoryError(
+            f"paged KV cache out of blocks: free 0/{self.num_blocks - 1}")
+
+    def _uncache(self, block: int) -> None:
+        h = self._hash_of.pop(block, None)
+        if h is not None and self._hash_to_block.get(h) == block:
+            del self._hash_to_block[h]
+
+    def _share(self, block: int) -> None:
+        """Bump a block's refcount; a refcount-zero cached block leaves
+        the free pool (it is live again)."""
+        if self._ref[block] == 0:
+            self._cached_free.pop(block, None)
+        self._ref[block] += 1
+
+    def _release(self, block: int) -> None:
+        """Drop one reference; at zero the block returns to the free pool
+        — the cached-content LRU if its hash entry is still valid, the
+        plain free list otherwise."""
+        self._ref[block] -= 1
+        assert self._ref[block] >= 0, f"refcount underflow on {block}"
+        if self._ref[block] == 0:
+            if block in self._hash_of:
+                self._cached_free[block] = None       # MRU end
+            else:
+                self._free.append(block)
+
+    # -- prefix cache ---------------------------------------------------
+    def match_prefix(self, tokens: Sequence[int]
+                     ) -> Tuple[int, List[int]]:
+        """Longest cached block-aligned prefix of ``tokens``: walks the
+        chain-hash radix map over full blocks.  Pure peek — no refcounts
+        move.  At least one token is always left unmatched so the caller
+        still has a position to compute first-token logits from."""
+        bs = self.block_size
+        blocks: List[int] = []
+        if not self.prefix_cache or len(tokens) <= 1:
+            return 0, blocks
+        parent = _HASH_ROOT
+        max_full = (len(tokens) - 1) // bs     # clamp: keep >= 1 tail tok
+        for k in range(max_full):
+            parent = _chain_hash(parent, tokens[k * bs:(k + 1) * bs])
+            b = self._hash_to_block.get(parent)
+            if b is None:
+                break
+            blocks.append(b)
+        return len(blocks) * bs, blocks
+
+    def commit_tokens(self, slot: int, tokens: Sequence[int]) -> None:
+        """Declare that positions [0, len(tokens)) of ``slot`` hold the
+        K/V of exactly these token ids: every newly-completed full block
+        is registered in the prefix index (first writer wins — a block
+        whose chain hash is already mapped is simply not re-registered).
+        Callers only commit positions that are actually written and will
+        never be rewritten (prompt after prefill, accepted decode tokens
+        minus the trailing not-yet-written one)."""
+        self._committed[slot] = max(self._committed[slot], len(tokens))
+        if not self.prefix_cache:
+            return
+        bs = self.block_size
+        chain = self._chain[slot]
+        n_full = min(len(tokens) // bs, len(self._blocks[slot]))
+        for k in range(len(chain), n_full):
+            parent = chain[-1] if chain else _HASH_ROOT
+            h = _chain_hash(parent, tokens[k * bs:(k + 1) * bs])
+            chain.append(h)
+            b = self._blocks[slot][k]
+            if h not in self._hash_to_block and b not in self._hash_of:
+                self._hash_to_block[h] = b
+                self._hash_of[b] = h
+
+    # -- allocation -----------------------------------------------------
+    def can_allocate(self, n_tokens: int,
+                     tokens: Optional[Sequence[int]] = None) -> bool:
+        """Enough free blocks for ``n_tokens``?  With ``tokens``, blocks
+        covered by the cached prefix cost nothing when still referenced
+        (pure sharing) and one free-pool slot when resurrected from the
+        refcount-zero LRU."""
+        need = self.blocks_for(n_tokens)
+        if tokens is not None:
+            _, blocks = self.match_prefix(tokens)
+            # live shared blocks are free; cached-free matches still
+            # occupy a slot counted inside ``free_blocks``, so they are
+            # not subtracted here.
+            need -= sum(1 for b in blocks if self._ref[b] > 0)
+        return need <= self.free_blocks
+
+    def allocate(self, slot: int, n_tokens: int,
+                 tokens: Optional[Sequence[int]] = None) -> int:
+        """Reserve blocks for positions [0, n_tokens) of ``slot``.  With
+        ``tokens`` (the prompt ids), the longest cached block-aligned
+        prefix is shared instead of allocated — refcount bumps, zero
+        compute — and only the tail gets fresh blocks.  Returns the
+        number of prefix tokens served from cache (0 when cold)."""
         if self._blocks[slot]:
             raise ValueError(f"slot {slot} already allocated")
+        matched, mblocks = (self.match_prefix(tokens)
+                            if tokens is not None else (0, []))
+        if tokens is not None and self.prefix_cache:
+            self.prefix_queries += 1
+            self.prefix_lookup_tokens += len(tokens)
+            self.prefix_hit_tokens += matched
+        total = self.blocks_for(n_tokens)
+        fresh = total - len(mblocks)
+        avail = (self.free_blocks
+                 - sum(1 for b in mblocks if self._ref[b] == 0))
+        if fresh > avail:
+            raise MemoryError(
+                f"paged KV cache out of blocks: need {fresh}, "
+                f"free {avail}/{self.num_blocks - 1}")
+        for k, b in enumerate(mblocks):
+            self._share(b)
+            self.table_np[slot, k] = b
+            self._blocks[slot].append(b)
+        self._chain[slot] = [self._hash_of[b] for b in mblocks]
+        self._committed[slot] = matched
+        if mblocks:
+            self.version += 1
         self.append(slot, n_tokens)
+        return matched
 
     def append(self, slot: int, n_tokens: int) -> None:
-        """Grow ``slot``'s allocation to cover positions [0, n_tokens)."""
+        """Grow ``slot``'s allocation to cover positions [0, n_tokens)
+        with fresh (exclusively-owned) blocks."""
         if n_tokens > self.max_seq_len:
             raise ValueError(f"{n_tokens} tokens exceed capacity "
                              f"{self.max_seq_len}")
         need = self.blocks_for(n_tokens) - len(self._blocks[slot])
-        if need > len(self._free):
+        if need > self.free_blocks:
             raise MemoryError(
                 f"paged KV cache out of blocks: need {need}, "
-                f"free {len(self._free)}/{self.num_blocks - 1}")
+                f"free {self.free_blocks}/{self.num_blocks - 1}")
         for _ in range(max(0, need)):
-            b = self._free.pop()
+            b = self._take_block()
+            self._ref[b] = 1
             self.table_np[slot, len(self._blocks[slot])] = b
             self._blocks[slot].append(b)
         if need > 0:
             self.version += 1
         self._tokens[slot] = max(self._tokens[slot], n_tokens)
 
+    # -- forking / copy-on-write ---------------------------------------
+    def fork(self, src: int, dst: int) -> None:
+        """Point ``dst``'s table at ``src``'s blocks covering the
+        committed prefix (refcount bump — including the trailing partial
+        block, which copy-on-write duplicates on first divergent write)
+        and allocate fresh blocks for the uncommitted remainder of the
+        reservation.  ``dst`` inherits ``src``'s committed token chain,
+        so its own later decode blocks extend the same prefix index."""
+        if self._blocks[dst]:
+            raise ValueError(f"fork target slot {dst} already allocated")
+        if not self._blocks[src]:
+            raise ValueError(f"fork source slot {src} has no allocation")
+        n_share = min(self.blocks_for(self._committed[src]),
+                      len(self._blocks[src]))
+        n_fresh = len(self._blocks[src]) - n_share
+        if n_fresh > self.free_blocks:
+            raise MemoryError(
+                f"paged KV cache out of blocks for fork: need {n_fresh}, "
+                f"free {self.free_blocks}/{self.num_blocks - 1}")
+        for k in range(n_share):
+            b = self._blocks[src][k]
+            self._share(b)
+            self.table_np[dst, k] = b
+            self._blocks[dst].append(b)
+        for k in range(n_share, len(self._blocks[src])):
+            b = self._take_block()
+            self._ref[b] = 1
+            self.table_np[dst, k] = b
+            self._blocks[dst].append(b)
+        self._tokens[dst] = self._tokens[src]
+        self._committed[dst] = self._committed[src]
+        self._chain[dst] = list(self._chain[src])
+        self.version += 1
+
+    def ensure_writable(self, slot: int, lo: int,
+                        hi: int) -> List[Tuple[int, int]]:
+        """Copy-on-write gate: before ``slot`` writes positions
+        [lo, hi), every touched block shared with another slot
+        (refcount > 1) is swapped for a fresh block in this slot's table.
+        Returns [(src_block, dst_block)] pairs the caller MUST copy
+        device-side before issuing the writes (positions past the
+        allocation fall through to the trash block and need no copy)."""
+        pairs: List[Tuple[int, int]] = []
+        if hi <= lo:
+            return pairs
+        bs = self.block_size
+        first = lo // bs
+        last = min((hi - 1) // bs, len(self._blocks[slot]) - 1)
+        for k in range(first, last + 1):
+            b = self._blocks[slot][k]
+            if self._ref[b] <= 1:
+                continue
+            nb = self._take_block()
+            self._ref[nb] = 1
+            self._release(b)
+            self._blocks[slot][k] = nb
+            self.table_np[slot, k] = nb
+            pairs.append((b, nb))
+        if pairs:
+            self.cow_copies += len(pairs)
+            self.version += 1
+        return pairs
+
     def free_slot(self, slot: int) -> None:
-        """Reclaim ``slot``'s blocks.  The table row is zeroed so decode
-        writes from the now-idle lane land in the trash block, never in a
-        block that has been handed to another request."""
-        self._free.extend(reversed(self._blocks[slot]))
+        """Drop ``slot``'s references.  A block returns to the free pool
+        only when its refcount hits zero — blocks shared with forks or
+        prefix-cache hits survive, and content-cached blocks park in the
+        LRU instead of the plain free list.  The table row is zeroed so
+        decode writes from the now-idle lane land in the trash block,
+        never in a block that has been handed to another request."""
+        for b in reversed(self._blocks[slot]):
+            self._release(b)
         self._blocks[slot] = []
         self._tokens[slot] = 0
+        self._committed[slot] = 0
+        self._chain[slot] = []
         self.table_np[slot, :] = 0
         self.version += 1
+
+    # -- consistency ----------------------------------------------------
+    def check_invariants(self) -> None:
+        """Block-accounting consistency: every non-trash block is in
+        exactly one of {referenced, cached-free, free}; refcounts equal
+        table occurrences; the device-table mirror matches; the hash
+        index is a bijection onto live-or-cached blocks."""
+        N = self.num_blocks
+        occurrences = [0] * N
+        for slot, blks in enumerate(self._blocks):
+            assert 0 not in blks, f"slot {slot} references the trash block"
+            row = self.table_np[slot]
+            assert list(row[:len(blks)]) == blks, \
+                f"table row {slot} disagrees with block list"
+            assert not row[len(blks):].any(), \
+                f"table row {slot} has stale entries past the allocation"
+            for b in blks:
+                occurrences[b] += 1
+        assert self._ref[0] == 0 and 0 not in self._cached_free \
+            and 0 not in self._free, "trash block left the reserve"
+        free_set, cached_set = set(self._free), set(self._cached_free)
+        assert not (free_set & cached_set), "block free AND cached-free"
+        referenced = 0
+        for b in range(1, N):
+            assert self._ref[b] == occurrences[b], \
+                f"block {b}: ref {self._ref[b]} != occurrences {occurrences[b]}"
+            states = ((self._ref[b] > 0) + (b in free_set)
+                      + (b in cached_set))
+            assert states == 1, f"block {b} in {states} states"
+            referenced += self._ref[b] > 0
+        assert referenced + len(free_set) + len(cached_set) == N - 1, \
+            "allocated + cached + free != pool size"
+        for b, h in self._hash_of.items():
+            assert self._ref[b] > 0 or b in cached_set, \
+                f"hash entry for dead block {b}"
+            assert self._hash_to_block.get(h) == b, \
+                f"hash index not bijective at block {b}"
+        assert len(self._hash_to_block) == len(self._hash_of)
+        for slot, blks in enumerate(self._blocks):
+            assert self._tokens[slot] <= len(blks) * self.block_size
+            assert len(self._chain[slot]) <= len(blks)
 
     # -- device views ---------------------------------------------------
     def table(self) -> jax.Array:
@@ -313,15 +634,20 @@ class PagedKVCache:
                    if pg)
 
     def utilization(self) -> Dict[str, Any]:
-        used = (self.num_blocks - 1) - len(self._free)
+        used = sum(1 for r in self._ref[1:] if r > 0)
         tokens = sum(self._tokens)
         return {
             "num_blocks": self.num_blocks - 1,
             "used_blocks": used,
+            "cached_free_blocks": len(self._cached_free),
             "block_utilization": used / max(1, self.num_blocks - 1),
             "tokens_stored": tokens,
             "token_utilization": (tokens / (used * self.block_size)
                                   if used else 0.0),
+            "prefix_queries": self.prefix_queries,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_lookup_tokens": self.prefix_lookup_tokens,
+            "cow_copies": self.cow_copies,
         }
 
 

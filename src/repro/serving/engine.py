@@ -53,6 +53,18 @@ Memory + latency structure (this PR's point):
   * Per-request PRNG seeds: every sampling draw is keyed by (request
     seed, token counter), never by an engine-global key, so a request's
     output replays bit-identically regardless of batch composition.
+  * Prefix caching + copy-on-write forking (paged, full-attention
+    configs): full KV blocks are content-addressed by a chain hash over
+    their token ids, so a prompt sharing a cached block-aligned prefix
+    (system prompt, few-shot template, earlier turn) skips prefill for
+    the matched span — ``allocate`` bumps refcounts instead of
+    allocating, and only the uncached tail runs through the prefill
+    path.  ``Engine.fork`` clones a decoding request n ways sharing
+    every block of its committed tokens; a shared block is copied only
+    on the first divergent write (``ensure_writable`` before each
+    decode/verify step).  All latency timing uses the monotonic
+    ``time.perf_counter`` clock (wall-clock kept only for log
+    timestamps), so NTP slews can't corrupt TTFT/TPOT percentiles.
 """
 from __future__ import annotations
 
@@ -74,8 +86,8 @@ from repro.runtime.parallel import NO_PARALLEL
 from repro.serving.cache import (PagedKVCache, batch_axes, insert_rows,
                                  paged_insert_rows)
 from repro.serving.sampler import (SALT_DRAFT, SALT_SAMPLE, SampleParams,
-                                   accept_step, row_keys, sample_rows,
-                                   sample_step, stack_params)
+                                   accept_step, fork_seeds, row_keys,
+                                   sample_rows, sample_step, stack_params)
 
 RECURRENT_MIXERS = ("mamba", "rglru")
 
@@ -101,9 +113,12 @@ class Request:
     output: List[int] = dataclasses.field(default_factory=list)
     truncated: bool = False            # max_new_tokens clamped to capacity
     prefilled: int = 0                 # prompt tokens consumed (chunked)
+    cached_prefix: int = 0             # prompt tokens served from cache
+    # monotonic (perf_counter) latency marks — immune to clock steps
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    t_submit_wall: float = 0.0         # wall-clock, for log timestamps only
 
     @property
     def ttft(self) -> float:
@@ -138,7 +153,7 @@ class EngineMetrics:
 
     def start(self) -> None:
         if self.t_start is None:
-            self.t_start = time.time()
+            self.t_start = time.perf_counter()
 
     def observe(self, req: Request) -> None:
         self.ttfts.append(req.ttft)
@@ -173,7 +188,7 @@ class EngineMetrics:
                     "p99": float(np.percentile(a, 99)),
                     "mean": float(np.mean(a))}
 
-        elapsed = ((self.t_last or time.time()) - self.t_start
+        elapsed = ((self.t_last or time.perf_counter()) - self.t_start
                    if self.t_start is not None else 0.0)
         return {
             "requests": len(self.ttfts),
@@ -211,10 +226,13 @@ class Scheduler:
 
     def __init__(self, max_slots: int, bucket_fn: Callable[[int], int],
                  max_waiting_prefill_tokens: int = 4096,
-                 charge_fn: Optional[Callable[[int], int]] = None):
+                 charge_fn: Optional[Callable[[Request], int]] = None):
         self.max_slots = max_slots
         self.bucket_fn = bucket_fn
-        self.charge_fn = charge_fn or bucket_fn
+        # charge_fn prices a request in prefill tokens per admission
+        # round; it takes the whole Request so prefix-aware runners can
+        # charge only the uncached tail of the prompt
+        self.charge_fn = charge_fn or (lambda r: bucket_fn(len(r.prompt)))
         self.max_waiting_prefill_tokens = max_waiting_prefill_tokens
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
@@ -254,14 +272,14 @@ class Scheduler:
             if can_fit is not None and not can_fit(head):
                 break                      # wait for blocks, never skip
             bucket = self.bucket_fn(len(head.prompt))
-            if self.charge_fn(len(head.prompt)) > budget and admitted:
+            if self.charge_fn(head) > budget and admitted:
                 break                      # strict FCFS: wait, don't skip
             req = self.queue.popleft()
             slot = free.pop(0)
             self.slots[slot] = req
             req.state = RequestState.PREFILL
             groups.setdefault(bucket, []).append((slot, req))
-            budget -= self.charge_fn(len(req.prompt))
+            budget -= self.charge_fn(req)
             admitted += 1
         return sorted(groups.items())
 
@@ -287,7 +305,8 @@ class ModelRunner:
                  max_seq_len: int, par=NO_PARALLEL, min_bucket: int = 16,
                  paged: bool = True, block_size: int = 16,
                  num_blocks: Optional[int] = None, prefill_chunk: int = 0,
-                 speculate_k: int = 0, draft_tracks: int = 0):
+                 speculate_k: int = 0, draft_tracks: int = 0,
+                 prefix_cache: bool = True):
         if cfg.encdec is not None:
             raise ValueError("engine serves decoder-only models")
         self.cfg = cfg
@@ -327,13 +346,16 @@ class ModelRunner:
 
         # chunked prefill feeds the prompt through the paged cache with
         # multi-token decode-style steps: needs every layer paged (full
-        # attention, no rings) and no length-sensitive state
-        self.prefill_chunk = prefill_chunk
-        if prefill_chunk and not (
-                self.paged and not self.exact_prefill
-                and all(cfg.spec(nm).window is None
-                        for nm in cfg.layer_names)):
-            self.prefill_chunk = 0
+        # attention, no rings) and no length-sensitive state.  The warm
+        # tail prefill behind prefix-cache hits is the same program, so
+        # prefix caching shares the gate.
+        chunk_ok = (self.paged and not self.exact_prefill
+                    and all(cfg.spec(nm).window is None
+                            for nm in cfg.layer_names))
+        self.prefill_chunk = prefill_chunk if chunk_ok else 0
+        self.prefix_cache = prefix_cache and chunk_ok
+        if self.kv is not None:
+            self.kv.prefix_cache = self.prefix_cache
 
         # track-speculative decoding: needs the PT fusion structure (the
         # drafter is a track slice), the paged cache (the verify forward
@@ -375,11 +397,18 @@ class ModelRunner:
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,),
                                static_argnames=("max_len",))
         self._chunk = jax.jit(self._chunk_impl, donate_argnums=(1,))
+        self._copy_blocks = jax.jit(self._copy_blocks_impl,
+                                    donate_argnums=(0,))
+        if self.speculate_k:
+            self._draft_fork = jax.jit(self._draft_fork_impl,
+                                       donate_argnums=(0,))
         self._table_key = None             # (kv.version, active bytes)
         self._table_dev = None             # cached device block table
         self.prefill_shapes: set = set()   # observed (n_reqs, bucket)
         self.chunk_shapes: set = set()     # observed (n_reqs, chunk)
         self.decode_transfers = 0          # host transfers in decode steps
+        self.prefill_calls = 0             # bucketed prefill forwards
+        self.chunk_calls = 0               # chunk forwards (incl. warm tails)
 
     # -- bucket policy --------------------------------------------------
     def bucket_for(self, length: int) -> int:
@@ -394,10 +423,15 @@ class ModelRunner:
             b *= 2
         return min(b, self.max_seq_len)
 
-    def admission_charge(self, length: int) -> int:
-        """Prefill tokens a request costs per admission round: its padded
-        bucket, or one chunk when chunked prefill spreads the rest over
-        subsequent steps."""
+    def admission_charge(self, req: "Request") -> int:
+        """Prefill tokens a request costs per admission round: the padded
+        bucket of its *uncached* prompt tail (the prefix-cache hit costs
+        no compute), or one chunk when chunked prefill spreads the rest
+        over subsequent steps."""
+        length = len(req.prompt)
+        if self.prefix_cache:
+            matched, _ = self.kv.match_prefix(req.prompt)
+            length -= matched
         bucket = self.bucket_for(length)
         return min(bucket, self.prefill_chunk) if self.prefill_chunk \
             else bucket
@@ -476,6 +510,32 @@ class ModelRunner:
     def _draft_insert_impl(self, dst, src, slots):
         return insert_rows(dst, src, self._draft_axes, slots)
 
+    def _copy_blocks_impl(self, cache, src, dst):
+        """Copy-on-write block duplication: pool[dst[i]] = pool[src[i]]
+        for every pageable leaf.  Gathers happen before any scatter, so a
+        block shared n ways can fan out to n copies in one call; padded
+        (0, 0) pairs are trash-block self-copies (no-ops)."""
+        def cp(leaf, bax, pg):
+            if not pg:
+                return leaf
+            moved = jnp.moveaxis(leaf, bax, 0)
+            moved = moved.at[dst].set(moved[src])
+            return jnp.moveaxis(moved, 0, bax)
+        inner = unwrap_paged(cache)
+        out = jax.tree_util.tree_map(cp, inner, self._axes, self._pageable,
+                                     is_leaf=lambda l: l is None)
+        return wrap_paged(out, self._pageable)
+
+    def _draft_fork_impl(self, cache, srcs, dsts):
+        """Clone dense per-slot drafter rows: row[dsts[i]] = row[srcs[i]]
+        (padded entries are src-to-src identity copies)."""
+        def cp(leaf, bax):
+            moved = jnp.moveaxis(leaf, bax, 0)
+            moved = moved.at[dsts].set(moved[srcs])
+            return jnp.moveaxis(moved, 0, bax)
+        return jax.tree_util.tree_map(cp, cache, self._draft_axes,
+                                      is_leaf=lambda l: l is None)
+
     def _spec_impl(self, params, draft_params, cache, draft_cache, toks,
                    pos, active, table, seeds, counts, temps, tks, tps,
                    max_len=None):
@@ -534,6 +594,7 @@ class ModelRunner:
         self.cache = self._insert(self.cache, cache,
                                   jnp.asarray(slots, jnp.int32), table_rows)
         self.prefill_shapes.add((n, bucket))
+        self.prefill_calls += 1
         return np.asarray(toks)
 
     def chunk(self, toks: np.ndarray, pos: np.ndarray, slots: Sequence[int],
@@ -547,7 +608,66 @@ class ModelRunner:
             jnp.asarray(seeds, jnp.uint32),
             jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps))
         self.chunk_shapes.add(tuple(toks.shape))
+        self.chunk_calls += 1
         return np.asarray(cand)
+
+    def warm_prefill(self, prompts: Sequence[Sequence[int]],
+                     matched: Sequence[int], slots: Sequence[int],
+                     seeds: Sequence[int],
+                     params_list: Sequence[SampleParams]) -> np.ndarray:
+        """Prefill only the uncached tails of prefix-matched prompts:
+        tokens [matched_i, len_i) run through the chunk program at their
+        true positions, attending to the shared cached blocks.  Sampling
+        uses draw 0 of each request's key stream, so the first token is
+        bitwise-identical to a cold full prefill.  Returns first tokens
+        [n]."""
+        n = len(prompts)
+        tails = [len(p) - m for p, m in zip(prompts, matched)]
+        bucket = self.bucket_for(max(tails))
+        toks = np.zeros((n, bucket), np.int32)
+        pos = np.empty((n,), np.int32)
+        last_idx = np.empty((n,), np.int32)
+        for i, (p, m) in enumerate(zip(prompts, matched)):
+            toks[i, :len(p) - m] = p[m:]
+            pos[i] = m
+            last_idx[i] = len(p) - m - 1
+        temps, tks, tps = stack_params(params_list)
+        self.cache, cand = self._chunk(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+            self.kv.table_rows(slots), jnp.asarray(last_idx),
+            jnp.asarray(seeds, jnp.uint32),
+            jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps))
+        self.chunk_shapes.add((n, bucket))
+        self.chunk_calls += 1
+        return np.asarray(cand)
+
+    def copy_blocks(self, pairs: Sequence[Tuple[int, int]]) -> None:
+        """Apply copy-on-write pairs from ``kv.ensure_writable`` to the
+        device pool (one jitted scatter for the whole batch; the pair
+        list is padded to a power of two with trash-block self-copies so
+        compile variants stay O(log pairs))."""
+        if not pairs:
+            return
+        n = 1
+        while n < len(pairs):
+            n *= 2
+        pad = list(pairs) + [(0, 0)] * (n - len(pairs))
+        src = jnp.asarray([p[0] for p in pad], jnp.int32)
+        dst = jnp.asarray([p[1] for p in pad], jnp.int32)
+        self.cache = self._copy_blocks(self.cache, src, dst)
+
+    def draft_fork(self, src: int, dsts: Sequence[int]) -> None:
+        """Clone the drafter's dense cache row ``src`` into rows ``dsts``
+        (fork children need the parent's draft K/V; the paged target
+        cache is shared by the block table instead)."""
+        n = 1
+        while n < len(dsts):
+            n *= 2
+        srcs = [src] * n
+        pad = list(dsts) + [src] * (n - len(dsts))   # src->src no-ops
+        self.draft_cache = self._draft_fork(
+            self.draft_cache, jnp.asarray(srcs, jnp.int32),
+            jnp.asarray(pad, jnp.int32))
 
     def draft_prefill(self, prompts: Sequence[Sequence[int]], bucket: int,
                       slots: Sequence[int]) -> None:
@@ -659,7 +779,7 @@ class Engine:
                  min_bucket: int = 16, paged: bool = True,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefill_chunk: int = 0, speculate_k: int = 0,
-                 draft_tracks: int = 0):
+                 draft_tracks: int = 0, prefix_cache: bool = True):
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
@@ -670,7 +790,8 @@ class Engine:
                                   num_blocks=num_blocks,
                                   prefill_chunk=prefill_chunk,
                                   speculate_k=speculate_k,
-                                  draft_tracks=draft_tracks)
+                                  draft_tracks=draft_tracks,
+                                  prefix_cache=prefix_cache)
         self.scheduler = Scheduler(max_slots, self.runner.bucket_for,
                                    max_waiting_prefill_tokens,
                                    charge_fn=self.runner.admission_charge)
@@ -722,7 +843,8 @@ class Engine:
             raise ValueError(
                 f"request needs {kv.blocks_for(self._reserve_tokens(req))} "
                 f"KV blocks but the pool holds {kv.num_blocks - 1}")
-        req.t_submit = time.time()
+        req.t_submit = time.perf_counter()     # monotonic: latency math
+        req.t_submit_wall = time.time()        # wall-clock: logs only
         self._next_rid += 1
         self.metrics.start()
         self.scheduler.submit(req)
@@ -736,10 +858,16 @@ class Engine:
 
     def _finish(self, slot: int, req: Request) -> None:
         req.state = RequestState.DONE
-        req.t_done = time.time()
+        req.t_done = time.perf_counter()
         self._active[slot] = False
         if self.runner.paged:
-            self.runner.kv.free_slot(slot)         # blocks -> free pool
+            kv = self.runner.kv
+            # register the request's full blocks (prompt + every output
+            # token whose K/V was written — all but the last) before the
+            # refcount drop parks them in the cached-free LRU: a
+            # multi-turn follow-up or duplicate prompt reuses them
+            kv.commit_tokens(slot, req.prompt + req.output[:-1])
+            kv.free_slot(slot)                 # refcount drop -> pool
         self.scheduler.release(slot)
         self.metrics.observe(req)
 
@@ -756,6 +884,12 @@ class Engine:
         def can_fit(req: Request) -> bool:
             nonlocal planned
             need = kv.blocks_for(self._reserve_tokens(req))
+            if self.runner.prefix_cache:
+                # blocks covered by a still-live cached prefix are
+                # shared, not allocated (cached-free matches still cost
+                # a slot of the free pool, so only live ones discount)
+                _, blocks = kv.match_prefix(req.prompt)
+                need -= sum(1 for b in blocks if kv.refcount(b) > 0)
             if planned + need > kv.free_blocks:
                 return False
             planned += need
@@ -768,7 +902,7 @@ class Engine:
         """First token sampled: move the request into the decode batch.
         ``batch_draft``: the caller (bucketed admission) will run one
         batched draft prefill for the whole group afterwards."""
-        req.t_first = time.time()
+        req.t_first = time.perf_counter()
         req.state = RequestState.DECODE
         L = len(req.prompt)
         # positions L .. L+new-1 must stay inside the cache
@@ -791,13 +925,21 @@ class Engine:
 
     def _admit(self) -> None:
         chunked = self.runner.prefill_chunk > 0
+        warm_rows: List[Tuple[int, Request]] = []
         for bucket, group in self.scheduler.plan_admission(
                 self._make_can_fit()):
-            slots = [s for s, _ in group]
-            reqs = [r for _, r in group]
             if self.runner.paged:
                 for slot, req in group:
-                    self.runner.kv.allocate(slot, self._reserve_tokens(req))
+                    # share the longest cached block-aligned prefix; the
+                    # matched span's K/V is already in the pool, so only
+                    # the tail needs prefill.  A block is only matchable
+                    # after commit_tokens, which runs AFTER the prefill
+                    # writing it was issued — a same-round match can
+                    # only hit blocks whose writes are already in the
+                    # device stream.
+                    req.cached_prefix = self.runner.kv.allocate(
+                        slot, self._reserve_tokens(req),
+                        tokens=req.prompt)
             for slot, req in group:
                 self._temps[slot] = req.params.temperature
                 self._topks[slot] = req.params.top_k
@@ -806,10 +948,23 @@ class Engine:
                 self._seeds[slot] = req.seed
                 self._counts[slot] = 0
             if chunked:
-                continue                 # chunks run in _prefill_chunks
+                # chunks run in _prefill_chunks; a cached prefix just
+                # advances the chunk cursor past the matched span
+                for slot, req in group:
+                    req.prefilled = req.cached_prefix
+                continue
+            cold = [(s, r) for s, r in group if not r.cached_prefix]
+            warm_rows += [(s, r) for s, r in group if r.cached_prefix]
+            if not cold:
+                continue
+            slots = [s for s, _ in cold]
+            reqs = [r for _, r in cold]
             toks = self.runner.prefill([r.prompt for r in reqs], bucket,
                                        slots, [r.seed for r in reqs],
                                        [r.params for r in reqs])
+            if self.runner.paged:
+                for slot, req in cold:
+                    self.runner.kv.commit_tokens(slot, req.prompt)
             for slot, req, tok in zip(slots, reqs, toks):
                 req.prefilled = len(req.prompt)
                 self._start_decode(slot, req, tok, batch_draft=True)
@@ -822,6 +977,20 @@ class Engine:
                     self.runner.draft_prefill(
                         [r.prompt for _, r in started], bucket,
                         [s for s, _ in started])
+        if warm_rows:
+            # warm tails run after every cold prefill of the round, one
+            # batched chunk-program call for the whole set
+            toks = self.runner.warm_prefill(
+                [r.prompt for _, r in warm_rows],
+                [r.cached_prefix for _, r in warm_rows],
+                [s for s, _ in warm_rows],
+                [r.seed for _, r in warm_rows],
+                [r.params for _, r in warm_rows])
+            for slot, req in warm_rows:
+                self.runner.kv.commit_tokens(slot, req.prompt)
+            for (slot, req), tok in zip(warm_rows, toks):
+                req.prefilled = len(req.prompt)
+                self._start_decode(slot, req, tok)   # per-slot draft fill
 
     def _prefill_chunks(self) -> None:
         """Advance every prefilling request by one chunk (one batched
@@ -847,7 +1016,105 @@ class Engine:
             req.prefilled += C
             if req.prefilled >= len(req.prompt):
                 req.prefilled = len(req.prompt)
+                self.runner.kv.commit_tokens(slot, req.prompt)
                 self._start_decode(slot, req, cand[i])
+            else:
+                # the chunk's writes are in the device stream: its full
+                # blocks are now matchable by later admissions
+                self.runner.kv.commit_tokens(
+                    slot, req.prompt[:req.prefilled])
+
+    # ------------------------------------------------------------------
+    def fork(self, parent: Request, n: int, *,
+             seeds: Optional[Sequence[int]] = None,
+             params: Optional[SampleParams] = None,
+             on_token: Optional[Callable[[Request, int], None]] = None
+             ) -> List[Request]:
+        """Clone a decoding request into ``n`` children that share every
+        KV block of its committed tokens (best-of-n / parallel sampling
+        from one prompt's cache, zero recompute).  Children occupy free
+        decode slots immediately and diverge through their own sampling
+        seeds (``seeds`` or derived via ``fork_seeds``); a shared block
+        is physically copied only on the first divergent write.
+
+        Raises ValueError when the parent is not actively decoding or
+        ``n`` free slots are unavailable, MemoryError when the pool
+        cannot cover the children's uncommitted tails."""
+        if not self.runner.paged:
+            raise ValueError("fork requires the paged KV cache")
+        if parent.state is not RequestState.DECODE:
+            raise ValueError("fork parent must be actively decoding")
+        pslot = next(s for s, r in self.scheduler.active_slots()
+                     if r is parent)
+        free = self.scheduler.free_slots()
+        if len(free) < n:
+            raise ValueError(f"fork needs {n} free slots, "
+                             f"have {len(free)}")
+        kv = self.runner.kv
+        # sync the parent's committed watermark to everything actually
+        # written ([0, pos): the prompt plus every emitted token but the
+        # last) before computing what to share.  Without this, forking
+        # right after a block-aligned commit point would hand children
+        # zeroed fresh blocks for the decode positions written since —
+        # they must share the partial block holding that K/V instead.
+        kv.commit_tokens(pslot, parent.prompt + parent.output[:-1])
+        if n * kv.fork_cost(pslot) > kv.free_blocks:
+            raise MemoryError(
+                f"fork needs {n * kv.fork_cost(pslot)} blocks, "
+                f"free {kv.free_blocks}")
+        child_seeds = (list(seeds) if seeds is not None
+                       else fork_seeds(parent.seed, n))
+        if len(child_seeds) != n:
+            raise ValueError(f"fork needs {n} seeds, got {len(child_seeds)}")
+        children: List[Request] = []
+        for i in range(n):
+            slot = free[i]
+            kv.fork(pslot, slot)
+            child = Request(self._next_rid, list(parent.prompt),
+                            parent.max_new_tokens, parent.eos_id,
+                            params if params is not None else parent.params,
+                            on_token, seed=child_seeds[i])
+            self._next_rid += 1
+            child.state = RequestState.DECODE
+            child.output = list(parent.output)
+            child.prefilled = len(parent.prompt)
+            child.cached_prefix = kv.committed(slot)
+            child.truncated = parent.truncated
+            child.t_submit = child.t_first = time.perf_counter()
+            child.t_submit_wall = time.time()
+            self.scheduler.slots[slot] = child
+            self._tok[slot] = self._tok[pslot]
+            self._pos[slot] = self._pos[pslot]
+            self._active[slot] = True
+            self._temps[slot] = child.params.temperature
+            self._topks[slot] = child.params.top_k
+            self._topps[slot] = child.params.top_p
+            self._eos[slot] = -1 if child.eos_id is None else child.eos_id
+            self._remaining[slot] = self._remaining[pslot]
+            self._seeds[slot] = child_seeds[i]
+            self._counts[slot] = self._counts[pslot]
+            children.append(child)
+        if self.runner.speculate_k:
+            # the drafter's cache is dense per-slot: children need a
+            # physical copy of the parent's row (the paged target cache
+            # is shared through the block table instead)
+            self.runner.draft_fork(pslot, [free[i] for i in range(n)])
+        self.metrics.max_active = max(
+            self.metrics.max_active, len(self.scheduler.active_slots()))
+        return children
+
+    def _cow(self, active: List[Tuple[int, Request]]) -> None:
+        """Copy-on-write gate before a decode/verify step: any block a
+        slot is about to write while sharing it (fork siblings, live
+        prefix-cache readers) is duplicated first, so the other readers
+        keep the original bytes."""
+        span = self.runner.speculate_k + 1   # verify writes pos..pos+K
+        pairs: List[Tuple[int, int]] = []
+        kv = self.runner.kv
+        for slot, _ in active:
+            lo = int(self._pos[slot])
+            pairs += kv.ensure_writable(slot, lo, lo + span)
+        self.runner.copy_blocks(pairs)
 
     # ------------------------------------------------------------------
     def _spec_step(self, active: List[Tuple[int, Request]]) -> None:
@@ -859,10 +1126,17 @@ class Engine:
             self._tok, self._pos, self._active, self._seeds, self._counts,
             self._temps, self._topks, self._topps)
         acc = prop = 0
+        K = self.runner.speculate_k
         for slot, req in active:
             m = int(counts[slot])
-            prop += self.runner.speculate_k
-            acc += max(0, m - 1)
+            # acceptance accounting charges only proposals the slot
+            # could actually use: the remaining-budget cap truncates the
+            # adjudicated window up front, and an EOS stop discards the
+            # proposals after it — otherwise every slot finishing early
+            # drags acceptance_rate (and the EMA) below its true value
+            usable = min(K, int(self._remaining[slot]))
+            emitted = 0
+            eos_stop = False
             for j in range(m):
                 tok = int(toks_mat[slot, j])
                 self._emit(slot, req, tok)
@@ -870,10 +1144,15 @@ class Engine:
                 self._pos[slot] += 1
                 self._counts[slot] += 1
                 self._remaining[slot] -= 1
-                if (self._remaining[slot] <= 0
-                        or (req.eos_id is not None and tok == req.eos_id)):
+                emitted += 1
+                if req.eos_id is not None and tok == req.eos_id:
+                    eos_stop = True
+                if self._remaining[slot] <= 0 or eos_stop:
                     self._finish(slot, req)
                     break
+            prop_eff = min(usable, emitted) if eos_stop else usable
+            acc += min(emitted, m - 1, prop_eff)
+            prop += prop_eff
         self.metrics.observe_spec(acc, prop)
 
     def step(self) -> int:
@@ -891,6 +1170,8 @@ class Engine:
             # chunked prefill may still be in flight with nothing decoding
             return len([1 for _, r in self.scheduler.active_slots()
                         if r.state is RequestState.PREFILL])
+        if self.runner.paged:
+            self._cow(active)
         if self.runner.speculate_k:
             self._spec_step(active)
             self.steps_run += 1

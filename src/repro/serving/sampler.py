@@ -54,6 +54,28 @@ def stack_params(params: Sequence[SampleParams]
             np.asarray([p.top_p for p in params], np.float32))
 
 
+def fork_seeds(base_seed: int, n: int) -> list:
+    """``n`` distinct deterministic sampling seeds for fork children,
+    never colliding with the parent's ``base_seed`` (a child that reused
+    it would replay the parent's stream and defeat parallel sampling).
+    splitmix-style avalanche over (base_seed, child index)."""
+    base = base_seed & 0xFFFFFFFF
+    seen = {base}
+    out: list = []
+    i = 0
+    while len(out) < n:
+        i += 1
+        z = (base + i * 0x9E3779B9) & 0xFFFFFFFF
+        z = ((z ^ (z >> 16)) * 0x85EBCA6B) & 0xFFFFFFFF
+        z = ((z ^ (z >> 13)) * 0xC2B2AE35) & 0xFFFFFFFF
+        z ^= z >> 16
+        if z in seen:
+            continue
+        seen.add(z)
+        out.append(z)
+    return out
+
+
 def row_keys(seeds: jax.Array, counters: jax.Array, salt: int) -> jax.Array:
     """Per-row PRNG keys [B, 2] from (request seed, token counter, salt).
 

@@ -1,0 +1,503 @@
+"""Prefix caching and copy-on-write forking: content-addressed block
+sharing (warm == cold bitwise), n-way fork isolation, CoW parity against
+a dense mirror under random fork interleavings, pool invariants,
+speculative-overflow containment in the trash block, acceptance-rate
+accounting, benchmark-record robustness and monotonic latency clocks."""
+import importlib.util
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.paged import PagedLeaf, unwrap_paged
+from repro.common.types import LayerSpec, ModelConfig
+from repro.configs import reduced_config
+from repro.core.track import pt_ify
+from repro.launch import steps as steps_lib
+from repro.models.attention import attention_decode, attention_init
+from repro.models.decoder import init_lm
+from repro.serving.cache import PagedKVCache, paged_insert_rows
+from repro.serving.engine import Engine, RequestState
+from repro.serving.sampler import SampleParams, fork_seeds
+
+
+def _tinyllama():
+    cfg = reduced_config("tinyllama-1.1b")
+    return cfg, init_lm(jax.random.PRNGKey(0), cfg)
+
+
+def _spec_pt_cfg(vocab: int = 64) -> ModelConfig:
+    dense = ModelConfig(
+        name="pt-prefix-test", family="dense", n_layers=4, d_model=32,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=vocab,
+        layer_specs={"full": LayerSpec(mixer="gqa", mlp="swiglu")},
+        pattern_unit=("full",), tie_embeddings=False, dtype="float32")
+    return pt_ify(dense, 4, 2, width_mult=8)
+
+
+def _naive_greedy(params, cfg, prompt, n_new):
+    fns = steps_lib.model_fns(cfg)
+    toks = list(prompt)
+    for _ in range(n_new):
+        out = fns["forward"](params,
+                             {"inputs": jnp.asarray([toks], jnp.int32)},
+                             cfg, mode="prefill")
+        toks.append(int(jnp.argmax(out[0][0, -1])))
+    return toks[len(prompt):]
+
+
+def _gqa_cfg(KH=2, G=2, hd=8):
+    return ModelConfig(
+        name="paged-test", family="dense", n_layers=1, d_model=16,
+        n_heads=KH * G, n_kv_heads=KH, d_ff=32, vocab_size=64,
+        head_dim=hd, dtype="float32",
+        layer_specs={"x": LayerSpec(mixer="gqa", mlp="none")},
+        pattern_unit=("x",))
+
+
+# ---------------------------------------------------------------------------
+# warm == cold bitwise parity
+# ---------------------------------------------------------------------------
+
+def test_warm_prefix_hit_matches_cold_bitwise():
+    """A prompt whose block-aligned prefix is cached must produce output
+    BIT-IDENTICAL to the same prompt served cold with prefix caching off
+    — the cache only changes where the prompt's K/V bytes come from, and
+    the tail is recomputed through the same chunk program.  Covered for
+    plain paged decode, chunked prefill and track-speculative decode."""
+    variants = [
+        ("tinyllama-1.1b", {}),
+        ("tinyllama-1.1b", {"prefill_chunk": 8}),
+        ("pt-30b-d8", {"speculate_k": 3, "draft_tracks": 2}),
+    ]
+    for arch, extra in variants:
+        cfg = reduced_config(arch)
+        fns = steps_lib.model_fns(cfg)
+        params = fns["init"](jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(7)
+        prefix = rng.integers(1, cfg.vocab_size, 16).tolist()
+        tail_a = rng.integers(1, cfg.vocab_size, 5).tolist()
+        tail_b = rng.integers(1, cfg.vocab_size, 7).tolist()
+
+        warm_eng = Engine(cfg, params, max_slots=2, max_seq_len=48,
+                          paged=True, block_size=8, **extra)
+        assert warm_eng.runner.prefix_cache
+        r_cold = warm_eng.submit(prefix + tail_a, max_new_tokens=6, seed=11)
+        warm_eng.run()
+        assert r_cold.cached_prefix == 0
+        r_warm = warm_eng.submit(prefix + tail_b, max_new_tokens=6, seed=13)
+        warm_eng.run()
+        assert r_warm.cached_prefix == 16, (arch, extra)
+
+        cold_eng = Engine(cfg, params, max_slots=2, max_seq_len=48,
+                          paged=True, block_size=8, prefix_cache=False,
+                          **extra)
+        assert not cold_eng.runner.prefix_cache
+        ref = cold_eng.submit(prefix + tail_b, max_new_tokens=6, seed=13)
+        cold_eng.run()
+        assert r_warm.output == ref.output, (arch, extra)
+        warm_eng.runner.kv.check_invariants()
+        u = warm_eng.runner.kv.utilization()
+        assert u["prefix_hit_tokens"] == 16
+        assert u["used_blocks"] == 0 and u["cached_free_blocks"] > 0
+
+
+def test_duplicate_prompt_match_leaves_one_tail_token():
+    """An exact duplicate of a cached prompt still recomputes at least
+    one position: match_prefix clamps to (len-1)//bs full blocks so the
+    engine always has a real position to take first-token logits from."""
+    cfg, params = _tinyllama()
+    eng = Engine(cfg, params, max_slots=2, max_seq_len=48, paged=True,
+                 block_size=8)
+    prompt = list(range(1, 25))                  # 24 tokens = 3 blocks
+    r1 = eng.submit(prompt, max_new_tokens=4, seed=3)
+    eng.run()
+    matched, blocks = eng.runner.kv.match_prefix(prompt)
+    assert matched == 16 and len(blocks) == 2    # clamp: (24-1)//8 = 2
+    r2 = eng.submit(prompt, max_new_tokens=4, seed=3)
+    eng.run()
+    assert r2.cached_prefix == 16
+    assert r2.output == r1.output                # same seed -> same stream
+
+
+def test_prefix_cache_eviction_under_pressure_stays_correct():
+    """A pool too small to retain every finished prompt evicts cached
+    blocks LRU — matches after eviction shrink or vanish but the served
+    output stays correct (eviction drops hash entries, never bytes a
+    live slot reads)."""
+    cfg, params = _tinyllama()
+    # 6 blocks of 8 = 48 tokens; each request reserves 10+6-1=15 tokens
+    eng = Engine(cfg, params, max_slots=2, max_seq_len=48, paged=True,
+                 block_size=8, num_blocks=6)
+    reqs = [eng.submit([i + 1] * 10, max_new_tokens=6) for i in range(5)]
+    eng.run()
+    assert all(r.state is RequestState.DONE for r in reqs)
+    for r in reqs:
+        assert r.output == _naive_greedy(params, cfg, r.prompt, 6)
+    eng.runner.kv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# forking
+# ---------------------------------------------------------------------------
+
+def test_fork_greedy_children_bitwise_match_parent_reference():
+    """Greedy children forked mid-decode finish with exactly the tokens
+    the parent alone would have produced — shared blocks plus CoW never
+    perturb a single logit — and serving n children costs zero extra
+    prefill forwards."""
+    cfg, params = _tinyllama()
+    # plen=16, 1 step: the parent's committed watermark sits exactly on
+    # a block boundary while decode has written one position past it —
+    # the fork must share the partial block holding that K/V (the
+    # regression here was children attending to zeros in its place)
+    for plen, steps in ((16, 1), (18, 4)):
+        prompt = list(range(1, plen + 1))
+        ref_eng = Engine(cfg, params, max_slots=4, max_seq_len=64,
+                         paged=True, block_size=8)
+        ref = ref_eng.generate([prompt], max_new_tokens=10)[0]
+
+        eng = Engine(cfg, params, max_slots=4, max_seq_len=64, paged=True,
+                     block_size=8)
+        parent = eng.submit(prompt, max_new_tokens=10)
+        for _ in range(steps):                   # prefill + decodes
+            eng.step()
+        assert parent.state is RequestState.DECODE
+        forwards_before = eng.runner.prefill_calls + eng.runner.chunk_calls
+        children = eng.fork(parent, 2)
+        eng.run()
+        assert eng.runner.prefill_calls + eng.runner.chunk_calls \
+            == forwards_before                   # zero recompute
+        assert parent.output == ref
+        for c in children:
+            assert c.state is RequestState.DONE
+            assert c.output == ref, plen         # greedy: all identical
+        eng.runner.kv.check_invariants()
+
+
+def test_fork_sampled_children_diverge_and_isolate():
+    """Sampled forks: distinct derived seeds make the children diverge,
+    CoW keeps each child's writes invisible to its siblings and parent,
+    and the shared committed blocks are physically single-copy."""
+    cfg, params = _tinyllama()
+    prompt = list(range(2, 20))
+    sp = SampleParams(temperature=1.0)
+    eng = Engine(cfg, params, max_slots=4, max_seq_len=64, paged=True,
+                 block_size=8)
+    parent = eng.submit(prompt, max_new_tokens=12, params=sp, seed=5)
+    for _ in range(3):
+        eng.step()
+    kv = eng.runner.kv
+    pslot = next(s for s, r in eng.scheduler.active_slots() if r is parent)
+    parent_blocks = len(kv._blocks[pslot])
+    used_before = kv.utilization()["used_blocks"]
+    children = eng.fork(parent, 3)
+    used_after = kv.utilization()["used_blocks"]
+    # 3 children re-use the parent's committed blocks: far cheaper than
+    # 3 fresh full reservations
+    assert used_after - used_before < 3 * parent_blocks
+    kv.check_invariants()
+    eng.run()
+    outs = [tuple(r.output) for r in [parent] + children]
+    assert all(len(o) == 12 for o in outs)
+    assert len(set(outs)) >= 3                   # temperature=1: diverge
+    assert kv.utilization()["cow_copies"] > 0    # shared block was split
+    kv.check_invariants()
+
+
+def test_fork_seeds_distinct_and_deterministic():
+    for base in (0, 5, 123456, 0x7FFFFFFF):
+        for n in (1, 3, 8):
+            seeds = fork_seeds(base, n)
+            assert len(seeds) == n
+            assert len(set(seeds)) == n
+            assert base not in seeds
+            assert seeds == fork_seeds(base, n)
+
+
+def test_fork_rejects_bad_states():
+    cfg, params = _tinyllama()
+    eng = Engine(cfg, params, max_slots=2, max_seq_len=32, paged=True,
+                 block_size=8)
+    req = eng.submit([1, 2, 3, 4], max_new_tokens=4)
+    with pytest.raises(ValueError):              # still QUEUED
+        eng.fork(req, 1)
+    eng.step()
+    with pytest.raises(ValueError):              # only 1 free slot
+        eng.fork(req, 2)
+    dense = Engine(cfg, params, max_slots=2, max_seq_len=32, paged=False)
+    r2 = dense.submit([1, 2, 3], max_new_tokens=2)
+    dense.step()
+    with pytest.raises(ValueError):              # contiguous cache
+        dense.fork(r2, 1)
+
+
+# ---------------------------------------------------------------------------
+# pool-level: CoW parity against a dense mirror, invariants throughout
+# ---------------------------------------------------------------------------
+
+def test_paged_random_fork_cow_decode_bitwise_matches_dense():
+    """Extends the paged-vs-dense parity property to the new ops: random
+    allocate(tokens=...) / append / commit / fork / free interleavings,
+    with every write CoW-gated through ensure_writable and mirrored into
+    an independent dense per-slot cache.  A decode step must match the
+    dense layout BIT-FOR-BIT and the pool invariants must hold after
+    every single operation."""
+    cfg = _gqa_cfg()
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    spec = cfg.spec("x")
+    params = attention_init(jax.random.PRNGKey(0), cfg.d_model,
+                            cfg.n_heads, KH, hd)
+    B, S, bs = 4, 32, 8
+    init_kv = lambda c, b, s: (jnp.zeros((b, s, KH, hd), jnp.float32),
+                               jnp.zeros((b, s, KH, hd), jnp.float32))
+    rng = np.random.default_rng(11)
+
+    def apply_cow(kv, pairs):
+        # device-side half of ensure_writable, as the runner would do it
+        if not pairs:
+            return
+        src = jnp.asarray([p[0] for p in pairs])
+        dst = jnp.asarray([p[1] for p in pairs])
+        kv.data = tuple(l.at[dst].set(l[src]) for l in kv.data)
+
+    for trial in range(3):
+        kv = PagedKVCache(init_kv, cfg, max_slots=B, max_seq_len=S,
+                          block_size=bs, num_blocks=3 * B)
+        dense = init_kv(cfg, B, S)
+        toks = [None] * B                 # per-slot token ids (mirror)
+        lengths = np.zeros((B,), np.int64)
+        shared_pool = [rng.integers(1, 50, size=S).tolist()
+                       for _ in range(2)]
+
+        def write(slot, lo, n):
+            nonlocal dense
+            pairs = kv.ensure_writable(slot, lo, n)
+            apply_cow(kv, pairs)
+            new_k = rng.normal(size=(n - lo, KH, hd)).astype(np.float32)
+            new_v = rng.normal(size=(n - lo, KH, hd)).astype(np.float32)
+            dense = (dense[0].at[slot, lo:n].set(new_k),
+                     dense[1].at[slot, lo:n].set(new_v))
+            full_k = np.asarray(dense[0][slot])[None, :n]
+            full_v = np.asarray(dense[1][slot])[None, :n]
+            kv.data = paged_insert_rows(
+                kv.data, (jnp.asarray(full_k), jnp.asarray(full_v)),
+                kv.axes, kv.seq, kv.pageable, [slot],
+                kv.table_rows([slot]), bs)
+
+        for op in range(30):
+            slot = int(rng.integers(B))
+            choice = rng.random()
+            if choice < 0.2 and lengths[slot]:
+                kv.free_slot(slot)
+                lengths[slot] = 0
+                toks[slot] = None
+            elif choice < 0.35 and lengths[slot]:
+                # fork into a free slot; dense mirror copies the row
+                free = [d for d in range(B) if lengths[d] == 0]
+                if free and kv.fork_cost(slot) <= kv.free_blocks:
+                    dst = free[0]
+                    kv.fork(slot, dst)
+                    dense = (dense[0].at[dst].set(dense[0][slot]),
+                             dense[1].at[dst].set(dense[1][slot]))
+                    lengths[dst] = lengths[slot]
+                    toks[dst] = list(toks[slot])
+                    # the uncommitted tail got fresh zeroed blocks: the
+                    # engine always rewrites those positions before any
+                    # read, so the mirror does too
+                    shared = min(
+                        kv.blocks_for(kv.committed(slot)) * bs,
+                        int(lengths[dst]))
+                    if shared < lengths[dst]:
+                        write(dst, shared, int(lengths[dst]))
+            elif lengths[slot] == 0:
+                ids = list(shared_pool[int(rng.integers(2))])
+                n = int(rng.integers(2, S // 2))
+                if kv.can_allocate(n, tokens=ids[:n]):
+                    matched = kv.allocate(slot, n, tokens=ids[:n])
+                    toks[slot] = ids[:n]
+                    # cached prefix K/V is already correct in the pool;
+                    # mirror it into the dense layout instead of writing
+                    if matched:
+                        rows_k, rows_v = [], []
+                        for b in kv._blocks[slot][:matched // bs]:
+                            rows_k.append(np.asarray(kv.data[0][b]))
+                            rows_v.append(np.asarray(kv.data[1][b]))
+                        dense = (dense[0].at[slot, :matched].set(
+                                    np.concatenate(rows_k)),
+                                 dense[1].at[slot, :matched].set(
+                                    np.concatenate(rows_v)))
+                    write(slot, matched, n)
+                    kv.commit_tokens(slot, toks[slot])
+                    lengths[slot] = n
+            else:
+                lo = int(lengths[slot])
+                n = int(min(S - 1, lo + rng.integers(1, bs + 1)))
+                if kv.blocks_for(n) - len(kv._blocks[slot]) \
+                        <= kv.free_blocks:
+                    kv.append(slot, n)
+                    toks[slot] = (toks[slot] + [0] * n)[:n]
+                    write(slot, lo, n)
+                    lengths[slot] = n
+            kv.check_invariants()
+
+        # the decode scatters each slot's new K/V at pos through the
+        # table: run the engine's CoW gate first so no two live slots
+        # write the same shared block (exactly what Engine.step does)
+        for slot in range(B):
+            if lengths[slot]:
+                apply_cow(kv, kv.ensure_writable(
+                    slot, int(lengths[slot]) - 1, int(lengths[slot])))
+        kv.check_invariants()
+        pos = jnp.asarray(np.maximum(lengths, 1) - 1, jnp.int32)
+        x = jnp.asarray(rng.normal(size=(B, 1, cfg.d_model)), jnp.float32)
+        out_d, _ = attention_decode(params, x, dense, spec=spec, cfg=cfg,
+                                    pos=pos)
+        paged_cache = tuple(PagedLeaf(l) for l in kv.data)
+        out_p, _ = attention_decode(params, x, paged_cache, spec=spec,
+                                    cfg=cfg, pos=pos,
+                                    block_table=kv.table())
+        live = lengths > 0
+        assert live.any()
+        np.testing.assert_array_equal(np.asarray(out_d)[live],
+                                      np.asarray(out_p)[live])
+
+
+def test_match_prefix_never_fabricates():
+    """match_prefix only ever returns a prefix that was committed with
+    exactly those token ids — wrong-but-plausible matches are impossible
+    by construction (chain hashing), including after eviction."""
+    cfg = _gqa_cfg()
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    init_kv = lambda c, b, s: (jnp.zeros((b, s, KH, hd), jnp.float32),
+                               jnp.zeros((b, s, KH, hd), jnp.float32))
+    kv = PagedKVCache(init_kv, cfg, max_slots=2, max_seq_len=32,
+                      block_size=8)
+    a = list(range(1, 25))
+    kv.allocate(0, len(a), tokens=a)
+    kv.commit_tokens(0, a)
+    kv.free_slot(0)
+    # same first block, divergent second block: match stops at 8
+    b = a[:8] + [99] * 16
+    matched, _ = kv.match_prefix(b)
+    assert matched == 8
+    # divergent first block: no match even though later blocks agree
+    c = [77] + a[1:]
+    assert kv.match_prefix(c) == (0, [])
+    # a shorter prompt over the same ids clamps to full blocks below len
+    assert kv.match_prefix(a[:17])[0] == 16
+    assert kv.match_prefix(a[:16])[0] == 8
+    kv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: overflow containment + acceptance accounting
+# ---------------------------------------------------------------------------
+
+def test_spec_verify_overflow_lands_only_in_trash_block():
+    """Near the end of a reservation the K+1-row verify write runs past
+    the allocated blocks; those rows must fall through the zeroed table
+    columns into trash block 0 — never into an unallocated pool block
+    another request could receive."""
+    cfg = _spec_pt_cfg()
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_slots=2, max_seq_len=64, paged=True,
+                 block_size=8, num_blocks=16, speculate_k=4,
+                 draft_tracks=2)
+    assert eng.runner.speculate_k == 4
+    # reservation: 4 + 3 - 1 = 6 tokens = 1 block; verify writes 5 rows
+    # from pos<=5, so rows 8..9 overflow into table column 1 (= trash)
+    req = eng.submit([1, 2, 3, 4], max_new_tokens=3)
+    eng.run()
+    assert req.state is RequestState.DONE
+    kv = eng.runner.kv
+    kv.check_invariants()
+    live = unwrap_paged(eng.runner.cache)        # kv.data is pre-donation
+    leaves = zip(jax.tree_util.tree_leaves(live),
+                 jax.tree_util.tree_leaves(kv.axes),
+                 jax.tree_util.tree_leaves(kv.pageable))
+    saw_trash_write = False
+    for leaf, bax, pg in leaves:
+        if not pg:
+            continue
+        blocks = jnp.moveaxis(leaf, bax, 0)
+        # the highest block ids were never taken from the free list:
+        # overflow must not have touched them
+        assert not np.asarray(blocks[-1]).any()
+        assert not np.asarray(blocks[-2]).any()
+        if np.asarray(blocks[0]).any():
+            saw_trash_write = True
+    assert saw_trash_write
+
+
+def test_spec_acceptance_rate_unbiased_by_early_finish():
+    """Tied tracks make the drafter exact, so acceptance must be exactly
+    1.0 even when every request's budget (max_new < K) truncates the
+    verify window — the old accounting charged the full K proposals to
+    early-finishing slots and reported < 1.0 here."""
+    cfg = _spec_pt_cfg()
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    params["blocks"] = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[:, :, :1], l.shape), params["blocks"])
+    eng = Engine(cfg, params, max_slots=2, max_seq_len=64,
+                 speculate_k=4, draft_tracks=1)
+    eng.generate([[1, 2, 3, 4]] * 3, max_new_tokens=2)
+    m = eng.metrics.summary()
+    assert m["spec_steps"] > 0
+    assert m["acceptance_rate"] == 1.0, m["acceptance_rate"]
+
+
+# ---------------------------------------------------------------------------
+# benchmark-record robustness + monotonic clocks
+# ---------------------------------------------------------------------------
+
+def _load_bench_module():
+    path = pathlib.Path(__file__).resolve().parents[1] / "benchmarks" \
+        / "serving_latency.py"
+    mspec = importlib.util.spec_from_file_location("serving_latency", path)
+    mod = importlib.util.module_from_spec(mspec)
+    mspec.loader.exec_module(mod)
+    return mod
+
+
+def test_merge_json_survives_corruption_and_writes_atomically(tmp_path):
+    bench = _load_bench_module()
+    out = tmp_path / "BENCH_serving.json"
+    # corrupt file: merge starts fresh instead of raising
+    out.write_text("{ not json !!")
+    bench._merge_json(str(out), "a", {"x": 1})
+    assert json.loads(out.read_text()) == {"a": {"x": 1}}
+    # valid records merge key-wise
+    bench._merge_json(str(out), "b", {"y": 2})
+    assert json.loads(out.read_text()) == {"a": {"x": 1}, "b": {"y": 2}}
+    # non-dict top level is discarded, not crashed on
+    out.write_text("[1, 2, 3]")
+    bench._merge_json(str(out), "c", {"z": 3})
+    assert json.loads(out.read_text()) == {"c": {"z": 3}}
+    # the write replaces the file in one step: no .tmp left behind
+    assert list(tmp_path.glob("*.tmp")) == []
+
+
+def test_latency_metrics_immune_to_wall_clock_jumps(monkeypatch):
+    """TTFT/TPOT run on the monotonic clock: a wall-clock jump (NTP
+    step, DST) mid-request must not corrupt latency percentiles.  The
+    wall-clock timestamp survives only as the log field t_submit_wall."""
+    cfg, params = _tinyllama()
+    eng = Engine(cfg, params, max_slots=2, max_seq_len=32)
+    jumped = {"t": 1e9}
+    monkeypatch.setattr(time, "time", lambda: jumped["t"])
+    r1 = eng.submit([1, 2, 3, 4], max_new_tokens=4)
+    jumped["t"] = 5e8                       # wall clock jumps backwards
+    eng.run()
+    assert r1.t_submit_wall == 1e9
+    assert r1.t_done > r1.t_first > r1.t_submit > 0
+    m = eng.metrics.summary()
+    assert 0 <= m["ttft_ms"]["p50"] < 60_000
+    assert 0 <= m["tpot_ms"]["p50"] < 60_000
+    assert m["throughput_tok_s"] > 0

@@ -135,6 +135,69 @@ def test_pt_sync_accounting(L, D):
         assert sync_reduction(L, D) == 2 * D
 
 
+@given(st.integers(0, 10_000))
+def test_paged_pool_invariants_under_random_ops(seed):
+    """PagedKVCache block accounting survives arbitrary interleavings of
+    allocate (with and without prefix matching), append, commit, fork,
+    CoW splits and free: ``check_invariants`` (every non-trash block in
+    exactly one of referenced/cached-free/free, refcounts == table
+    occurrences, bijective hash index) holds after EVERY operation, and
+    a match never fabricates a prefix that was not committed."""
+    from repro.common.types import ModelConfig, LayerSpec
+    from repro.serving.cache import PagedKVCache
+    cfg = ModelConfig(name="pool-prop", family="dense", n_layers=1,
+                      d_model=8, n_heads=1, n_kv_heads=1, d_ff=8,
+                      vocab_size=16, head_dim=4, dtype="float32",
+                      layer_specs={"x": LayerSpec(mixer="gqa", mlp="none")},
+                      pattern_unit=("x",))
+    init_kv = lambda c, b, s_: (jnp.zeros((b, s_, 1, 4), jnp.float32),)
+    B, S, bs = 4, 32, 8
+    kv = PagedKVCache(init_kv, cfg, max_slots=B, max_seq_len=S,
+                      block_size=bs, num_blocks=10)
+    rng = np.random.default_rng(seed)
+    toks = [None] * B
+    committed_seqs = []
+    for _ in range(40):
+        slot = int(rng.integers(B))
+        choice = rng.random()
+        if choice < 0.2 and toks[slot] is not None:
+            kv.free_slot(slot)
+            toks[slot] = None
+        elif choice < 0.35 and toks[slot] is not None:
+            free = [d for d in range(B) if toks[d] is None]
+            if free and kv.fork_cost(slot) <= kv.free_blocks:
+                kv.fork(slot, free[0])
+                toks[free[0]] = list(toks[slot])
+        elif choice < 0.5 and toks[slot] is not None \
+                and kv.free_blocks >= 2:
+            lo = int(rng.integers(0, S))
+            kv.ensure_writable(slot, lo, lo + int(rng.integers(1, 6)))
+        elif toks[slot] is None:
+            n = int(rng.integers(2, S))
+            ids = rng.integers(1, 4, size=n).tolist()   # tiny alphabet:
+            matched, _ = kv.match_prefix(ids)           # collisions galore
+            assert matched <= (n - 1) // bs * bs
+            assert matched == 0 or any(
+                seq[:matched] == ids[:matched] for seq in committed_seqs)
+            if kv.can_allocate(n, tokens=ids):
+                got = kv.allocate(slot, n, tokens=ids)
+                assert got == matched
+                toks[slot] = ids
+                kv.commit_tokens(slot, ids)
+                committed_seqs.append(ids)
+        else:
+            n = int(min(S, len(toks[slot]) + rng.integers(1, bs)))
+            if kv.blocks_for(n) - len(kv._blocks[slot]) <= kv.free_blocks:
+                kv.append(slot, n)
+                toks[slot] = (toks[slot] + [0] * n)[:n]
+        kv.check_invariants()
+    for slot in range(B):
+        if toks[slot] is not None:
+            kv.free_slot(slot)
+        kv.check_invariants()
+    assert kv.utilization()["used_blocks"] == 0
+
+
 @given(st.integers(2, 6), st.integers(6, 30))
 def test_windowed_ring_cache_decode_matches_full(w, s):
     """Decode with a ring-buffer cache == decode with a full cache for
