@@ -6,15 +6,22 @@ The paper's finding at 6B–30B/400–800B tokens is that PT matches dense
 quality; at this scale we verify the weaker but testable statement that
 PT models train stably to a loss close to dense under an identical
 recipe.
+
+Each trained model is additionally evaluated post-training-quantized
+(rowwise int8 weights, the serving engine's quantizer) on held-out
+batches, so the dense-vs-PT-vs-quantized final losses land in one
+record.  ``--json PATH`` merges that record into BENCH_quality.json.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import pt_paper
+from repro.common.quant import quantize_params
 from repro.core.track import pt_ify
 from repro.data.pipeline import DataConfig, DataLoader
 from repro.launch import steps as steps_lib
@@ -39,31 +46,75 @@ def train_one(cfg, steps: int, batch: int = 8, seq: int = 64,
         params, opt, m = jit_step(params, opt, b)
         if i % max(1, steps // 10) == 0 or i == steps - 1:
             losses.append(float(m["loss"]))
-    return losses, count_params(params)
+    return losses, count_params(params), params
 
 
-def main(quick: bool = False) -> dict:
+def eval_loss(cfg, params, batch: int = 8, seq: int = 64,
+              n_batches: int = 4) -> float:
+    """Mean next-token loss on held-out batches (eval seed != train)."""
+    fns = steps_lib.model_fns(cfg)
+    par = steps_lib.build_parallelism(cfg, "train", None)
+    loss_fn = jax.jit(lambda p, b: fns["loss"](p, b, cfg, par)[1]["loss"])
+    loader = DataLoader(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                   global_batch=batch, seed=777))
+    total = 0.0
+    for _ in range(n_batches):
+        b = {k: jnp.asarray(v) for k, v in next(loader).items()}
+        total += float(loss_fn(params, b))
+    return total / n_batches
+
+
+def ptq_eval(cfg, params) -> dict:
+    """fp vs post-training rowwise-int8 eval loss for one trained model
+    (same quantizer the serving engine applies at load)."""
+    fp = eval_loss(cfg, params)
+    qparams, n_q = quantize_params(params)
+    q = eval_loss(cfg, qparams)
+    return {"fp_eval_loss": fp, "int8_eval_loss": q,
+            "quantized_leaves": n_q,
+            "rel_delta": (q - fp) / max(1e-9, abs(fp))}
+
+
+def main(quick: bool = False, json_path: str | None = None) -> dict:
     steps = 60 if quick else 300
     base = pt_paper.reduced_dense().replace(n_layers=8, d_model=128,
                                             n_heads=8, n_kv_heads=2,
                                             d_ff=352, vocab_size=512)
     results = {}
     t0 = time.time()
-    losses, n = train_one(base, steps)
+    losses, n, dense_params = train_one(base, steps)
     results["dense"] = {"loss": losses, "params": n}
     print(f"dense,{n},{losses[0]:.4f},{losses[-1]:.4f}")
+    results["dense"]["quantized"] = ptq_eval(base, dense_params)
     for D in (2, 4, 8):
         cfg = pt_ify(base, 4, D, width_mult=16)
-        losses, n = train_one(cfg, steps)
+        losses, n, pt_params = train_one(cfg, steps)
         results[f"pt_d{D}"] = {"loss": losses, "params": n}
         print(f"pt_d{D},{n},{losses[0]:.4f},{losses[-1]:.4f}")
+        if D == 4:                 # one PTQ'd PT point is enough
+            results[f"pt_d{D}"]["quantized"] = ptq_eval(cfg, pt_params)
     results["wall_s"] = time.time() - t0
     dense_final = results["dense"]["loss"][-1]
     for D in (2, 4, 8):
         gap = results[f"pt_d{D}"]["loss"][-1] - dense_final
         print(f"# pt_d{D} final-loss gap vs dense: {gap:+.4f}")
+    for name in ("dense", "pt_d4"):
+        q = results[name]["quantized"]
+        print(f"# {name} int8 PTQ eval loss {q['int8_eval_loss']:.4f} vs "
+              f"fp {q['fp_eval_loss']:.4f} "
+              f"({100 * q['rel_delta']:+.2f}%)")
+    if json_path:
+        from benchmarks.serving_latency import _merge_json
+        _merge_json(json_path, "quality_small", results)
     return results
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="60 training steps instead of 300")
+    ap.add_argument("--json", default=None,
+                    help="merge results into this JSON file "
+                    "(BENCH_quality.json in CI)")
+    args = ap.parse_args()
+    main(quick=args.quick, json_path=args.json)

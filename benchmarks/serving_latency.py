@@ -21,6 +21,10 @@ to the random-init (untied) agreement rate.
 ``--prefix`` measures shared-prefix TTFT cold vs warm (content-addressed
 prefix cache), and ``--fork`` the n-way copy-on-write fork scenario —
 both appended to ``--json`` under ``prefix_cache`` / ``fork``.
+
+``--quantized`` reruns the fixed-HBM smoke with int8 KV + int8 weights
+against fp at the SAME pool byte budget, recording the concurrent-slot
+gain and the mean-TPOT delta under ``quantized``.
 """
 from __future__ import annotations
 
@@ -394,6 +398,75 @@ def bench_speculate(json_path: str | None = None, speculate_k: int = 4,
     return out
 
 
+def bench_quantized(json_path: str | None = None) -> dict:
+    """Quantized-serving smoke at a FIXED HBM budget: the fp engine gets
+    a small block pool; the int8 engine spends the SAME bytes on int8
+    payload + per-token fp32 scale blocks (~3.7x the blocks at head_dim
+    64 / fp32), so the same mixed workload runs far more concurrent
+    decode slots.  Mean TPOT is recorded next to the concurrency gain so
+    the dequant overhead of the fused kernels is visible per commit."""
+    import jax
+    import numpy as np
+    from repro.configs import reduced_config
+    from repro.launch import steps as steps_lib
+    from repro.serving.cache import PagedKVCache
+    from repro.serving.engine import Engine
+
+    cfg = reduced_config("tinyllama-1.1b")
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    S, bs, slots = 96, 8, 16
+    budget_blocks = 24              # == the 2-slot contiguous HBM budget
+
+    def run(kv_dtype, num_blocks, weight_dtype=None):
+        eng = Engine(cfg, params, max_slots=slots, max_seq_len=S,
+                     block_size=bs, num_blocks=num_blocks,
+                     kv_dtype=kv_dtype, weight_dtype=weight_dtype)
+        rng = np.random.default_rng(0)
+        for _ in range(16):
+            eng.submit(rng.integers(1, cfg.vocab_size, 24).tolist(), 12)
+        eng.run()
+        m = eng.metrics.summary()
+        st = eng.runner.cache_stats()
+        return {"num_blocks": st["num_blocks"],
+                "pool_bytes": st["pool_bytes"],
+                "bytes_per_block": st["bytes_per_block"],
+                "kv_dtype": st["kv_dtype"],
+                "weight_dtype": st["weight_dtype"],
+                "max_active": m["max_active"],
+                "tpot_mean_ms": m["tpot_ms"]["mean"],
+                "ttft_p50_ms": m["ttft_ms"]["p50"],
+                "throughput_tok_s": m["throughput_tok_s"]}
+
+    fp = run(None, budget_blocks)
+    probe = PagedKVCache(fns["init_cache"], cfg, max_slots=slots,
+                         max_seq_len=S, block_size=bs, num_blocks=4,
+                         kv_dtype="int8")
+    int8_blocks = max(4, fp["pool_bytes"] // probe.bytes_per_block())
+    q = run("int8", int8_blocks, weight_dtype="int8")
+    out = {
+        "hbm_budget_bytes": fp["pool_bytes"],
+        "block_size": bs,
+        "max_slots": slots,
+        "fp": fp,
+        "int8": q,
+        "blocks_gain_at_fixed_hbm": q["num_blocks"] / fp["num_blocks"],
+        "slots_gain_at_fixed_hbm": (q["max_active"]
+                                    / max(1, fp["max_active"])),
+        "tpot_ratio": q["tpot_mean_ms"] / max(1e-9, fp["tpot_mean_ms"]),
+    }
+    print(f"quantized,budget {fp['pool_bytes']} B,"
+          f"blocks {fp['num_blocks']} -> {q['num_blocks']} "
+          f"({out['blocks_gain_at_fixed_hbm']:.2f}x),"
+          f"slots {fp['max_active']} -> {q['max_active']} "
+          f"({out['slots_gain_at_fixed_hbm']:.2f}x),"
+          f"tpot {fp['tpot_mean_ms']:.2f} -> {q['tpot_mean_ms']:.2f} ms "
+          f"({out['tpot_ratio']:.2f}x)")
+    if json_path:
+        _merge_json(json_path, "quantized", out)
+    return out
+
+
 def main(quick: bool = False) -> dict:
     print("# TTFT (ms), analytical roofline model, batch=1, 8 chips")
     t1 = ttft_table()
@@ -422,6 +495,9 @@ if __name__ == "__main__":
     ap.add_argument("--fork", action="store_true",
                     help="toy smoke, n-way copy-on-write fork from one "
                     "prompt's blocks")
+    ap.add_argument("--quantized", action="store_true",
+                    help="toy smoke, int8 KV + int8 weights vs fp at a "
+                    "fixed HBM byte budget")
     ap.add_argument("--n-forks", type=int, default=3,
                     help="children per fork for --fork")
     ap.add_argument("--speculate-k", type=int, default=4,
@@ -432,7 +508,7 @@ if __name__ == "__main__":
                     help="merge smoke results into this JSON file")
     args = ap.parse_args()
     if (args.paged or args.contiguous or args.speculate or args.prefix
-            or args.fork):
+            or args.fork or args.quantized):
         if args.paged:
             bench_smoke(True, args.json)
         if args.contiguous:
@@ -443,6 +519,8 @@ if __name__ == "__main__":
             bench_prefix(args.json)
         if args.fork:
             bench_fork(args.json, args.n_forks)
+        if args.quantized:
+            bench_quantized(args.json)
     else:
         if args.metric in ("ttft", "both"):
             ttft_table()

@@ -20,35 +20,50 @@ import jax.numpy as jnp
 @jax.tree_util.register_pytree_node_class
 class PagedLeaf:
     """Marks a cache leaf as a block pool (block axis where the dense
-    layout has batch, block-size axis where it has sequence)."""
+    layout has batch, block-size axis where it has sequence).
 
-    def __init__(self, pool: jax.Array):
+    An int8-quantized pool additionally carries ``scale`` — a fp32
+    per-token-per-head scale pool shaped like ``pool`` with the last
+    axis collapsed to 1 — threaded through the same pytree marker so
+    payload and scales fork/copy/donate together."""
+
+    def __init__(self, pool: jax.Array, scale: Any = None):
         self.pool = pool
+        self.scale = scale
 
     def tree_flatten(self):
-        return (self.pool,), None
+        return (self.pool, self.scale), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0])
+        return cls(*children)
 
     def __repr__(self) -> str:
         shp = getattr(self.pool, "shape", None)
-        return f"PagedLeaf({shp})"
+        if self.scale is None:
+            return f"PagedLeaf({shp})"
+        return f"PagedLeaf({shp}, scale={getattr(self.scale, 'shape', None)})"
 
 
 def is_paged(leaf: Any) -> bool:
     return isinstance(leaf, PagedLeaf)
 
 
-def wrap_paged(tree: Any, pageable: Any) -> Any:
-    """Wrap the pageable leaves of a cache pytree in ``PagedLeaf``."""
+def wrap_paged(tree: Any, pageable: Any, scales: Any = None) -> Any:
+    """Wrap the pageable leaves of a cache pytree in ``PagedLeaf``.
+    ``scales`` (optional) is a matching tree of scale pools (None at
+    unquantized positions)."""
+    if scales is None:
+        return jax.tree_util.tree_map(
+            lambda l, pg: PagedLeaf(l) if pg else l, tree, pageable)
     return jax.tree_util.tree_map(
-        lambda l, pg: PagedLeaf(l) if pg else l, tree, pageable)
+        lambda l, pg, sc: PagedLeaf(l, sc) if pg else l,
+        tree, pageable, scales)
 
 
 def unwrap_paged(tree: Any) -> Any:
-    """Inverse of ``wrap_paged`` (plain leaves pass through)."""
+    """Extract payload pools of ``wrap_paged`` (plain leaves pass
+    through; scale pools, if any, are dropped)."""
     return jax.tree_util.tree_map(
         lambda l: l.pool if is_paged(l) else l, tree, is_leaf=is_paged)
 

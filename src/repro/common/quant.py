@@ -1,0 +1,177 @@
+"""Shared symmetric-int8 quantization primitives.
+
+One tested primitive serves three consumers:
+
+  * serving weights — ``quantize_params`` walks a param tree and replaces
+    the recognized projection matrices with :class:`QuantTensor` leaves
+    (per-output-channel scales over the contraction dims);
+  * serving KV — ``quantize_rows`` produces the per-token-per-head
+    (payload, scale) pair the paged pools store;
+  * gradient compression — ``optim/compress.py`` round-trips grads
+    through the same ``quantize``/``dequantize`` pair.
+
+A ``QuantTensor`` keeps its fp32 scale at the SAME RANK as the int8
+payload (``keepdims`` over the quantized axes), so every tree transform
+the framework applies to stacked params — ``vmap`` over the track dim,
+``lax.scan`` over the layer-repeat dim, ``pt_draft_params``-style
+axis slicing — moves payload and scale in lockstep.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127.0
+_EPS = 1e-12          # zero-row guard: scale of an all-zero row is _EPS/127
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class QuantTensor:
+    """int8 payload + same-rank broadcastable fp32 scale."""
+
+    __slots__ = ("payload", "scale")
+
+    def __init__(self, payload, scale):
+        self.payload = payload
+        self.scale = scale
+
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey("payload"), self.payload),
+                 (jax.tree_util.GetAttrKey("scale"), self.scale)), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.payload.shape
+
+    @property
+    def ndim(self):
+        return self.payload.ndim
+
+    def __repr__(self):
+        return (f"QuantTensor(payload={self.payload.shape}, "
+                f"scale={self.scale.shape})")
+
+
+def is_quantized(x: Any) -> bool:
+    return isinstance(x, QuantTensor)
+
+
+def _norm_axes(axes: Union[int, Sequence[int]], ndim: int) -> Tuple[int, ...]:
+    if isinstance(axes, int):
+        axes = (axes,)
+    return tuple(sorted(a % ndim for a in axes))
+
+
+def quantize(x: jax.Array, axes: Union[int, Sequence[int]] = -1
+             ) -> QuantTensor:
+    """Symmetric int8 quantization with amax/127 scales over ``axes``
+    (keepdims, fp32)."""
+    ax = _norm_axes(axes, x.ndim)
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=ax, keepdims=True)
+    scale = jnp.maximum(amax, _EPS) / QMAX
+    q = jnp.clip(jnp.round(xf / scale), -QMAX, QMAX)
+    return QuantTensor(q.astype(jnp.int8), scale)
+
+
+def dequantize(qt: QuantTensor, dtype=jnp.float32) -> jax.Array:
+    return (qt.payload.astype(jnp.float32) * qt.scale).astype(dtype)
+
+
+def dq(w: Any, dtype=None) -> jax.Array:
+    """Dequantize a maybe-quantized weight; plain arrays pass through
+    (optionally cast).  Weight-consuming call sites use this so one code
+    path serves fp and int8 params."""
+    if isinstance(w, QuantTensor):
+        return dequantize(w, dtype or jnp.float32)
+    return w if dtype is None else w.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV-row quantization (per token per head, scale over head_dim)
+# ---------------------------------------------------------------------------
+
+def quantize_rows(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """[..., hd] fp -> (int8 [..., hd], fp32 scale [..., 1])."""
+    qt = quantize(x, axes=-1)
+    return qt.payload, qt.scale
+
+
+def dequantize_rows(payload: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (payload.astype(jnp.float32)
+            * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# weight-tree quantization
+# ---------------------------------------------------------------------------
+
+# projection name -> contraction axes of the core (unstacked) shape;
+# scales are per-output-channel (keepdims over these axes).
+_AXES = {
+    "wq": (-3,), "wk": (-3,), "wv": (-3,),    # [d, H|KH, hd]   @ d
+    "wi_gate": (-2,), "wi_up": (-2,),         # [d, d_ff]       @ d
+    "head": (-2,),                            # [d, V]          @ d
+}
+# 'wo' is two different matrices; the parent dict disambiguates.
+_WO_AXES = {"mixer": (-3, -2),                # [H, hd, d]      @ (H, hd)
+            "mlp": (-2,)}                     # [d_ff, d]       @ d_ff
+
+
+def _weight_axes(name: str, parent: str) -> Optional[Tuple[int, ...]]:
+    if parent == "cross":       # enc-dec cross-attn: never served quantized
+        return None
+    if name == "wo":
+        return _WO_AXES.get(parent)
+    return _AXES.get(name)
+
+
+def quantize_params(params: Any) -> Tuple[Any, int]:
+    """Replace recognized projection weights with int8 QuantTensors.
+
+    Embeddings, norms, biases, and every MoE/MLA/SSM/recurrent weight
+    pass through in full precision — that IS the per-layout fallback:
+    an arch with no recognized projections serves entirely in fp.
+    Returns (tree, number_of_quantized_leaves).
+    """
+    n_q = [0]
+
+    def walk(node, name, parent):
+        if isinstance(node, dict):
+            return {k: walk(v, k, name) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, name, parent) for v in node)
+        ax = _weight_axes(name, parent)
+        if (ax is None or node is None
+                or not jnp.issubdtype(node.dtype, jnp.floating)
+                or node.ndim < max(-a for a in ax)):
+            return node
+        n_q[0] += 1
+        return quantize(node, axes=ax)
+
+    return walk(params, "", ""), n_q[0]
+
+
+def matmul(x: jax.Array, w: Any, *, use_kernel: bool = False) -> jax.Array:
+    """``x[..., K] @ w`` where ``w`` may be a QuantTensor.
+
+    ``use_kernel`` routes 2-D int8 weights through the Pallas fused
+    dequant matmul (per-output-channel rescale inside the kernel); the
+    fallback dequantizes and uses the plain dot.
+    """
+    if not isinstance(w, QuantTensor):
+        return x @ w
+    if use_kernel and w.payload.ndim == 2:
+        from repro.kernels import ops as kops     # lazy: kernels are optional
+        xm = x.reshape((-1, x.shape[-1]))
+        out = kops.int8_matmul(xm, w.payload, w.scale.reshape(1, -1))
+        return out.reshape(x.shape[:-1] + (w.payload.shape[-1],)) \
+                  .astype(x.dtype)
+    return x @ dequantize(w, x.dtype)

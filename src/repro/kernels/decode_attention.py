@@ -32,11 +32,18 @@ NEG_INF = -2.0e38
 
 
 def _online_softmax_step(q, k, v, s_start, length, m_scr, l_scr, acc_scr, *,
-                         scale: float):
-    """One KV-block accumulation: q [G, hd], k [cs, hd], v [cs, dv]."""
+                         scale: float, ks=None, vs=None):
+    """One KV-block accumulation: q [G, hd], k [cs, hd], v [cs, dv].
+
+    ``ks``/``vs`` ([cs, 1] fp32) are the per-token-per-head scales of an
+    int8 cache block; the dequant happens here, in-register, inside the
+    online-softmax loop — int8 is what crosses HBM."""
     q = q.astype(jnp.float32) * scale
     k = k.astype(jnp.float32)
     v = v.astype(jnp.float32)
+    if ks is not None:
+        k = k * ks
+        v = v * vs
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))      # [G, cs]
     cols = s_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     s = jnp.where(cols < length, s, NEG_INF)
@@ -50,8 +57,13 @@ def _online_softmax_step(q, k, v, s_start, length, m_scr, l_scr, acc_scr, *,
         p, v, (((1,), (0,)), ((), ())))
 
 
-def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+def _kernel(len_ref, q_ref, k_ref, v_ref, *rest,
             scale: float, block_s: int, n_s: int):
+    if len(rest) == 6:          # int8 cache: scale blocks ride along
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
+        ks_ref = vs_ref = None
     si = pl.program_id(2)
 
     @pl.when(si == 0)
@@ -67,7 +79,9 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     def _compute():
         _online_softmax_step(q_ref[0, 0], k_ref[0, 0], v_ref[0, 0],
                              s_start, length, m_scr, l_scr, acc_scr,
-                             scale=scale)
+                             scale=scale,
+                             ks=None if ks_ref is None else ks_ref[0, 0],
+                             vs=None if vs_ref is None else vs_ref[0, 0])
 
     @pl.when(si == n_s - 1)
     def _finish():
@@ -78,10 +92,14 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      lengths: jax.Array, *, block_s: int = 512,
                      max_len: Optional[int] = None,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None,
                      interpret: bool = True) -> jax.Array:
     """q: [B, H, hd]; caches: [B, S, KH, hd]; lengths: [B] valid rows.
     ``max_len`` (static, host-known upper bound on lengths) truncates the
-    sequential sweep to the live prefix of the cache.  Returns [B, H, hd].
+    sequential sweep to the live prefix of the cache.  int8 caches pass
+    ``k_scale``/``v_scale`` [B, S, KH, 1] per-token-per-head scales;
+    dequant is fused into the online-softmax loop.  Returns [B, H, hd].
     """
     B, S, KH, hd = k_cache.shape
     H = q.shape[1]
@@ -97,17 +115,25 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     kr = k_cache.transpose(0, 2, 1, 3)                    # [B, KH, S, hd]
     vr = v_cache.transpose(0, 2, 1, 3)
 
+    in_specs = [
+        pl.BlockSpec((1,), lambda b, n, s: (b,)),
+        pl.BlockSpec((1, 1, G, hd), lambda b, n, s: (b, n, 0, 0)),
+        pl.BlockSpec((1, 1, block_s, hd), lambda b, n, s: (b, n, s, 0)),
+        pl.BlockSpec((1, 1, block_s, dv), lambda b, n, s: (b, n, s, 0)),
+    ]
+    inputs = [lengths.astype(jnp.int32), qr, kr, vr]
+    if k_scale is not None:
+        in_specs += [pl.BlockSpec((1, 1, block_s, 1),
+                                  lambda b, n, s: (b, n, s, 0))] * 2
+        inputs += [k_scale.transpose(0, 2, 1, 3).astype(jnp.float32),
+                   v_scale.transpose(0, 2, 1, 3).astype(jnp.float32)]
+
     kernel = functools.partial(_kernel, scale=hd ** -0.5,
                                block_s=block_s, n_s=n_s)
     out = pl.pallas_call(
         kernel,
         grid=(B, KH, n_s),
-        in_specs=[
-            pl.BlockSpec((1,), lambda b, n, s: (b,)),
-            pl.BlockSpec((1, 1, G, hd), lambda b, n, s: (b, n, 0, 0)),
-            pl.BlockSpec((1, 1, block_s, hd), lambda b, n, s: (b, n, s, 0)),
-            pl.BlockSpec((1, 1, block_s, dv), lambda b, n, s: (b, n, s, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, dv), lambda b, n, s: (b, n, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, KH, G, dv), q.dtype),
         scratch_shapes=[
@@ -116,7 +142,7 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
             pltpu.VMEM((G, dv), jnp.float32),
         ],
         interpret=interpret,
-    )(lengths.astype(jnp.int32), qr, kr, vr)
+    )(*inputs)
     return out.reshape(B, H, dv)
 
 
@@ -124,9 +150,13 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 # paged layout
 # ---------------------------------------------------------------------------
 
-def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *, scale: float, block_s: int,
-                  n_s: int):
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                  scale: float, block_s: int, n_s: int):
+    if len(rest) == 6:          # int8 pools: scale blocks ride along
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     si = pl.program_id(2)
 
@@ -144,7 +174,9 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         # k/v blocks were DMA'd from pool row tbl[b, si] by the index map
         _online_softmax_step(q_ref[0, 0], k_ref[0, :, 0], v_ref[0, :, 0],
                              s_start, length, m_scr, l_scr, acc_scr,
-                             scale=scale)
+                             scale=scale,
+                             ks=None if ks_ref is None else ks_ref[0, :, 0],
+                             vs=None if vs_ref is None else vs_ref[0, :, 0])
 
     @pl.when(si == n_s - 1)
     def _finish():
@@ -156,6 +188,8 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, block_table: jax.Array,
                            lengths: jax.Array, *,
                            max_len: Optional[int] = None,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
                            interpret: bool = True) -> jax.Array:
     """Flash-decode over a block-pool cache.
 
@@ -169,7 +203,9 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     The table and lengths are scalar-prefetch operands: the k/v BlockSpec
     index maps dereference ``tbl[b, si]`` to pick the DMA source block, so
     the kernel streams exactly the blocks the table names — the paged
-    gather is free.
+    gather is free.  int8 pools pass ``k_scale``/``v_scale``
+    [N, block_size, KH, 1] scale pools, whose blocks ride the same
+    table-driven index maps; dequant is fused into the softmax loop.
     """
     N, bs, KH, hd = k_pool.shape
     B, H = q.shape[:2]
@@ -181,19 +217,27 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
         n_s = max(1, min(nmax, -(-max_len // bs)))
     qr = q.reshape(B, KH, G, hd)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd),
+                     lambda b, n, s, tbl, lens: (b, n, 0, 0)),
+        pl.BlockSpec((1, bs, 1, hd),
+                     lambda b, n, s, tbl, lens: (tbl[b, s], 0, n, 0)),
+        pl.BlockSpec((1, bs, 1, dv),
+                     lambda b, n, s, tbl, lens: (tbl[b, s], 0, n, 0)),
+    ]
+    inputs = [qr, k_pool, v_pool]
+    if k_scale is not None:
+        in_specs += [pl.BlockSpec((1, bs, 1, 1),
+                                  lambda b, n, s, tbl, lens:
+                                  (tbl[b, s], 0, n, 0))] * 2
+        inputs += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
     kernel = functools.partial(_paged_kernel, scale=hd ** -0.5,
                                block_s=bs, n_s=n_s)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KH, n_s),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd),
-                         lambda b, n, s, tbl, lens: (b, n, 0, 0)),
-            pl.BlockSpec((1, bs, 1, hd),
-                         lambda b, n, s, tbl, lens: (tbl[b, s], 0, n, 0)),
-            pl.BlockSpec((1, bs, 1, dv),
-                         lambda b, n, s, tbl, lens: (tbl[b, s], 0, n, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, dv),
                                lambda b, n, s, tbl, lens: (b, n, 0, 0)),
         scratch_shapes=[
@@ -208,5 +252,5 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, KH, G, dv), q.dtype),
         interpret=interpret,
     )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
-      qr, k_pool, v_pool)
+      *inputs)
     return out.reshape(B, H, dv)

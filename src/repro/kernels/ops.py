@@ -13,6 +13,7 @@ import jax
 
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
+from repro.kernels import quant_matmul as _qm
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import ssm_scan as _ss
 
@@ -31,18 +32,28 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
 @functools.partial(jax.jit, static_argnames=("block_s", "max_len"))
 def decode_attention(q, k_cache, v_cache, lengths, *, block_s: int = 512,
-                     max_len: Optional[int] = None):
+                     max_len: Optional[int] = None,
+                     k_scale=None, v_scale=None):
     return _da.decode_attention(q, k_cache, v_cache, lengths,
                                 block_s=block_s, max_len=max_len,
+                                k_scale=k_scale, v_scale=v_scale,
                                 interpret=INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("max_len",))
 def paged_decode_attention(q, k_pool, v_pool, block_table, lengths, *,
-                           max_len: Optional[int] = None):
+                           max_len: Optional[int] = None,
+                           k_scale=None, v_scale=None):
     return _da.paged_decode_attention(q, k_pool, v_pool, block_table,
                                       lengths, max_len=max_len,
+                                      k_scale=k_scale, v_scale=v_scale,
                                       interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def int8_matmul(x, w, scale, *, block_m: int = 256, block_n: int = 256):
+    return _qm.int8_matmul(x, w, scale, block_m=block_m, block_n=block_n,
+                           interpret=INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "block_d"))

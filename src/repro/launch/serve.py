@@ -48,6 +48,17 @@ def main() -> None:
                     "configs with a paged cache only; 0 = off)")
     ap.add_argument("--draft-tracks", type=int, default=0,
                     help="tracks the drafter runs on (default n_tracks/2)")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=["float32", "int8"],
+                    help="paged KV storage dtype: int8 stores 8-bit "
+                    "payloads + per-token fp32 scales (dequant fused "
+                    "into the decode kernels); unsupported layouts fall "
+                    "back to fp automatically")
+    ap.add_argument("--weight-dtype", default=None,
+                    choices=["float32", "int8"],
+                    help="serving weight dtype: int8 quantizes matmul "
+                    "weights rowwise at engine load (norms/embeddings "
+                    "stay fp)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable content-addressed prefix caching "
                     "(on by default for paged full-attention configs)")
@@ -73,10 +84,22 @@ def main() -> None:
                  prefill_chunk=args.prefill_chunk,
                  speculate_k=args.speculate_k,
                  draft_tracks=args.draft_tracks,
-                 prefix_cache=not args.no_prefix_cache)
+                 prefix_cache=not args.no_prefix_cache,
+                 kv_dtype=args.kv_dtype,
+                 weight_dtype=args.weight_dtype)
     if args.speculate_k and not eng.runner.speculate_k:
         print("[serve] --speculate-k ignored: needs a PT config with a "
               "paged cache (full attention, no MoE/recurrent layers)")
+    for reason in eng.runner.quant_fallbacks:
+        print(f"[serve] quantization fallback: {reason}")
+    if eng.runner.kv_dtype or eng.runner.weight_dtype:
+        st = eng.runner.cache_stats()
+        extra = (f", pool {st['pool_bytes'] / 1e6:.1f} MB "
+                 f"({st['bytes_per_block']} B/block)"
+                 if st["mode"] == "paged" else "")
+        print(f"[serve] quantized: kv={st.get('kv_dtype', 'float32')} "
+              f"weights={st['weight_dtype']} "
+              f"({st['quantized_weight_leaves']} leaves){extra}")
     rng = np.random.default_rng(args.seed)
     sp = SampleParams(temperature=args.temperature)
     shared = rng.integers(1, cfg.vocab_size,

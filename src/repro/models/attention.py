@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.paged import PagedLeaf, is_paged, token_to_pool
+from repro.common.quant import dq, quantize_rows
 from repro.common.types import LayerSpec, ModelConfig
 from repro.models import rope as rope_lib
 from repro.models.norms import rmsnorm, rmsnorm_init
@@ -92,9 +93,9 @@ def _project_qkv(params, x, spec: LayerSpec, cfg: ModelConfig,
                  positions, par: Parallelism):
     """Project + qk-norm + rope.  x: [B,S,d] -> q [B,S,H,hd], k/v [B,S,KH,hd]."""
     hd = params["wq"].shape[-1]
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
-    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
-    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = jnp.einsum("bsd,dhk->bshk", x, dq(params["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", x, dq(params["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", x, dq(params["wv"]))
     q = par.cs(q, "batch", None, "heads", None)
     if cfg.qk_norm:
         q = rmsnorm(params["q_norm"], q, eps=cfg.norm_eps)
@@ -232,7 +233,7 @@ def attention_apply(params, x: jax.Array, *, spec: LayerSpec,
             q, kf, vf, causal=spec.causal, window=spec.window,
             softcap=spec.attn_logit_softcap,
             chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k, par=par)
-    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+    out = jnp.einsum("bshk,hkd->bsd", ctx, dq(params["wo"]))
     out = par.cs(out, "batch", "seq", "d_model")
     cache = None
     if return_cache:
@@ -338,7 +339,7 @@ def attention_decode(params, x: jax.Array, cache: Tuple[jax.Array, jax.Array],
     ctx = jnp.einsum("bngs,bsnd->bngd", (p / l).astype(v_cache.dtype),
                      v_cache, preferred_element_type=jnp.float32)
     ctx = ctx.reshape(B, H, -1).astype(x.dtype)
-    out = jnp.einsum("bhk,hkd->bd", ctx, params["wo"])[:, None]
+    out = jnp.einsum("bhk,hkd->bd", ctx, dq(params["wo"]))[:, None]
     out = par.cs(out, "batch", None, "d_model")
     return out, (k_cache, v_cache)
 
@@ -355,31 +356,55 @@ def _scatter_cache(cache: jax.Array, new: jax.Array, slot: jax.Array,
 # paged decode / chunked prefill (block-pool caches)
 # ---------------------------------------------------------------------------
 
-def _paged_write(pool_k: jax.Array, pool_v: jax.Array, k_new: jax.Array,
+def _paged_write(k_leaf: PagedLeaf, v_leaf: PagedLeaf, k_new: jax.Array,
                  v_new: jax.Array, w_idx: jax.Array):
-    """Scatter new K/V rows into flattened pools at pool rows ``w_idx``.
-    k_new/v_new: [..., KH, hd] with leading dims matching w_idx; returns
-    (flat_k, flat_v) [N*bs, KH, hd]."""
-    flat_k = pool_k.reshape((-1,) + pool_k.shape[2:])
-    flat_v = pool_v.reshape((-1,) + pool_v.shape[2:])
+    """Scatter new K/V rows into pool leaves at pool rows ``w_idx``.
+    k_new/v_new: [..., KH, hd] fp with leading dims matching w_idx.  An
+    int8 leaf (``scale is not None``) quantizes each row per token per
+    head and scatters payload + scale through the same indices.  Returns
+    the updated (k_leaf, v_leaf)."""
     idx = w_idx.reshape(-1)
-    flat_k = flat_k.at[idx].set(
-        k_new.astype(flat_k.dtype).reshape((-1,) + k_new.shape[-2:]))
-    flat_v = flat_v.at[idx].set(
-        v_new.astype(flat_v.dtype).reshape((-1,) + v_new.shape[-2:]))
-    return flat_k, flat_v
+
+    def put(pool, rows):
+        flat = pool.reshape((-1,) + pool.shape[2:])
+        flat = flat.at[idx].set(
+            rows.astype(flat.dtype).reshape((-1,) + rows.shape[-2:]))
+        return flat.reshape(pool.shape)
+
+    if k_leaf.scale is not None:
+        qk, sk = quantize_rows(k_new.astype(jnp.float32))
+        qv, sv = quantize_rows(v_new.astype(jnp.float32))
+        return (PagedLeaf(put(k_leaf.pool, qk), put(k_leaf.scale, sk)),
+                PagedLeaf(put(v_leaf.pool, qv), put(v_leaf.scale, sv)))
+    return (PagedLeaf(put(k_leaf.pool, k_new)),
+            PagedLeaf(put(v_leaf.pool, v_new)))
 
 
-def _paged_gather(flat: jax.Array, block_table: jax.Array, bs: int,
+def _paged_gather(pool: jax.Array, block_table: jax.Array, bs: int,
                   par: Parallelism) -> jax.Array:
     """Assemble the contiguous per-slot view [B, S_cap, KH, hd] from a
-    flattened pool through the block table (the jnp reference path; the
-    Pallas kernel streams blocks without materializing this)."""
+    pool [N, bs, ...] through the block table (the jnp reference path;
+    the Pallas kernel streams blocks without materializing this)."""
+    flat = pool.reshape((-1,) + pool.shape[2:])
     B, nmax = block_table.shape
     j = jnp.arange(nmax * bs, dtype=jnp.int32)
     idx = token_to_pool(block_table, jnp.broadcast_to(j[None], (B, j.size)),
                         bs)
     return par.cs(flat[idx], "batch", "kv_seq", "kv_heads", None)
+
+
+def _paged_read(k_leaf: PagedLeaf, v_leaf: PagedLeaf,
+                block_table: jax.Array, bs: int, par: Parallelism):
+    """Gather the per-slot [B, S_cap, KH, hd] views, dequantizing int8
+    leaves (payload * per-token scale) to fp32."""
+    k_g = _paged_gather(k_leaf.pool, block_table, bs, par)
+    v_g = _paged_gather(v_leaf.pool, block_table, bs, par)
+    if k_leaf.scale is not None:
+        k_g = k_g.astype(jnp.float32) * _paged_gather(
+            k_leaf.scale, block_table, bs, par)
+        v_g = v_g.astype(jnp.float32) * _paged_gather(
+            v_leaf.scale, block_table, bs, par)
+    return k_g, v_g
 
 
 def _paged_decode(params, q, k_new, v_new, k_leaf: PagedLeaf,
@@ -399,25 +424,24 @@ def _paged_decode(params, q, k_new, v_new, k_leaf: PagedLeaf,
     """
     if block_table is None:
         raise ValueError("paged cache leaf but no block_table passed")
-    pool_k, pool_v = k_leaf.pool, v_leaf.pool
-    bs = pool_k.shape[1]
+    bs = k_leaf.pool.shape[1]
     B, H = q.shape[:2]
-    KH = pool_k.shape[2]
+    KH = k_leaf.pool.shape[2]
     G = H // KH
     w_idx = token_to_pool(block_table, pos[:, None], bs)[:, 0]
-    flat_k, flat_v = _paged_write(pool_k, pool_v, k_new, v_new, w_idx)
-    new_cache = (PagedLeaf(flat_k.reshape(pool_k.shape)),
-                 PagedLeaf(flat_v.reshape(pool_v.shape)))
+    k_leaf, v_leaf = _paged_write(k_leaf, v_leaf, k_new, v_new, w_idx)
+    new_cache = (k_leaf, v_leaf)
     if cfg.use_pallas and par.mesh is None and spec.attn_logit_softcap is None:
         from repro.kernels import ops as kops
         # kv_max_len truncates the block sweep to the live prefix: a
-        # short batch never DMAs the dead tail of the pool
+        # short batch never DMAs the dead tail of the pool; int8 pools
+        # ship their scale pools for in-kernel dequant
         ctx = kops.paged_decode_attention(
-            q, flat_k.reshape(pool_k.shape), flat_v.reshape(pool_v.shape),
-            block_table, pos + 1, max_len=kv_max_len)
+            q, k_leaf.pool, v_leaf.pool,
+            block_table, pos + 1, max_len=kv_max_len,
+            k_scale=k_leaf.scale, v_scale=v_leaf.scale)
     else:
-        k_g = _paged_gather(flat_k, block_table, bs, par)
-        v_g = _paged_gather(flat_v, block_table, bs, par)
+        k_g, v_g = _paged_read(k_leaf, v_leaf, block_table, bs, par)
         S_cap = k_g.shape[1]
         scale = q.shape[-1] ** -0.5
         qg = (q * scale).astype(k_g.dtype).reshape(B, KH, G, -1)
@@ -435,7 +459,7 @@ def _paged_decode(params, q, k_new, v_new, k_leaf: PagedLeaf,
                          v_g, preferred_element_type=jnp.float32)
         ctx = ctx.reshape(B, H, -1)
     ctx = ctx.astype(out_dtype)
-    out = jnp.einsum("bhk,hkd->bd", ctx, params["wo"])[:, None]
+    out = jnp.einsum("bhk,hkd->bd", ctx, dq(params["wo"]))[:, None]
     out = par.cs(out, "batch", None, "d_model")
     return out, new_cache
 
@@ -480,19 +504,16 @@ def attention_chunk(params, x: jax.Array, cache, *, spec: LayerSpec,
     q, k_new, v_new = _project_qkv(params, x, spec, cfg, rope_positions, par)
     H = q.shape[2]
     k_leaf, v_leaf = cache
-    pool_k, pool_v = k_leaf.pool, v_leaf.pool
-    bs = pool_k.shape[1]
-    KH = pool_k.shape[2]
+    bs = k_leaf.pool.shape[1]
+    KH = k_leaf.pool.shape[2]
     G = H // KH
     w_idx = token_to_pool(block_table, positions, bs)            # [B,C]
-    flat_k, flat_v = _paged_write(pool_k, pool_v, k_new, v_new, w_idx)
-    new_cache = (PagedLeaf(flat_k.reshape(pool_k.shape)),
-                 PagedLeaf(flat_v.reshape(pool_v.shape)))
+    k_leaf, v_leaf = _paged_write(k_leaf, v_leaf, k_new, v_new, w_idx)
+    new_cache = (k_leaf, v_leaf)
     read_table = block_table
     if kv_max_len is not None:
         read_table = block_table[:, :-(-kv_max_len // bs)]
-    k_g = _paged_gather(flat_k, read_table, bs, par)
-    v_g = _paged_gather(flat_v, read_table, bs, par)
+    k_g, v_g = _paged_read(k_leaf, v_leaf, read_table, bs, par)
     S_cap = k_g.shape[1]
     scale = q.shape[-1] ** -0.5
     qg = (q * scale).astype(k_g.dtype).reshape(B, C, KH, G, -1)
@@ -509,7 +530,7 @@ def attention_chunk(params, x: jax.Array, cache, *, spec: LayerSpec,
     ctx = jnp.einsum("bcngs,bsnd->bcngd", (p / l).astype(v_g.dtype),
                      v_g, preferred_element_type=jnp.float32)
     ctx = ctx.reshape(B, C, H, -1).astype(x.dtype)
-    out = jnp.einsum("bchk,hkd->bcd", ctx, params["wo"])
+    out = jnp.einsum("bchk,hkd->bcd", ctx, dq(params["wo"]))
     out = par.cs(out, "batch", None, "d_model")
     return out, new_cache
 

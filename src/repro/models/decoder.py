@@ -22,6 +22,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.common import quant
 from repro.common.types import ModelConfig
 from repro.models import rope as rope_lib
 from repro.models.attention import cross_kv
@@ -121,8 +122,12 @@ def _head(params, h: jax.Array, cfg: ModelConfig, par: Parallelism):
     if cfg.logits_fp32:
         h = h.astype(jnp.float32)
     if cfg.tie_embeddings:
-        w = params["embed"]
+        w = params["embed"]                # embeddings are never quantized
         logits = jnp.einsum("...d,vd->...v", h, w.astype(h.dtype))
+    elif quant.is_quantized(params["head"]):
+        logits = quant.matmul(h, params["head"],
+                              use_kernel=cfg.use_pallas and par.mesh is None
+                              ).astype(h.dtype)
     else:
         logits = h @ params["head"].astype(h.dtype)
     if cfg.final_logit_softcap:

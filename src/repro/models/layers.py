@@ -153,7 +153,8 @@ def layer_apply(params, x: jax.Array, *, cfg: ModelConfig, spec: LayerSpec,
         if spec.mlp == "moe":
             h, aux = moe_lib.moe_apply(params["mlp"], h, cfg=cfg, par=par)
         else:
-            h = mlp_apply(params["mlp"], h, spec.mlp, par=par)
+            h = mlp_apply(params["mlp"], h, spec.mlp, par=par,
+                          use_pallas=cfg.use_pallas)
         if cfg.post_norm:
             h = _norm(cfg, params, "ln2_post", h)
         x = x + h

@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.common import quant
 from repro.runtime.parallel import Parallelism, NO_PARALLEL
 
 
@@ -43,17 +44,25 @@ def _act(kind: str, g: jax.Array) -> jax.Array:
 
 
 def mlp_apply(params, x: jax.Array, kind: str,
-              par: Parallelism = NO_PARALLEL) -> jax.Array:
-    """x: [..., d_model] -> [..., d_model].  Hidden dim TP-sharded."""
+              par: Parallelism = NO_PARALLEL,
+              use_pallas: bool = False) -> jax.Array:
+    """x: [..., d_model] -> [..., d_model].  Hidden dim TP-sharded.
+
+    int8 weights (``QuantTensor`` leaves) route through ``quant.matmul``;
+    with ``use_pallas`` the 2-D (unstacked) case runs the fused-dequant
+    Pallas matmul, otherwise the weight is dequantized in-register by XLA.
+    """
     if kind == "none":
         return x
+    kern = use_pallas and par.mesh is None
+    mm = lambda a, w: quant.matmul(a, w, use_kernel=kern)
     batch_dims = ("batch",) + ("seq",) * (x.ndim - 2)
     if kind in ("swiglu", "geglu"):
-        g = x @ params["wi_gate"]
-        u = x @ params["wi_up"]
+        g = mm(x, params["wi_gate"])
+        u = mm(x, params["wi_up"])
         h = _act(kind, g) * u
     else:
-        h = _act(kind, x @ params["wi_up"])
+        h = _act(kind, mm(x, params["wi_up"]))
     h = par.cs(h, *batch_dims, "d_ff")
-    out = h @ params["wo"]
+    out = mm(h, params["wo"])
     return par.cs(out, *batch_dims, "d_model")

@@ -105,6 +105,14 @@ def param_pspec(path: str, leaf, cfg: ModelConfig,
 
 def _leaf_core(path: str) -> Optional[Tuple[Optional[str], ...]]:
     parts = path.split("/")
+    # int8 QuantTensor weights add a payload/scale component below the
+    # weight name; both leaves keep the weight's rank (keepdims scales),
+    # so they inherit the weight's rule.  'scale' is ambiguous with norm
+    # scales — only strip when the parent path resolves to a rule.
+    if parts[-1] in ("payload", "scale") and len(parts) > 1:
+        core = _leaf_core("/".join(parts[:-1]))
+        if core is not None:
+            return core
     base = parts[-1]
     parent = parts[-2] if len(parts) > 1 else ""
     if base in _NORM_NAMES:

@@ -44,7 +44,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.paged import token_to_pool
+from repro.common.paged import PagedLeaf, is_paged, token_to_pool
+from repro.common.quant import quantize_rows
 from repro.common.types import LayerSpec, ModelConfig
 
 
@@ -162,27 +163,45 @@ def paged_insert_rows(dst: Any, src: Any, axes: Any, seqs: Any,
     pool: one flat-index scatter per leaf.  Rows beyond a request's
     allocation resolve to the trash block by construction (table entries
     default to 0).
+
+    Pageable ``dst`` leaves may be :class:`PagedLeaf` wrappers; an int8
+    leaf (``scale is not None``) quantizes the fp source rows per token
+    per head at insert time and scatters payload and scale through the
+    same table indices, so every downstream pool op (fork, CoW copy,
+    reads) is quantization-aware for free.
     """
     slots = jnp.asarray(slots, jnp.int32)
 
     def put(d, s, bax, sax, pg):
         if not pg:
             return _put_rows(d, s, bax, slots)
-        # pool view [N, bs, ...rest] / src view [n, L, ...rest]
-        dm = jnp.moveaxis(jnp.moveaxis(d, bax, 0), sax if sax > bax else sax + 1, 1)
-        sm = jnp.moveaxis(jnp.moveaxis(s, bax, 0), sax if sax > bax else sax + 1, 1)
+        leaf = d if is_paged(d) else None
+        pool = leaf.pool if leaf is not None else d
+        sax2 = sax if sax > bax else sax + 1
+
+        def scatter(dst_pool, src_rows):
+            # pool view [N, bs, ...rest] / src view [n, L, ...rest]
+            dm = jnp.moveaxis(jnp.moveaxis(dst_pool, bax, 0), sax2, 1)
+            rest = dm.shape[2:]
+            flat = dm.reshape((-1,) + rest).at[idx].set(
+                src_rows.astype(dst_pool.dtype).reshape((-1,) + rest))
+            return jnp.moveaxis(jnp.moveaxis(flat.reshape(dm.shape), 1,
+                                             sax2), 0, bax)
+
+        sm = jnp.moveaxis(jnp.moveaxis(s, bax, 0), sax2, 1)
         n, L = sm.shape[:2]
-        rest = dm.shape[2:]
         j = jnp.arange(L, dtype=jnp.int32)[None, :]            # [1, L]
         idx = token_to_pool(table_rows, jnp.broadcast_to(j, (n, L)),
-                            block_size)                        # [n, L]
-        flat = dm.reshape((-1,) + rest).at[idx.reshape(-1)].set(
-            sm.astype(d.dtype).reshape((-1,) + rest))
-        out = flat.reshape(dm.shape)
-        return jnp.moveaxis(jnp.moveaxis(out, 1, sax if sax > bax else sax + 1), 0, bax)
+                            block_size).reshape(-1)            # [n*L]
+        if leaf is not None and leaf.scale is not None:
+            payload, sc = quantize_rows(sm.astype(jnp.float32))
+            return PagedLeaf(scatter(pool, payload),
+                             scatter(leaf.scale, sc))
+        out = scatter(pool, sm)
+        return PagedLeaf(out) if leaf is not None else out
 
     return jax.tree_util.tree_map(put, dst, src, axes, seqs, pageable,
-                                  is_leaf=lambda l: l is None)
+                                  is_leaf=lambda l: l is None or is_paged(l))
 
 
 _HASH_ROOT = b"pkv-root"           # chain-hash seed for position-0 blocks
@@ -262,7 +281,12 @@ class PagedKVCache:
     def __init__(self, init_cache_fn: Callable, cfg: ModelConfig, *,
                  max_slots: int, max_seq_len: int, block_size: int = 16,
                  num_blocks: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 kv_dtype: Optional[str] = None):
+        if kv_dtype not in (None, "int8"):
+            raise ValueError(f"unsupported kv_dtype {kv_dtype!r} "
+                             "(None or 'int8')")
+        self.kv_dtype = kv_dtype
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
@@ -283,17 +307,39 @@ class PagedKVCache:
             and leaf.shape[sax] == max_seq_len,
             full, self.seq, is_leaf=lambda l: l is None)
 
+        def _quantized(leaf, pg):
+            return (pg and kv_dtype == "int8"
+                    and jnp.issubdtype(leaf.dtype, jnp.floating))
+
         def build(leaf, bax, sax, pg):
             if not pg:
                 return jnp.zeros(leaf.shape, leaf.dtype)
             shape = list(leaf.shape)
             shape[bax] = self.num_blocks
             shape[sax] = block_size
-            return jnp.zeros(tuple(shape), leaf.dtype)
+            dt = jnp.int8 if _quantized(leaf, pg) else leaf.dtype
+            return jnp.zeros(tuple(shape), dt)
+
+        def build_scale(leaf, bax, sax, pg):
+            # per-token-per-head fp32 scales, pool-shaped with the head
+            # dim collapsed to 1: single-token decode writes update one
+            # row's scale without touching the rest of the block (a
+            # shared per-block scale would force a whole-block requant
+            # on every appended token)
+            if not _quantized(leaf, pg):
+                return None
+            shape = list(leaf.shape)
+            shape[bax] = self.num_blocks
+            shape[sax] = block_size
+            shape[-1] = 1
+            return jnp.zeros(tuple(shape), jnp.float32)
 
         self.data = jax.tree_util.tree_map(build, full, self.axes, self.seq,
                                            self.pageable,
                                            is_leaf=lambda l: l is None)
+        self.scales = (jax.tree_util.tree_map(
+            build_scale, full, self.axes, self.seq, self.pageable,
+            is_leaf=lambda l: l is None) if kv_dtype == "int8" else None)
         if not any(jax.tree_util.tree_leaves(self.pageable)):
             raise ValueError(f"{cfg.name}: no pageable cache leaves "
                              "(every layer is a ring or O(1) state)")
@@ -628,14 +674,24 @@ class PagedKVCache:
 
     # -- stats ----------------------------------------------------------
     def pool_bytes(self) -> int:
-        return sum(l.size * l.dtype.itemsize
-                   for l, pg in zip(jax.tree_util.tree_leaves(self.data),
-                                    jax.tree_util.tree_leaves(self.pageable))
-                   if pg)
+        """HBM bytes of the pageable pools — int8 payloads AND their fp32
+        scale pools both count (the scales are real HBM)."""
+        total = sum(l.size * l.dtype.itemsize
+                    for l, pg in zip(jax.tree_util.tree_leaves(self.data),
+                                     jax.tree_util.tree_leaves(self.pageable))
+                    if pg)
+        if self.scales is not None:
+            total += sum(l.size * l.dtype.itemsize
+                         for l in jax.tree_util.tree_leaves(self.scales))
+        return total
+
+    def bytes_per_block(self) -> int:
+        return self.pool_bytes() // self.num_blocks
 
     def utilization(self) -> Dict[str, Any]:
         used = sum(1 for r in self._ref[1:] if r > 0)
         tokens = sum(self._tokens)
+        bpb = self.bytes_per_block()
         return {
             "num_blocks": self.num_blocks - 1,
             "used_blocks": used,
@@ -644,6 +700,10 @@ class PagedKVCache:
             "tokens_stored": tokens,
             "token_utilization": (tokens / (used * self.block_size)
                                   if used else 0.0),
+            "kv_dtype": self.kv_dtype or "float32",
+            "pool_bytes": self.pool_bytes(),
+            "bytes_per_block": bpb,
+            "used_bytes": used * bpb,
             "prefix_queries": self.prefix_queries,
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "prefix_lookup_tokens": self.prefix_lookup_tokens,

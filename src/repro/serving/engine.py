@@ -78,7 +78,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.paged import unwrap_paged, wrap_paged
+from repro.common.paged import PagedLeaf, is_paged, wrap_paged
 from repro.common.types import ModelConfig
 from repro.core import track as pt_lib
 from repro.launch import steps as steps_lib
@@ -306,9 +306,15 @@ class ModelRunner:
                  paged: bool = True, block_size: int = 16,
                  num_blocks: Optional[int] = None, prefill_chunk: int = 0,
                  speculate_k: int = 0, draft_tracks: int = 0,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 kv_dtype: Optional[str] = None,
+                 weight_dtype: Optional[str] = None):
         if cfg.encdec is not None:
             raise ValueError("engine serves decoder-only models")
+        if kv_dtype not in (None, "float32", "int8"):
+            raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
+        if weight_dtype not in (None, "float32", "int8"):
+            raise ValueError(f"unsupported weight_dtype {weight_dtype!r}")
         self.cfg = cfg
         self.params = params
         self.par = par
@@ -316,6 +322,12 @@ class ModelRunner:
         self.max_seq_len = max_seq_len
         self.min_bucket = min_bucket
         self.fns = steps_lib.model_fns(cfg)
+        # requested dtypes; effective values (self.kv_dtype /
+        # self.weight_dtype) are set below after the layout gates, with
+        # human-readable fallback reasons in self.quant_fallbacks
+        self.kv_dtype: Optional[str] = None
+        self.weight_dtype: Optional[str] = None
+        self.quant_fallbacks: List[str] = []
         # padded tokens corrupt length-sensitive layers: recurrent state
         # (conv window / SSM state) carries them forward, and capacity-
         # based MoE routing lets them consume expert-capacity slots that
@@ -327,17 +339,37 @@ class ModelRunner:
 
         self.kv: Optional[PagedKVCache] = None
         self.paged = paged and pageable_arch(cfg)
+        # int8 KV shares the chunked-prefill gate: every cold prefill is
+        # funneled through the chunk program so cold and warm requests
+        # attend to identical quantized pool bytes (warm == cold parity).
+        # Length-sensitive archs and sliding windows fall back to fp.
+        full_attn = all(cfg.spec(nm).window is None
+                        for nm in cfg.layer_names)
+        want_int8_kv = kv_dtype == "int8"
+        int8_kv_ok = (self.paged and not self.exact_prefill and full_attn)
+        if want_int8_kv and not int8_kv_ok:
+            self.quant_fallbacks.append(
+                "kv_dtype=int8 needs the paged cache, full attention and "
+                "no length-sensitive layers; serving fp KV")
+        eff_kv = "int8" if (want_int8_kv and int8_kv_ok) else None
         if self.paged:
             try:
                 self.kv = PagedKVCache(self.fns["init_cache"], cfg,
                                        max_slots=max_slots,
                                        max_seq_len=max_seq_len,
                                        block_size=block_size,
-                                       num_blocks=num_blocks)
+                                       num_blocks=num_blocks,
+                                       kv_dtype=eff_kv)
             except ValueError:             # every layer is a ring: dense
                 self.paged = False
+                if eff_kv:
+                    self.quant_fallbacks.append(
+                        "kv_dtype=int8: no pageable leaves; serving fp KV")
+                eff_kv = None
         if self.paged:
-            self.cache = wrap_paged(self.kv.data, self.kv.pageable)
+            self.kv_dtype = eff_kv
+            self.cache = wrap_paged(self.kv.data, self.kv.pageable,
+                                    self.kv.scales)
             self._axes, self._seq = self.kv.axes, self.kv.seq
             self._pageable = self.kv.pageable
         else:
@@ -387,6 +419,25 @@ class ModelRunner:
             self._spec = jax.jit(self._spec_impl, donate_argnums=(2, 3),
                                  static_argnames=("max_len",))
             self.draft_prefill_shapes: set = set()
+
+        # int8 weights: quantize AFTER the draft-track slice so the
+        # drafter is cut from fp params and quantized independently
+        # (slicing a QuantTensor tree would de-align payload and scale
+        # rules); leaves without a quantization rule (norms, embeddings,
+        # MLA latents, SSM/rglru state mixers, MoE experts) pass through
+        # in fp — that IS the layout fallback.
+        self.n_quantized = 0
+        if weight_dtype == "int8":
+            from repro.common.quant import quantize_params
+            self.params, self.n_quantized = quantize_params(self.params)
+            if self.n_quantized:
+                self.weight_dtype = "int8"
+                if self.speculate_k:
+                    self.draft_params, _ = quantize_params(self.draft_params)
+            else:
+                self.quant_fallbacks.append(
+                    "weight_dtype=int8: no quantizable weight leaves in "
+                    "this architecture; serving fp weights")
 
         # the cache argument is dead after each call (self.cache is
         # rebound to the result), so donate it — on GPU/TPU the update
@@ -438,11 +489,14 @@ class ModelRunner:
 
     def cache_stats(self) -> Dict[str, Any]:
         """Cache mode + occupancy (paged) for benchmarks/metrics."""
+        quant = {"weight_dtype": self.weight_dtype or "float32",
+                 "quantized_weight_leaves": self.n_quantized,
+                 "quant_fallbacks": list(self.quant_fallbacks)}
         if not self.paged:
-            return {"mode": "contiguous"}
+            return {"mode": "contiguous", **quant}
         stats = dict(self.kv.utilization())
         stats.update(mode="paged", block_size=self.kv.block_size,
-                     pool_bytes=self.kv.pool_bytes())
+                     pool_bytes=self.kv.pool_bytes(), **quant)
         return stats
 
     # -- jitted programs -------------------------------------------------
@@ -461,10 +515,11 @@ class ModelRunner:
 
     def _insert_impl(self, dst, src, slots, table_rows):
         if self.paged:
-            out = paged_insert_rows(unwrap_paged(dst), src, self._axes,
-                                    self._seq, self._pageable, slots,
-                                    table_rows, self.kv.block_size)
-            return wrap_paged(out, self._pageable)
+            # dst stays wrapped: paged_insert_rows scatters payload AND
+            # scale pools of quantized leaves (src rows quantized inline)
+            return paged_insert_rows(dst, src, self._axes, self._seq,
+                                     self._pageable, slots, table_rows,
+                                     self.kv.block_size)
         return insert_rows(dst, src, self._axes, slots)
 
     def _decode_impl(self, params, cache, toks, pos, active, table, seeds,
@@ -515,16 +570,24 @@ class ModelRunner:
         for every pageable leaf.  Gathers happen before any scatter, so a
         block shared n ways can fan out to n copies in one call; padded
         (0, 0) pairs are trash-block self-copies (no-ops)."""
+        def move(pool, bax):
+            moved = jnp.moveaxis(pool, bax, 0)
+            moved = moved.at[dst].set(moved[src])
+            return jnp.moveaxis(moved, 0, bax)
+
         def cp(leaf, bax, pg):
             if not pg:
                 return leaf
-            moved = jnp.moveaxis(leaf, bax, 0)
-            moved = moved.at[dst].set(moved[src])
-            return jnp.moveaxis(moved, 0, bax)
-        inner = unwrap_paged(cache)
-        out = jax.tree_util.tree_map(cp, inner, self._axes, self._pageable,
-                                     is_leaf=lambda l: l is None)
-        return wrap_paged(out, self._pageable)
+            if is_paged(leaf):
+                # quantized pools: the scale rows fork with the payload,
+                # or a CoW copy would dequantize with the wrong scales
+                scale = None if leaf.scale is None else move(leaf.scale,
+                                                             bax)
+                return PagedLeaf(move(leaf.pool, bax), scale)
+            return move(leaf, bax)
+        return jax.tree_util.tree_map(
+            cp, cache, self._axes, self._pageable,
+            is_leaf=lambda l: l is None or is_paged(l))
 
     def _draft_fork_impl(self, cache, srcs, dsts):
         """Clone dense per-slot drafter rows: row[dsts[i]] = row[srcs[i]]
@@ -779,7 +842,9 @@ class Engine:
                  min_bucket: int = 16, paged: bool = True,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefill_chunk: int = 0, speculate_k: int = 0,
-                 draft_tracks: int = 0, prefix_cache: bool = True):
+                 draft_tracks: int = 0, prefix_cache: bool = True,
+                 kv_dtype: Optional[str] = None,
+                 weight_dtype: Optional[str] = None):
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
@@ -791,7 +856,9 @@ class Engine:
                                   prefill_chunk=prefill_chunk,
                                   speculate_k=speculate_k,
                                   draft_tracks=draft_tracks,
-                                  prefix_cache=prefix_cache)
+                                  prefix_cache=prefix_cache,
+                                  kv_dtype=kv_dtype,
+                                  weight_dtype=weight_dtype)
         self.scheduler = Scheduler(max_slots, self.runner.bucket_for,
                                    max_waiting_prefill_tokens,
                                    charge_fn=self.runner.admission_charge)
@@ -952,6 +1019,13 @@ class Engine:
                 # advances the chunk cursor past the matched span
                 for slot, req in group:
                     req.prefilled = req.cached_prefix
+                continue
+            if self.runner.kv_dtype == "int8":
+                # int8 KV: cold prompts run through the chunk program too
+                # (matched = 0), so cold and warm first tokens both come
+                # from attention over the quantized pool bytes — a prefix
+                # hit is bitwise-identical to a cold miss
+                warm_rows += group
                 continue
             cold = [(s, r) for s, r in group if not r.cached_prefix]
             warm_rows += [(s, r) for s, r in group if r.cached_prefix]

@@ -1,0 +1,17 @@
+"""Shared test fixtures.
+
+The full suite compiles many hundreds of XLA programs in one process;
+each live executable holds mmap'd code regions, and the process walks
+into ``vm.max_map_count`` (default 65530) — past it, the next LLVM
+compile segfaults.  Dropping the jit caches between test modules
+releases the maps; modules are self-contained, so the only cost is a
+recompile at each module boundary.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    jax.clear_caches()

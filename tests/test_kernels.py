@@ -5,8 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.common.quant import quantize_rows
 from repro.kernels import ops
 from repro.kernels import ref
+
+
+def _dq(payload, scale):
+    return payload.astype(jnp.float32) * scale
 
 
 def _rand(key, shape, dtype):
@@ -91,6 +96,107 @@ def test_paged_decode_attention_sweep(B, KH, G, hd, bs, nmax, dtype):
                                     max_len=ml)
     np.testing.assert_allclose(np.asarray(o2, np.float32),
                                np.asarray(r, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,S,KH,G,hd", [(2, 256, 2, 2, 32),
+                                         (1, 512, 1, 4, 64)])
+def test_decode_attention_int8_sweep(B, S, KH, G, hd):
+    """int8 K/V with per-token-per-head scales, dequant fused into the
+    online-softmax loop: must match the fp oracle run on the explicitly
+    dequantized cache (identical math, fp32 accumulation both sides)."""
+    H = KH * G
+    q = _rand(0, (B, H, hd), jnp.float32)
+    k = _rand(1, (B, S, KH, hd), jnp.float32)
+    v = _rand(2, (B, S, KH, hd), jnp.float32)
+    kq, ks = quantize_rows(k)
+    vq, vs = quantize_rows(v)
+    lengths = jnp.asarray([S // 2 + 7 * i % (S // 2) + 1
+                           for i in range(B)], jnp.int32)
+    o = ops.decode_attention(q, kq, vq, lengths, block_s=64,
+                             k_scale=ks, v_scale=vs)
+    r = ref.decode_attention_ref(q, _dq(kq, ks), _dq(vq, vs), lengths)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,KH,G,hd,bs,nmax", [(2, 2, 2, 32, 16, 4),
+                                               (1, 1, 4, 64, 8, 8)])
+def test_paged_decode_attention_int8_sweep(B, KH, G, hd, bs, nmax):
+    """int8 block pools + scale pools riding the same scalar-prefetched
+    block table: matches the oracle on the dequantized pool, with and
+    without the max_len sweep bound."""
+    H = KH * G
+    N = B * nmax + 1
+    q = _rand(0, (B, H, hd), jnp.float32)
+    k_pool = _rand(1, (N, bs, KH, hd), jnp.float32)
+    v_pool = _rand(2, (N, bs, KH, hd), jnp.float32)
+    kq, ks = quantize_rows(k_pool)
+    vq, vs = quantize_rows(v_pool)
+    rng = np.random.default_rng(7)
+    perm = rng.permutation(N - 1)[:B * nmax].reshape(B, nmax) + 1
+    table = jnp.asarray(perm, jnp.int32)
+    lengths = jnp.asarray(
+        [1 + (11 * i + 5) % (nmax * bs) for i in range(B)], jnp.int32)
+    o = ops.paged_decode_attention(q, kq, vq, table, lengths,
+                                   k_scale=ks, v_scale=vs)
+    r = ref.paged_decode_attention_ref(q, _dq(kq, ks), _dq(vq, vs),
+                                       table, lengths)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=2e-5, atol=2e-5)
+    o2 = ops.paged_decode_attention(q, kq, vq, table, lengths,
+                                    k_scale=ks, v_scale=vs,
+                                    max_len=int(lengths.max()))
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(r),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("quantized", [False, True])
+def test_paged_matches_dense_long_nonaligned(dtype, quantized):
+    """Paged vs dense decode attention on longer sequences with lengths
+    that do NOT land on block boundaries, at bf16 and int8: both kernels
+    read the same bytes through different address paths, so they must
+    agree to fp32-accumulation tolerance."""
+    B, S, KH, G, hd, bs = 2, 1024, 2, 2, 64, 16
+    q = _rand(0, (B, KH * G, hd), dtype)
+    k = _rand(1, (B, S, KH, hd), dtype)
+    v = _rand(2, (B, S, KH, hd), dtype)
+    lengths = jnp.asarray([1000, 513], jnp.int32)   # mid-block boundaries
+    kw = {}
+    if quantized:
+        kq, ks = quantize_rows(k.astype(jnp.float32))
+        vq, vs = quantize_rows(v.astype(jnp.float32))
+        k, v = kq, vq
+        kw = {"k_scale": ks, "v_scale": vs}
+        pk_s = ks.reshape(B * S // bs, bs, KH, 1)
+        pv_s = vs.reshape(B * S // bs, bs, KH, 1)
+    pools_k = k.reshape(B * S // bs, bs, KH, hd)
+    pools_v = v.reshape(B * S // bs, bs, KH, hd)
+    table = jnp.arange(B * S // bs, dtype=jnp.int32).reshape(B, S // bs)
+    pkw = ({"k_scale": pk_s, "v_scale": pv_s} if quantized else {})
+    o_paged = ops.paged_decode_attention(q, pools_k, pools_v, table,
+                                         lengths, **pkw)
+    o_dense = ops.decode_attention(q, k, v, lengths, block_s=64, **kw)
+    tol = 2e-5 if quantized else _TOL[dtype]
+    np.testing.assert_allclose(np.asarray(o_paged, np.float32),
+                               np.asarray(o_dense, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_int8_matmul_vs_dequant_oracle():
+    """Fused int8-weight matmul: int8 payload x fp activations with the
+    per-column rescale applied to the fp32 accumulator must equal the
+    explicit dequantize-then-matmul oracle."""
+    M, K, N = 48, 96, 160
+    x = _rand(0, (M, K), jnp.float32)
+    w = _rand(1, (K, N), jnp.float32)
+    from repro.common.quant import quantize
+    qt = quantize(w, axes=-2)              # per-output-column scales
+    scale = qt.scale.reshape(1, N)
+    o = ops.int8_matmul(x, qt.payload, scale)
+    r = x @ (qt.payload.astype(jnp.float32) * qt.scale)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_paged_matches_contiguous_identity_table():

@@ -406,3 +406,111 @@ def test_pt_verify_step_one_allreduce_per_track_block():
     """))
     assert res["per_body"].count(1) == 1 and max(res["per_body"]) == 1, res
     assert res["group_sizes"] == [res["n_tracks"]], res
+
+
+@slow
+def test_pt_quantized_paged_decode_one_allreduce_per_track_block():
+    """Quantization must not change the sync structure either: int8
+    weights (payload + scale sharded like the fp leaf) and an int8 KV
+    pool (dequant is an elementwise multiply against the gathered scale
+    pool, local to every track) still compile to exactly ONE cross-track
+    all-reduce per track-block scan iteration."""
+    res = _run(textwrap.dedent("""
+        import json, re
+        import jax, jax.numpy as jnp
+        from repro.common.paged import wrap_paged
+        from repro.common.quant import quantize_params
+        from repro.configs import pt_paper
+        from repro.launch import steps as S
+        from repro.runtime import sharding as sh
+        from repro.serving.cache import PagedKVCache
+
+        cfg = pt_paper.reduced_pt(2).replace(remat=False)  # 8 layers, D=2
+        n_tracks = cfg.pt.n_tracks
+        mesh = jax.make_mesh((2, n_tracks), ('data', 'track'))
+        par = S.build_parallelism(cfg, 'decode', mesh)
+        fns = S.model_fns(cfg)
+        ps = jax.eval_shape(lambda: quantize_params(
+            fns['init'](jax.random.PRNGKey(0), cfg))[0])
+        psh = sh.param_shardings(ps, cfg, par)
+        B, SL = 8, 32
+        kv = PagedKVCache(fns['init_cache'], cfg, max_slots=B,
+                          max_seq_len=SL, block_size=8, kv_dtype='int8')
+        for s in range(B):
+            kv.allocate(s, 16)
+        cache = jax.eval_shape(
+            lambda: wrap_paged(kv.data, kv.pageable, kv.scales))
+        tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+        tbl = jax.ShapeDtypeStruct(kv.table_np.shape, jnp.int32)
+
+        def step(p, c, t, q, tb):
+            return fns['decode'](p, c, t, q, cfg, par, block_table=tb)
+
+        txt = jax.jit(step, in_shardings=(psh, None, None, None, None)) \\
+            .lower(ps, cache, tok, pos, tbl).compile().as_text()
+
+        comps, cur = {}, None
+        for line in txt.splitlines():
+            if line and not line[0].isspace() and '{' in line:
+                m = re.match(r'(?:ENTRY\\s+)?%?([\\w\\.\\-]+)', line.strip())
+                cur = m.group(1) if m else None
+                comps[cur] = []
+            elif cur is not None:
+                comps[cur].append(line)
+        bodies = set(re.findall(r'body=%?([\\w\\.\\-]+)', txt))
+        ar = re.compile(r'=\\s*\\S+\\s+all-reduce(?:-start)?\\(')
+        per_body = {b: sum(1 for l in comps.get(b, ()) if ar.search(l))
+                    for b in bodies}
+        sizes = []
+        for b in bodies:
+            for l in comps.get(b, ()):
+                if ar.search(l):
+                    g = re.search(r'replica_groups=\\{\\{([\\d,]+)\\}', l)
+                    if g:
+                        sizes.append(len(g.group(1).split(',')))
+                    g = re.search(r'replica_groups=\\[\\d+,(\\d+)\\]<=', l)
+                    if g:
+                        sizes.append(int(g.group(1)))
+        print(json.dumps({'per_body': sorted(per_body.values()),
+                          'group_sizes': sizes,
+                          'n_tracks': n_tracks}))
+    """))
+    assert res["per_body"].count(1) == 1 and max(res["per_body"]) == 1, res
+    assert res["group_sizes"] == [res["n_tracks"]], res
+
+
+@slow
+def test_pt_quantized_draft_step_zero_cross_track_allreduces():
+    """Drafting stays communication-free with int8 weights: the draft
+    params are sliced from the full tracks FIRST and quantized after
+    (payload and scale slice together would de-align otherwise), and the
+    compiled draft step still carries ZERO all-reduces."""
+    res = _run(textwrap.dedent("""
+        import json, re
+        import jax, jax.numpy as jnp
+        from repro.common.quant import quantize_params
+        from repro.configs import pt_paper
+        from repro.core import track as pt_lib
+        from repro.launch import steps as S
+
+        cfg = pt_paper.reduced_pt(2).replace(remat=False)  # 8 layers, D=2
+        n_tracks = cfg.pt.n_tracks
+        mesh = jax.make_mesh((2, n_tracks), ('data', 'track'))
+        par = S.build_parallelism(cfg, 'decode', mesh)
+        draft, draft_cfg = S.make_draft_step(cfg, par, draft_tracks=2)
+
+        ps = jax.eval_shape(lambda: quantize_params(pt_lib.pt_draft_params(
+            pt_lib.init_pt(jax.random.PRNGKey(0), cfg), cfg, 2))[0])
+        B, SL = 8, 32
+        cache = jax.eval_shape(
+            lambda: pt_lib.pt_init_cache(draft_cfg, B, SL))
+        tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+        txt = jax.jit(draft).lower(ps, cache, tok, pos).compile().as_text()
+        ar = re.compile(r'=\\s*\\S+\\s+all-reduce(?:-start)?\\(')
+        n_ar = sum(1 for l in txt.splitlines() if ar.search(l))
+        print(json.dumps({'all_reduces': n_ar}))
+    """))
+    assert res["all_reduces"] == 0, res

@@ -106,6 +106,43 @@ def test_warm_prefix_hit_matches_cold_bitwise():
         assert u["used_blocks"] == 0 and u["cached_free_blocks"] > 0
 
 
+def test_quantized_warm_prefix_hit_matches_cold_bitwise():
+    """warm == cold parity must survive int8 KV (and int8 weights): the
+    engine funnels ALL int8-KV prefill through the chunk program, so the
+    cold request's tokens come from attention over the same quantized
+    pool bytes a warm hit reuses — the outputs stay BIT-IDENTICAL."""
+    for extra in ({"kv_dtype": "int8"},
+                  {"kv_dtype": "int8", "weight_dtype": "int8"},
+                  {"kv_dtype": "int8", "prefill_chunk": 8}):
+        cfg = reduced_config("tinyllama-1.1b")
+        fns = steps_lib.model_fns(cfg)
+        params = fns["init"](jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(17)
+        prefix = rng.integers(1, cfg.vocab_size, 16).tolist()
+        tail_a = rng.integers(1, cfg.vocab_size, 5).tolist()
+        tail_b = rng.integers(1, cfg.vocab_size, 7).tolist()
+
+        warm_eng = Engine(cfg, params, max_slots=2, max_seq_len=48,
+                          paged=True, block_size=8, **extra)
+        assert warm_eng.runner.kv_dtype == "int8"
+        assert warm_eng.runner.quant_fallbacks == []
+        r_cold = warm_eng.submit(prefix + tail_a, max_new_tokens=6, seed=11)
+        warm_eng.run()
+        assert r_cold.cached_prefix == 0
+        r_warm = warm_eng.submit(prefix + tail_b, max_new_tokens=6, seed=13)
+        warm_eng.run()
+        assert r_warm.cached_prefix == 16, extra
+
+        cold_eng = Engine(cfg, params, max_slots=2, max_seq_len=48,
+                          paged=True, block_size=8, prefix_cache=False,
+                          **extra)
+        ref = cold_eng.submit(prefix + tail_b, max_new_tokens=6, seed=13)
+        cold_eng.run()
+        assert r_warm.output == ref.output, extra
+        warm_eng.runner.kv.check_invariants()
+        assert warm_eng.runner.kv.utilization()["prefix_hit_tokens"] == 16
+
+
 def test_duplicate_prompt_match_leaves_one_tail_token():
     """An exact duplicate of a cached prompt still recomputes at least
     one position: match_prefix clamps to (len-1)//bs full blocks so the
@@ -240,13 +277,23 @@ def test_fork_rejects_bad_states():
 # pool-level: CoW parity against a dense mirror, invariants throughout
 # ---------------------------------------------------------------------------
 
-def test_paged_random_fork_cow_decode_bitwise_matches_dense():
+@pytest.mark.parametrize("quantized", [False, True])
+def test_paged_random_fork_cow_decode_bitwise_matches_dense(quantized):
     """Extends the paged-vs-dense parity property to the new ops: random
     allocate(tokens=...) / append / commit / fork / free interleavings,
     with every write CoW-gated through ensure_writable and mirrored into
     an independent dense per-slot cache.  A decode step must match the
     dense layout BIT-FOR-BIT and the pool invariants must hold after
-    every single operation."""
+    every single operation.
+
+    The quantized arm runs the same schedule on an int8 pool: the dense
+    mirror stores the DEQUANTIZED values (rowwise int8 round-trip is
+    idempotent, so the pool re-quantizing the mirror reproduces the same
+    payload/scale bytes), scale pools fork/CoW alongside payloads, and
+    the decode must still match the mirror."""
+    from repro.common.paged import wrap_paged
+    from repro.common.quant import dequantize_rows, quantize_rows
+
     cfg = _gqa_cfg()
     KH, hd = cfg.n_kv_heads, cfg.head_dim
     spec = cfg.spec("x")
@@ -264,10 +311,27 @@ def test_paged_random_fork_cow_decode_bitwise_matches_dense():
         src = jnp.asarray([p[0] for p in pairs])
         dst = jnp.asarray([p[1] for p in pairs])
         kv.data = tuple(l.at[dst].set(l[src]) for l in kv.data)
+        if kv.scales is not None:        # scales ride every block copy
+            kv.scales = tuple(l.at[dst].set(l[src]) for l in kv.scales)
+
+    def pool_rows(kv, leaf_i, block):
+        """One block's fp values as the dense mirror sees them."""
+        rows = kv.data[leaf_i][block]
+        if kv.scales is not None:
+            return np.asarray(rows.astype(jnp.float32)
+                              * kv.scales[leaf_i][block])
+        return np.asarray(rows)
+
+    def roundtrip(x):
+        """What lands in the pool for written values x."""
+        if not quantized:
+            return x
+        return np.asarray(dequantize_rows(*quantize_rows(jnp.asarray(x))))
 
     for trial in range(3):
         kv = PagedKVCache(init_kv, cfg, max_slots=B, max_seq_len=S,
-                          block_size=bs, num_blocks=3 * B)
+                          block_size=bs, num_blocks=3 * B,
+                          kv_dtype="int8" if quantized else None)
         dense = init_kv(cfg, B, S)
         toks = [None] * B                 # per-slot token ids (mirror)
         lengths = np.zeros((B,), np.int64)
@@ -278,16 +342,32 @@ def test_paged_random_fork_cow_decode_bitwise_matches_dense():
             nonlocal dense
             pairs = kv.ensure_writable(slot, lo, n)
             apply_cow(kv, pairs)
-            new_k = rng.normal(size=(n - lo, KH, hd)).astype(np.float32)
-            new_v = rng.normal(size=(n - lo, KH, hd)).astype(np.float32)
+            new_k = roundtrip(rng.normal(size=(n - lo, KH, hd))
+                              .astype(np.float32))
+            new_v = roundtrip(rng.normal(size=(n - lo, KH, hd))
+                              .astype(np.float32))
             dense = (dense[0].at[slot, lo:n].set(new_k),
                      dense[1].at[slot, lo:n].set(new_v))
             full_k = np.asarray(dense[0][slot])[None, :n]
             full_v = np.asarray(dense[1][slot])[None, :n]
-            kv.data = paged_insert_rows(
-                kv.data, (jnp.asarray(full_k), jnp.asarray(full_v)),
+            out = paged_insert_rows(
+                wrap_paged(kv.data, kv.pageable, kv.scales),
+                (jnp.asarray(full_k), jnp.asarray(full_v)),
                 kv.axes, kv.seq, kv.pageable, [slot],
                 kv.table_rows([slot]), bs)
+            kv.data = tuple(l.pool for l in out)
+            if kv.scales is not None:
+                kv.scales = tuple(l.scale for l in out)
+                # re-mirror the whole prefix with EXACTLY what the pool
+                # dequantizes to (requantization can move a scale by an
+                # ulp, so read back instead of predicting)
+                blocks = kv._blocks[slot][:kv.blocks_for(n)]
+                for i in range(2):
+                    rows = np.concatenate(
+                        [pool_rows(kv, i, b) for b in blocks])[:n]
+                    dense = tuple(
+                        d.at[slot, :n].set(rows) if j == i else d
+                        for j, d in enumerate(dense))
 
         for op in range(30):
             slot = int(rng.integers(B))
@@ -325,8 +405,8 @@ def test_paged_random_fork_cow_decode_bitwise_matches_dense():
                     if matched:
                         rows_k, rows_v = [], []
                         for b in kv._blocks[slot][:matched // bs]:
-                            rows_k.append(np.asarray(kv.data[0][b]))
-                            rows_v.append(np.asarray(kv.data[1][b]))
+                            rows_k.append(pool_rows(kv, 0, b))
+                            rows_v.append(pool_rows(kv, 1, b))
                         dense = (dense[0].at[slot, :matched].set(
                                     np.concatenate(rows_k)),
                                  dense[1].at[slot, :matched].set(
@@ -353,18 +433,45 @@ def test_paged_random_fork_cow_decode_bitwise_matches_dense():
                 apply_cow(kv, kv.ensure_writable(
                     slot, int(lengths[slot]) - 1, int(lengths[slot])))
         kv.check_invariants()
+        live = lengths > 0
+        assert live.any()
+        # bitwise bookkeeping check: every live slot's pool rows, walked
+        # through the block table (and dequantized for int8), must equal
+        # the dense mirror — this is where a missed scale-pool CoW or a
+        # mis-forked block shows up
+        for slot in range(B):
+            n = int(lengths[slot])
+            if not n:
+                continue
+            blocks = kv._blocks[slot][:kv.blocks_for(n)]
+            for i in range(2):
+                rows = np.concatenate(
+                    [pool_rows(kv, i, b) for b in blocks])[:n]
+                np.testing.assert_array_equal(
+                    rows, np.asarray(dense[i][slot, :n]))
         pos = jnp.asarray(np.maximum(lengths, 1) - 1, jnp.int32)
         x = jnp.asarray(rng.normal(size=(B, 1, cfg.d_model)), jnp.float32)
         out_d, _ = attention_decode(params, x, dense, spec=spec, cfg=cfg,
                                     pos=pos)
-        paged_cache = tuple(PagedLeaf(l) for l in kv.data)
+        if kv.scales is not None:
+            paged_cache = tuple(PagedLeaf(l, s)
+                                for l, s in zip(kv.data, kv.scales))
+        else:
+            paged_cache = tuple(PagedLeaf(l) for l in kv.data)
         out_p, _ = attention_decode(params, x, paged_cache, spec=spec,
                                     cfg=cfg, pos=pos,
                                     block_table=kv.table())
-        live = lengths > 0
-        assert live.any()
-        np.testing.assert_array_equal(np.asarray(out_d)[live],
-                                      np.asarray(out_p)[live])
+        if kv.scales is not None:
+            # the decode itself quantizes the freshly projected token on
+            # the paged side while the dense oracle keeps it fp, so this
+            # leg is tolerance-bounded (bookkeeping is checked bitwise
+            # above; kernel dequant numerics in test_kernels)
+            np.testing.assert_allclose(np.asarray(out_d)[live],
+                                       np.asarray(out_p)[live],
+                                       rtol=2e-2, atol=2e-2)
+        else:
+            np.testing.assert_array_equal(np.asarray(out_d)[live],
+                                          np.asarray(out_p)[live])
 
 
 def test_match_prefix_never_fabricates():

@@ -1,0 +1,240 @@
+"""Quantized-serving tests: rowwise int8 primitives, QuantTensor pytree
+behavior, weight quantization at engine load, layout fallbacks, byte
+accounting, and fp-vs-int8 greedy decode agreement on a toy model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.quant import (QuantTensor, dequantize, dequantize_rows,
+                                is_quantized, matmul, quantize,
+                                quantize_params, quantize_rows)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bound():
+    """Per-element dequant error is at most half a quantization step
+    (scale/2), and payloads stay inside the symmetric int8 range."""
+    x = _rand(0, (32, 64)) * 7.0
+    qt = quantize(x, axes=-1)
+    assert qt.payload.dtype == jnp.int8
+    assert qt.scale.shape == (32, 1)
+    assert np.all(np.abs(np.asarray(qt.payload)) <= 127)
+    err = np.abs(np.asarray(dequantize(qt) - x))
+    bound = np.asarray(qt.scale) / 2 + 1e-7
+    assert np.all(err <= bound)
+
+
+def test_quantize_rows_matches_quantize():
+    x = _rand(1, (4, 10, 2, 16))
+    payload, scale = quantize_rows(x)
+    qt = quantize(x, axes=-1)
+    np.testing.assert_array_equal(np.asarray(payload),
+                                  np.asarray(qt.payload))
+    np.testing.assert_array_equal(np.asarray(scale), np.asarray(qt.scale))
+    np.testing.assert_allclose(np.asarray(dequantize_rows(payload, scale)),
+                               np.asarray(dequantize(qt)))
+
+
+def test_quantize_zero_rows_stable():
+    """All-zero rows must not divide by zero and round-trip to zeros."""
+    x = jnp.zeros((4, 8), jnp.float32)
+    qt = quantize(x, axes=-1)
+    out = np.asarray(dequantize(qt))
+    assert np.all(np.isfinite(out)) and np.all(out == 0.0)
+
+
+def test_quantize_multi_axis():
+    """Weight-style reduction over two axes (attention wo [H, hd, d])."""
+    w = _rand(2, (4, 16, 32))
+    qt = quantize(w, axes=(-3, -2))
+    assert qt.scale.shape == (1, 1, 32)
+    rel = np.abs(np.asarray(dequantize(qt) - w)) / (
+        np.abs(np.asarray(w)).max(axis=(0, 1), keepdims=True) + 1e-9)
+    assert rel.max() < 1 / 127
+
+
+# ---------------------------------------------------------------------------
+# QuantTensor as a pytree
+# ---------------------------------------------------------------------------
+
+def test_quant_tensor_tree_ops_move_scale_in_lockstep():
+    qt = quantize(_rand(3, (6, 8, 10)), axes=-2)
+    sliced = jax.tree_util.tree_map(lambda l: l[:2], qt)
+    assert is_quantized(sliced)
+    assert sliced.payload.shape == (2, 8, 10)
+    assert sliced.scale.shape == (2, 1, 10)
+    # stacking/vmapping the pytree keeps both children aligned too
+    stacked = jax.tree_util.tree_map(lambda l: jnp.stack([l, l]), qt)
+    assert stacked.payload.shape[0] == stacked.scale.shape[0] == 2
+
+
+def test_quant_tensor_key_paths():
+    """Path-based sharding rules see '<weight>/payload' / '<weight>/scale'
+    leaves (GetAttrKey children)."""
+    tree = {"wq": quantize(_rand(4, (8, 4, 2)), axes=(-3,))}
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(tree)[0]]
+    assert any(p.endswith(".payload") for p in paths)
+    assert any(p.endswith(".scale") for p in paths)
+
+
+# ---------------------------------------------------------------------------
+# weight quantization
+# ---------------------------------------------------------------------------
+
+def test_quantize_params_selects_rule_leaves_only():
+    params = {
+        "blocks": {
+            "mixer": {"wq": _rand(0, (16, 4, 8)), "wo": _rand(1, (4, 8, 16))},
+            "mlp": {"wi_gate": _rand(2, (16, 32)), "wo": _rand(3, (32, 16))},
+            "ln1": {"scale": jnp.ones((16,))},
+        },
+        "embed": _rand(4, (64, 16)),
+        "head": _rand(5, (16, 64)),
+    }
+    q, n = quantize_params(params)
+    assert n == 5
+    assert is_quantized(q["blocks"]["mixer"]["wq"])
+    assert is_quantized(q["blocks"]["mixer"]["wo"])
+    assert is_quantized(q["blocks"]["mlp"]["wi_gate"])
+    assert is_quantized(q["blocks"]["mlp"]["wo"])
+    assert is_quantized(q["head"])
+    # norms and embeddings stay fp
+    assert not is_quantized(q["blocks"]["ln1"]["scale"])
+    assert not is_quantized(q["embed"])
+    # contraction-axis choice: wq reduces d_model, so per-(head, unit)
+    # scales survive on the output axes
+    assert q["blocks"]["mixer"]["wq"].scale.shape == (1, 4, 8)
+    assert q["blocks"]["mixer"]["wo"].scale.shape == (1, 1, 16)
+
+
+def test_matmul_dispatch_paths_agree():
+    x = _rand(0, (8, 32))
+    w = _rand(1, (32, 48))
+    qt = quantize(w, axes=-2)
+    plain = matmul(x, w)
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(x @ w),
+                               rtol=1e-6, atol=1e-6)
+    jnp_path = matmul(x, qt, use_kernel=False)
+    kern_path = matmul(x, qt, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(jnp_path), np.asarray(kern_path),
+                               rtol=1e-5, atol=1e-5)
+    # both track the fp matmul within quantization noise
+    np.testing.assert_allclose(np.asarray(jnp_path), np.asarray(x @ w),
+                               rtol=0.1, atol=0.1)
+
+
+# ---------------------------------------------------------------------------
+# gradient-compression reuse of the same primitive
+# ---------------------------------------------------------------------------
+
+def test_int8_compress_error_feedback():
+    from repro.optim.compress import int8_compress, zero_residual
+    g = {"w": _rand(0, (16, 32)) * 3.0}
+    r = zero_residual(g)
+    sent, r2 = int8_compress(g, r)
+    # sent + residual reconstructs the gradient exactly (error feedback)
+    np.testing.assert_allclose(
+        np.asarray(sent["w"] + r2["w"]), np.asarray(g["w"]),
+        rtol=1e-6, atol=1e-6)
+    assert r2["w"].dtype == jnp.float32
+    # the residual is small: one quantization step per element
+    qt = quantize(g["w"], axes=-1)
+    assert np.abs(np.asarray(r2["w"])).max() <= float(
+        np.asarray(qt.scale).max()) / 2 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+def _toy_engine(cfg, params, **kw):
+    from repro.serving.engine import Engine
+    return Engine(cfg, params, max_slots=4, max_seq_len=96, **kw)
+
+
+def test_engine_quantized_greedy_bounded_disagreement():
+    """int8 weights + int8 KV greedy decode stays close to fp greedy on
+    a toy model: identical prompts, bounded token-level disagreement."""
+    from repro.configs import reduced_config
+    from repro.launch import steps as steps_lib
+    from repro.serving.sampler import SampleParams
+
+    cfg = reduced_config("tinyllama-1.1b")
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, 20).tolist()
+               for _ in range(3)]
+    sp = SampleParams(temperature=0.0)
+
+    out_fp = _toy_engine(cfg, params).generate(prompts, 8, params=sp)
+    eng_q = _toy_engine(cfg, params, kv_dtype="int8", weight_dtype="int8")
+    out_q = eng_q.generate(prompts, 8, params=sp)
+
+    assert eng_q.runner.kv_dtype == "int8"
+    assert eng_q.runner.weight_dtype == "int8"
+    assert eng_q.runner.quant_fallbacks == []
+    agree = sum(a == b for o1, o2 in zip(out_fp, out_q)
+                for a, b in zip(o1, o2))
+    total = sum(len(o) for o in out_fp)
+    assert total == 3 * 8
+    # bounded disagreement: greedy paths may diverge after a near-tie,
+    # but wholesale disagreement means broken dequant, not rounding
+    assert agree / total >= 0.5, (out_fp, out_q)
+
+
+def test_engine_int8_kv_pool_bytes_shrink():
+    from repro.configs import reduced_config
+    from repro.launch import steps as steps_lib
+
+    cfg = reduced_config("tinyllama-1.1b")
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    fp = _toy_engine(cfg, params).runner
+    q = _toy_engine(cfg, params, kv_dtype="int8").runner
+    assert q.kv.num_blocks == fp.kv.num_blocks
+    # int8 payload + fp32 per-token scale: ~(hd+4)/(4*hd) of fp32 bytes
+    ratio = q.kv.bytes_per_block() / fp.kv.bytes_per_block()
+    assert ratio < 0.3, ratio
+    stats = q.cache_stats()
+    assert stats["kv_dtype"] == "int8"
+    assert stats["used_bytes"] == 0
+    assert stats["bytes_per_block"] * q.kv.num_blocks == q.kv.pool_bytes()
+
+
+def test_engine_kv_dtype_fallback_reasons():
+    """Unsupported layouts serve fp with a recorded reason instead of
+    crashing or silently quantizing something incorrect."""
+    from repro.configs import reduced_config
+    from repro.launch import steps as steps_lib
+
+    # recurrent mixer: not pageable -> int8 KV falls back
+    cfg = reduced_config("falcon-mamba-7b")
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    eng = _toy_engine(cfg, params, kv_dtype="int8", weight_dtype="int8")
+    assert eng.runner.kv_dtype is None
+    assert any("kv_dtype" in r for r in eng.runner.quant_fallbacks)
+    # ...but the MLP weights still quantize
+    assert eng.runner.weight_dtype == "int8"
+    assert eng.runner.n_quantized > 0
+
+    # contiguous mode: paged-only feature
+    cfg2 = reduced_config("tinyllama-1.1b")
+    fns2 = steps_lib.model_fns(cfg2)
+    params2 = fns2["init"](jax.random.PRNGKey(0), cfg2)
+    eng2 = _toy_engine(cfg2, params2, paged=False, kv_dtype="int8")
+    assert eng2.runner.kv_dtype is None
+    assert any("kv_dtype" in r for r in eng2.runner.quant_fallbacks)
+
+    with pytest.raises(ValueError):
+        _toy_engine(cfg2, params2, kv_dtype="int4")

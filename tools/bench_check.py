@@ -1,0 +1,118 @@
+"""CI regression guard over the serving benchmark JSON.
+
+Compares a freshly-produced ``BENCH_serving.json`` against the values
+committed at a git ref (default ``HEAD``, i.e. the state before the CI
+run overwrote the file) and fails when a key metric regresses by more
+than the threshold (default 25% — wide enough for shared-runner
+wall-clock noise, tight enough to catch a real perf cliff).
+
+Guarded metrics (only those present in BOTH documents are compared, so
+adding a new smoke never breaks the first CI run that records it):
+
+  paged.ttft_ms.p50                   lower is better
+  paged.tpot_ms.mean                  lower is better
+  paged.max_active                    higher is better
+  slots_gain_at_fixed_hbm             higher is better
+  quantized.slots_gain_at_fixed_hbm   higher is better
+  quantized.int8.tpot_mean_ms         lower is better
+  speculate.tpot_speedup              higher is better
+
+Usage:
+  python tools/bench_check.py BENCH_serving.json [--baseline-ref HEAD]
+      [--baseline FILE] [--threshold 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from typing import Any, Optional, Tuple
+
+# (dotted path, higher_is_better)
+METRICS: Tuple[Tuple[str, bool], ...] = (
+    ("paged.ttft_ms.p50", False),
+    ("paged.tpot_ms.mean", False),
+    ("paged.max_active", True),
+    ("slots_gain_at_fixed_hbm", True),
+    ("quantized.slots_gain_at_fixed_hbm", True),
+    ("quantized.int8.tpot_mean_ms", False),
+    ("speculate.tpot_speedup", True),
+)
+
+
+def _lookup(doc: Any, dotted: str) -> Optional[float]:
+    node = doc
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return float(node) if isinstance(node, (int, float)) else None
+
+
+def _baseline_doc(args) -> Optional[dict]:
+    if args.baseline:
+        try:
+            with open(args.baseline) as f:
+                doc = json.load(f)
+            return doc if isinstance(doc, dict) else None
+        except (OSError, json.JSONDecodeError):
+            return None
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"{args.baseline_ref}:{args.fresh}"],
+            capture_output=True, text=True, check=True).stdout
+        doc = json.loads(blob)
+        return doc if isinstance(doc, dict) else None
+    except (subprocess.CalledProcessError, json.JSONDecodeError,
+            FileNotFoundError):
+        return None                    # no committed baseline yet
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="freshly-produced benchmark JSON")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON file (overrides --baseline-ref)")
+    ap.add_argument("--baseline-ref", default="HEAD",
+                    help="git ref holding the committed baseline JSON")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional regression per metric")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_check: cannot read {args.fresh}: {e}")
+        return 1
+    base = _baseline_doc(args)
+    if base is None:
+        print(f"bench_check: no baseline at "
+              f"{args.baseline or args.baseline_ref}: skipping "
+              f"(first run records the baseline)")
+        return 0
+
+    failures = []
+    for dotted, higher_better in METRICS:
+        b, f = _lookup(base, dotted), _lookup(fresh, dotted)
+        if b is None or f is None or b == 0:
+            continue                   # metric absent on one side: skip
+        # regression = fractional move in the BAD direction
+        reg = (b - f) / abs(b) if higher_better else (f - b) / abs(b)
+        mark = "FAIL" if reg > args.threshold else "ok"
+        arrow = f"{b:.3f} -> {f:.3f}"
+        print(f"bench_check: {mark:4s} {dotted:40s} {arrow} "
+              f"({'+' if reg > 0 else ''}{100 * reg:.1f}% regression)")
+        if reg > args.threshold:
+            failures.append(dotted)
+    if failures:
+        print(f"bench_check: {len(failures)} metric(s) regressed more "
+              f"than {100 * args.threshold:.0f}%: {', '.join(failures)}")
+        return 1
+    print("bench_check: all guarded metrics within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
