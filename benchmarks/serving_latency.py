@@ -25,6 +25,11 @@ both appended to ``--json`` under ``prefix_cache`` / ``fork``.
 ``--quantized`` reruns the fixed-HBM smoke with int8 KV + int8 weights
 against fp at the SAME pool byte budget, recording the concurrent-slot
 gain and the mean-TPOT delta under ``quantized``.
+
+``--overload`` drives an oversubscribed pool with mixed priorities and
+a bounded queue through the robustness layer (preempt-and-recompute,
+overload shedding), recording completion / preemption / shed counts
+under ``overload``.
 """
 from __future__ import annotations
 
@@ -467,6 +472,72 @@ def bench_quantized(json_path: str | None = None) -> dict:
     return out
 
 
+def bench_overload(json_path: str | None = None) -> dict:
+    """Overload smoke: an oversubscribed block pool, a bounded queue and
+    mixed request priorities — the robustness layer's steady state.
+    High-priority requests preempt decoding low-priority ones (which
+    resume by recompute through the prefix cache), the bounded queue
+    sheds the overflow, and every request must land in exactly one
+    terminal state with the pool empty.  Preemption/resume/shed/reject
+    counts and the completion rate are recorded under ``overload``."""
+    import jax
+    import numpy as np
+    from repro.configs import reduced_config
+    from repro.launch import steps as steps_lib
+    from repro.serving.engine import Engine, EngineStallError, RequestState
+
+    cfg = reduced_config("tinyllama-1.1b")
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    S, bs = 96, 8
+    # each request reserves 24+12-1=35 tokens = 5 blocks; 11 usable
+    # blocks run ~2 concurrently for a 16-request, 3-priority workload
+    eng = Engine(cfg, params, max_slots=4, max_seq_len=S, block_size=bs,
+                 num_blocks=12, max_queue=10, watchdog_patience=50,
+                 max_preemptions=4)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(16):
+        reqs.append(eng.submit(
+            rng.integers(1, cfg.vocab_size, 24).tolist(), 12,
+            priority=i % 3))
+    try:
+        eng.run(max_steps=20_000)
+    except EngineStallError as e:
+        print(f"overload,STALL,{e.diagnostic}")
+    m = eng.metrics.summary()
+    states: dict = {}
+    for r in reqs:
+        states[r.state.value] = states.get(r.state.value, 0) + 1
+    eng.runner.kv.check_invariants()
+    out = {
+        "submitted": len(reqs),
+        "completed": states.get(RequestState.DONE.value, 0),
+        "states": states,
+        "all_terminal": all(r.finished for r in reqs),
+        "pool_empty": eng.runner.kv.utilization()["used_blocks"] == 0,
+        "preemptions": m["preemptions"],
+        "resumes": m["resumes"],
+        "shed": m["shed"],
+        "shed_rate": m["shed"] / len(reqs),
+        "rejected": m["rejected"],
+        "timed_out": m["timed_out"],
+        "watchdog_fires": m["watchdog_fires"],
+        "max_preempt_survived": max(r.preemptions for r in reqs),
+        "throughput_tok_s": m["throughput_tok_s"],
+        "num_blocks": 12,
+        "max_queue": 10,
+    }
+    print(f"overload,submitted {out['submitted']},completed "
+          f"{out['completed']},preemptions {out['preemptions']} "
+          f"(resumes {out['resumes']}),shed {out['shed']} "
+          f"({100 * out['shed_rate']:.0f}%),terminal "
+          f"{out['all_terminal']},pool_empty {out['pool_empty']}")
+    if json_path:
+        _merge_json(json_path, "overload", out)
+    return out
+
+
 def main(quick: bool = False) -> dict:
     print("# TTFT (ms), analytical roofline model, batch=1, 8 chips")
     t1 = ttft_table()
@@ -498,6 +569,9 @@ if __name__ == "__main__":
     ap.add_argument("--quantized", action="store_true",
                     help="toy smoke, int8 KV + int8 weights vs fp at a "
                     "fixed HBM byte budget")
+    ap.add_argument("--overload", action="store_true",
+                    help="toy smoke, oversubscribed pool + mixed "
+                    "priorities: preemption/resume/shed accounting")
     ap.add_argument("--n-forks", type=int, default=3,
                     help="children per fork for --fork")
     ap.add_argument("--speculate-k", type=int, default=4,
@@ -508,7 +582,7 @@ if __name__ == "__main__":
                     help="merge smoke results into this JSON file")
     args = ap.parse_args()
     if (args.paged or args.contiguous or args.speculate or args.prefix
-            or args.fork or args.quantized):
+            or args.fork or args.quantized or args.overload):
         if args.paged:
             bench_smoke(True, args.json)
         if args.contiguous:
@@ -521,6 +595,8 @@ if __name__ == "__main__":
             bench_fork(args.json, args.n_forks)
         if args.quantized:
             bench_quantized(args.json)
+        if args.overload:
+            bench_overload(args.json)
     else:
         if args.metric in ("ttft", "both"):
             ttft_table()

@@ -16,7 +16,8 @@ import numpy as np
 from repro.checkpoint import store as ckpt_lib
 from repro.configs import get_config, reduced_config
 from repro.launch import steps as steps_lib
-from repro.serving.engine import Engine
+from repro.serving.engine import Engine, EngineStallError, RequestState
+from repro.serving.faults import FaultPlan
 from repro.serving.sampler import SampleParams
 
 
@@ -66,6 +67,38 @@ def main() -> None:
                     help="prepend this many shared tokens to every "
                     "prompt (system-prompt workload; exercises the "
                     "prefix cache)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission queue: submissions past this "
+                    "many waiting requests are shed as REJECTED "
+                    "(default unbounded)")
+    ap.add_argument("--watchdog-patience", type=int, default=25,
+                    help="consecutive no-progress engine steps before "
+                    "the stall watchdog preempts or sheds the head")
+    ap.add_argument("--max-preemptions", type=int, default=8,
+                    help="evictions a request survives before it is "
+                    "REJECTED (termination guarantee under pressure)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request submit-to-done budget in seconds "
+                    "(exceeding it yields TIMED_OUT)")
+    ap.add_argument("--priority-mix", type=int, default=1,
+                    help="cycle request priorities 0..N-1 across the "
+                    "workload (N>1 exercises preempt-and-recompute)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the deterministic fault-injection "
+                    "schedule (chaos drills)")
+    ap.add_argument("--fault-alloc-p", type=float, default=0.0,
+                    help="per-call probability of an injected KV "
+                    "allocation failure")
+    ap.add_argument("--fault-transfer-p", type=float, default=0.0,
+                    help="per-call probability of an injected device-to-"
+                    "host transfer failure (the step retries)")
+    ap.add_argument("--fault-slow-p", type=float, default=0.0,
+                    help="per-step probability of an injected slow step")
+    ap.add_argument("--fault-slow-s", type=float, default=0.05,
+                    help="sleep per injected slow step (seconds)")
+    ap.add_argument("--fault-max", type=int, default=None,
+                    help="cap on total injected faults (a storm that "
+                    "clears; default unbounded)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -76,6 +109,15 @@ def main() -> None:
         params = state["params"]
         print(f"[serve] loaded params from {args.ckpt_dir}")
 
+    plan = None
+    if args.fault_alloc_p or args.fault_transfer_p or args.fault_slow_p:
+        plan = FaultPlan(seed=args.fault_seed, alloc_p=args.fault_alloc_p,
+                         transfer_p=args.fault_transfer_p,
+                         slow_p=args.fault_slow_p, slow_s=args.fault_slow_s,
+                         max_faults=args.fault_max)
+        print(f"[serve] fault injection armed: seed={plan.seed} "
+              f"alloc_p={plan.alloc_p} transfer_p={plan.transfer_p} "
+              f"slow_p={plan.slow_p} max={plan.max_faults}")
     max_seq = args.shared_prefix + args.input_len + args.output_len + 8
     eng = Engine(cfg, params, max_slots=args.slots, max_seq_len=max_seq,
                  max_waiting_prefill_tokens=args.prefill_budget,
@@ -86,7 +128,11 @@ def main() -> None:
                  draft_tracks=args.draft_tracks,
                  prefix_cache=not args.no_prefix_cache,
                  kv_dtype=args.kv_dtype,
-                 weight_dtype=args.weight_dtype)
+                 weight_dtype=args.weight_dtype,
+                 max_queue=args.max_queue,
+                 watchdog_patience=args.watchdog_patience,
+                 max_preemptions=args.max_preemptions,
+                 fault_plan=plan)
     if args.speculate_k and not eng.runner.speculate_k:
         print("[serve] --speculate-k ignored: needs a PT config with a "
               "paged cache (full attention, no MoE/recurrent layers)")
@@ -106,11 +152,19 @@ def main() -> None:
                           size=(args.shared_prefix,)).tolist()
 
     t0 = time.perf_counter()
-    for _ in range(args.requests):
+    reqs = []
+    for i in range(args.requests):
         prompt = shared + rng.integers(1, cfg.vocab_size,
                                        size=(args.input_len,)).tolist()
-        eng.submit(prompt, args.output_len, params=sp)
-    eng.run()
+        reqs.append(eng.submit(prompt, args.output_len, params=sp,
+                               priority=i % max(1, args.priority_mix),
+                               deadline_s=args.deadline_s))
+    try:
+        eng.run()
+    except EngineStallError as e:
+        print(f"[serve] STALL: {e}")
+        for k, v in e.diagnostic.items():
+            print(f"[serve]   {k} = {v}")
     wall = time.perf_counter() - t0
 
     m = eng.metrics.summary()
@@ -140,6 +194,24 @@ def main() -> None:
                   f"from cache ({100 * hit:.0f}%), "
                   f"{u['cached_free_blocks']} cached blocks retained, "
                   f"{u['cow_copies']} CoW copies")
+    by_state = {}
+    for r in reqs:
+        by_state[r.state.value] = by_state.get(r.state.value, 0) + 1
+    pressure = (m["preemptions"] or m["rejected"] or m["shed"]
+                or m["timed_out"] or m["watchdog_fires"]
+                or m["transfer_faults"])
+    if pressure or by_state.keys() != {RequestState.DONE.value}:
+        states = ", ".join(f"{k}={v}" for k, v in sorted(by_state.items()))
+        print(f"[serve] robustness: {states} | "
+              f"preemptions {m['preemptions']} (resumes {m['resumes']}), "
+              f"shed {m['shed']}, rejected {m['rejected']}, "
+              f"timed_out {m['timed_out']}, watchdog {m['watchdog_fires']}, "
+              f"transfer_faults {m['transfer_faults']}")
+    if plan is not None:
+        fs = plan.summary()
+        print(f"[serve] faults injected: {fs['injected']} "
+              f"(alloc {fs['alloc_faults']}, transfer "
+              f"{fs['transfer_faults']}, slow {fs['slow_steps']})")
 
 
 if __name__ == "__main__":

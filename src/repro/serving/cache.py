@@ -47,6 +47,7 @@ import numpy as np
 from repro.common.paged import PagedLeaf, is_paged, token_to_pool
 from repro.common.quant import quantize_rows
 from repro.common.types import LayerSpec, ModelConfig
+from repro.serving.faults import FaultPlan
 
 
 # ---------------------------------------------------------------------------
@@ -282,7 +283,8 @@ class PagedKVCache:
                  max_slots: int, max_seq_len: int, block_size: int = 16,
                  num_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 fault_plan: Optional[FaultPlan] = None):
         if kv_dtype not in (None, "int8"):
             raise ValueError(f"unsupported kv_dtype {kv_dtype!r} "
                              "(None or 'int8')")
@@ -345,6 +347,7 @@ class PagedKVCache:
                              "(every layer is a ring or O(1) state)")
 
         # host-side block accounting
+        self.faults = fault_plan
         self.prefix_cache = prefix_cache
         self._free: List[int] = list(range(self.num_blocks - 1, 0, -1))
         self._blocks: List[List[int]] = [[] for _ in range(max_slots)]
@@ -369,6 +372,17 @@ class PagedKVCache:
                                   # can cache
 
     # -- block accounting ----------------------------------------------
+    def _maybe_inject_alloc(self) -> None:
+        """Deterministic fault hook, called at the TOP of every mutating
+        allocation op (allocate/append/fork/ensure_writable) so an
+        injected failure leaves the accounting untouched — exactly like
+        the real out-of-blocks paths, which all pre-check before
+        mutating."""
+        if self.faults is not None and self.faults.take_alloc():
+            raise MemoryError(
+                "paged KV cache: injected allocation failure "
+                f"(op {self.faults.alloc_calls - 1})")
+
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
 
@@ -500,6 +514,7 @@ class PagedKVCache:
         number of prefix tokens served from cache (0 when cold)."""
         if self._blocks[slot]:
             raise ValueError(f"slot {slot} already allocated")
+        self._maybe_inject_alloc()
         matched, mblocks = (self.match_prefix(tokens)
                             if tokens is not None else (0, []))
         if tokens is not None and self.prefix_cache:
@@ -532,6 +547,8 @@ class PagedKVCache:
             raise ValueError(f"{n_tokens} tokens exceed capacity "
                              f"{self.max_seq_len}")
         need = self.blocks_for(n_tokens) - len(self._blocks[slot])
+        if need > 0:
+            self._maybe_inject_alloc()
         if need > self.free_blocks:
             raise MemoryError(
                 f"paged KV cache out of blocks: need {need}, "
@@ -557,6 +574,7 @@ class PagedKVCache:
             raise ValueError(f"fork target slot {dst} already allocated")
         if not self._blocks[src]:
             raise ValueError(f"fork source slot {src} has no allocation")
+        self._maybe_inject_alloc()
         n_share = min(self.blocks_for(self._committed[src]),
                       len(self._blocks[src]))
         n_fresh = len(self._blocks[src]) - n_share
@@ -586,17 +604,33 @@ class PagedKVCache:
         (refcount > 1) is swapped for a fresh block in this slot's table.
         Returns [(src_block, dst_block)] pairs the caller MUST copy
         device-side before issuing the writes (positions past the
-        allocation fall through to the trash block and need no copy)."""
+        allocation fall through to the trash block and need no copy).
+
+        All-or-nothing: the fresh-block demand is pre-checked (and the
+        fault hook fires) BEFORE any table mutation, so an out-of-blocks
+        MemoryError here leaves the slot exactly as it was — the caller
+        can preempt another request to free blocks and simply retry.
+        (Taking blocks one at a time used to be able to raise mid-loop
+        with half the swaps applied and the pairs list lost, leaving
+        table entries pointing at never-copied blocks.)"""
         pairs: List[Tuple[int, int]] = []
         if hi <= lo:
             return pairs
         bs = self.block_size
         first = lo // bs
         last = min((hi - 1) // bs, len(self._blocks[slot]) - 1)
-        for k in range(first, last + 1):
+        shared = [k for k in range(first, last + 1)
+                  if self._ref[self._blocks[slot][k]] > 1]
+        if not shared:
+            return pairs
+        self._maybe_inject_alloc()
+        if len(shared) > self.free_blocks:
+            raise MemoryError(
+                f"paged KV cache out of blocks for copy-on-write: need "
+                f"{len(shared)}, free {self.free_blocks}"
+                f"/{self.num_blocks - 1}")
+        for k in shared:
             b = self._blocks[slot][k]
-            if self._ref[b] <= 1:
-                continue
             nb = self._take_block()
             self._ref[nb] = 1
             self._release(b)

@@ -65,6 +65,21 @@ Memory + latency structure (this PR's point):
     decode/verify step).  All latency timing uses the monotonic
     ``time.perf_counter`` clock (wall-clock kept only for log
     timestamps), so NTP slews can't corrupt TTFT/TPOT percentiles.
+  * Robustness layer: under block exhaustion (admission starvation, a
+    fork storm's copy-on-write demand) the engine preempts the lowest-
+    priority decoding request — commits its written positions so the
+    blocks park in the refcount-zero LRU, requeues it with prompt+output
+    as its effective prompt — and the resume replays through the prefix
+    cache at the same per-request PRNG counters, bitwise-identical to an
+    uncontended run.  Requests carry ``priority``/``deadline_s``, can be
+    cancelled mid-flight, and terminate in exactly one of DONE /
+    REJECTED / CANCELLED / TIMED_OUT — validation failures and overload
+    shedding (bounded queue) are delivered through ``on_event``, never
+    as exceptions out of the step loop.  A stall watchdog breaks
+    no-forward-progress livelocks (preempt or shed-with-diagnostic), and
+    a deterministic ``FaultPlan`` injects allocation failures, transfer
+    faults and slow steps at the real choke points for reproducible
+    chaos tests.
 """
 from __future__ import annotations
 
@@ -85,9 +100,11 @@ from repro.launch import steps as steps_lib
 from repro.runtime.parallel import NO_PARALLEL
 from repro.serving.cache import (PagedKVCache, batch_axes, insert_rows,
                                  paged_insert_rows)
+from repro.serving.faults import FaultPlan, TransferFault
 from repro.serving.sampler import (SALT_DRAFT, SALT_SAMPLE, SampleParams,
-                                   accept_step, fork_seeds, row_keys,
-                                   sample_rows, sample_step, stack_params)
+                                   accept_step, fork_seeds, prefill_keys,
+                                   row_keys, sample_rows, sample_step,
+                                   stack_params)
 
 RECURRENT_MIXERS = ("mamba", "rglru")
 
@@ -97,6 +114,13 @@ class RequestState(enum.Enum):
     PREFILL = "prefill"
     DECODE = "decode"
     DONE = "done"
+    REJECTED = "rejected"      # never ran: validation / shed / gave up
+    CANCELLED = "cancelled"    # Engine.cancel
+    TIMED_OUT = "timed_out"    # deadline_s exceeded
+
+
+TERMINAL_STATES = (RequestState.DONE, RequestState.REJECTED,
+                   RequestState.CANCELLED, RequestState.TIMED_OUT)
 
 
 @dataclasses.dataclass
@@ -108,12 +132,17 @@ class Request:
     params: SampleParams = dataclasses.field(default_factory=SampleParams)
     on_token: Optional[Callable[["Request", int], None]] = None
     seed: int = 0                      # per-request PRNG seed (sampling)
+    priority: int = 0                  # higher evicts lower under pressure
+    deadline_s: Optional[float] = None  # submit-to-done budget (monotonic)
+    on_event: Optional[Callable[["Request", str], None]] = None
     # filled by the engine
     state: RequestState = RequestState.QUEUED
     output: List[int] = dataclasses.field(default_factory=list)
     truncated: bool = False            # max_new_tokens clamped to capacity
-    prefilled: int = 0                 # prompt tokens consumed (chunked)
-    cached_prefix: int = 0             # prompt tokens served from cache
+    prefilled: int = 0                 # seq tokens consumed (chunked)
+    cached_prefix: int = 0             # seq tokens served from cache
+    finish_reason: Optional[str] = None  # set on abnormal termination
+    preemptions: int = 0               # times evicted + requeued
     # monotonic (perf_counter) latency marks — immune to clock steps
     t_submit: float = 0.0
     t_first: float = 0.0
@@ -128,6 +157,17 @@ class Request:
     def tpot(self) -> float:
         n = max(1, len(self.output) - 1)
         return (self.t_done - self.t_first) / n
+
+    @property
+    def seq_tokens(self) -> List[int]:
+        """Prompt plus everything generated so far — the effective
+        prompt a preempted request re-enters the queue with, so its
+        recompute replays the same token stream."""
+        return self.prompt + self.output
+
+    @property
+    def finished(self) -> bool:
+        return self.state in TERMINAL_STATES
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +190,16 @@ class EngineMetrics:
         self.draft_proposed = 0        # K per active slot per spec step
         self.draft_accepted = 0        # drafts the verify forward kept
         self.acceptance_ema: Optional[float] = None
+        # robustness counters
+        self.preemptions = 0           # evict-and-requeue events
+        self.resumes = 0               # preempted requests re-admitted
+        self.rejected = 0              # terminal REJECTED (validation,
+                                       # watchdog, preemption give-up)
+        self.shed = 0                  # bounded-queue overload rejects
+        self.cancelled = 0
+        self.timed_out = 0
+        self.watchdog_fires = 0
+        self.transfer_faults = 0       # TransferFault steps retried
 
     def start(self) -> None:
         if self.t_start is None:
@@ -205,7 +255,24 @@ class EngineMetrics:
                                 if self.draft_proposed else 0.0),
             "acceptance_ema": (self.acceptance_ema
                                if self.acceptance_ema is not None else 0.0),
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
+            "rejected": self.rejected,
+            "shed": self.shed,
+            "cancelled": self.cancelled,
+            "timed_out": self.timed_out,
+            "watchdog_fires": self.watchdog_fires,
+            "transfer_faults": self.transfer_faults,
         }
+
+
+class EngineStallError(RuntimeError):
+    """``Engine.run`` exhausted its step budget with work still pending.
+    ``diagnostic`` is the queued/active/pool snapshot at the stall."""
+
+    def __init__(self, message: str, diagnostic: Dict[str, Any]):
+        super().__init__(message)
+        self.diagnostic = diagnostic
 
 
 # ---------------------------------------------------------------------------
@@ -231,8 +298,10 @@ class Scheduler:
         self.bucket_fn = bucket_fn
         # charge_fn prices a request in prefill tokens per admission
         # round; it takes the whole Request so prefix-aware runners can
-        # charge only the uncached tail of the prompt
-        self.charge_fn = charge_fn or (lambda r: bucket_fn(len(r.prompt)))
+        # charge only the uncached tail of the prompt.  Lengths are of
+        # ``seq_tokens`` (prompt + generated) so a preempted request is
+        # priced for its full recompute
+        self.charge_fn = charge_fn or (lambda r: bucket_fn(len(r.seq_tokens)))
         self.max_waiting_prefill_tokens = max_waiting_prefill_tokens
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
@@ -250,6 +319,14 @@ class Scheduler:
 
     def release(self, slot: int) -> None:
         self.slots[slot] = None
+
+    def remove(self, req: Request) -> bool:
+        """Drop a queued request (cancel / deadline / watchdog shed)."""
+        try:
+            self.queue.remove(req)
+            return True
+        except ValueError:
+            return False
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.slots)
@@ -271,7 +348,7 @@ class Scheduler:
             head = self.queue[0]
             if can_fit is not None and not can_fit(head):
                 break                      # wait for blocks, never skip
-            bucket = self.bucket_fn(len(head.prompt))
+            bucket = self.bucket_fn(len(head.seq_tokens))
             if self.charge_fn(head) > budget and admitted:
                 break                      # strict FCFS: wait, don't skip
             req = self.queue.popleft()
@@ -308,7 +385,8 @@ class ModelRunner:
                  speculate_k: int = 0, draft_tracks: int = 0,
                  prefix_cache: bool = True,
                  kv_dtype: Optional[str] = None,
-                 weight_dtype: Optional[str] = None):
+                 weight_dtype: Optional[str] = None,
+                 fault_plan: Optional[FaultPlan] = None):
         if cfg.encdec is not None:
             raise ValueError("engine serves decoder-only models")
         if kv_dtype not in (None, "float32", "int8"):
@@ -321,6 +399,7 @@ class ModelRunner:
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
         self.min_bucket = min_bucket
+        self.faults = fault_plan       # deterministic fault injection
         self.fns = steps_lib.model_fns(cfg)
         # requested dtypes; effective values (self.kv_dtype /
         # self.weight_dtype) are set below after the layout gates, with
@@ -359,7 +438,8 @@ class ModelRunner:
                                        max_seq_len=max_seq_len,
                                        block_size=block_size,
                                        num_blocks=num_blocks,
-                                       kv_dtype=eff_kv)
+                                       kv_dtype=eff_kv,
+                                       fault_plan=fault_plan)
             except ValueError:             # every layer is a ring: dense
                 self.paged = False
                 if eff_kv:
@@ -476,12 +556,13 @@ class ModelRunner:
 
     def admission_charge(self, req: "Request") -> int:
         """Prefill tokens a request costs per admission round: the padded
-        bucket of its *uncached* prompt tail (the prefix-cache hit costs
-        no compute), or one chunk when chunked prefill spreads the rest
-        over subsequent steps."""
-        length = len(req.prompt)
+        bucket of its *uncached* tail (the prefix-cache hit costs no
+        compute; a preempted request recomputing mostly-cached tokens is
+        priced for only the uncached remainder), or one chunk when
+        chunked prefill spreads the rest over subsequent steps."""
+        length = len(req.seq_tokens)
         if self.prefix_cache:
-            matched, _ = self.kv.match_prefix(req.prompt)
+            matched, _ = self.kv.match_prefix(req.seq_tokens)
             length -= matched
         bucket = self.bucket_for(length)
         return min(bucket, self.prefill_chunk) if self.prefill_chunk \
@@ -500,16 +581,20 @@ class ModelRunner:
         return stats
 
     # -- jitted programs -------------------------------------------------
-    def _prefill_impl(self, params, tokens, lengths, seeds, temps, tks, tps):
+    def _prefill_impl(self, params, tokens, lengths, seeds, counters,
+                      temps, tks, tps):
         """tokens [n, bucket] right-padded; lengths [n] true lengths.
-        Returns (first sampled token [n], prefill cache).  The first
-        token is draw 0 of each request's own key stream."""
+        Returns (first sampled token [n], prefill cache).  The sampled
+        token is draw ``counters[i]`` of each request's own key stream —
+        0 for a fresh prompt, m for a preempted request recomputing with
+        m tokens already emitted, so the resume continues the identical
+        sample sequence."""
         batch = {"inputs": tokens, "lengths": lengths}
         logits, cache, _ = self.fns["forward"](params, batch, self.cfg,
                                                self.par, mode="prefill")
         last = jnp.take_along_axis(
             logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
-        keys = row_keys(seeds, jnp.zeros_like(seeds, jnp.int32), SALT_SAMPLE)
+        keys = prefill_keys(seeds, counters)
         toks = sample_rows(last, keys, temps, tks, tps)
         return toks, cache
 
@@ -539,17 +624,19 @@ class ModelRunner:
                                   eos, remaining)
 
     def _chunk_impl(self, params, cache, toks, pos, table_rows, last_idx,
-                    seeds, temps, tks, tps):
+                    seeds, counters, temps, tks, tps):
         """One prefill chunk for n requests: toks [n, C] appended at
         positions pos[:, None] + arange(C).  Returns (cache, candidate
         first token [n] sampled at each row's last real prompt row —
-        meaningful only for rows whose final chunk this is)."""
+        meaningful only for rows whose final chunk this is).  The draw
+        uses ``counters[i]`` of each row's key stream (0 fresh, m for a
+        preempted resume) — see ``_prefill_impl``."""
         logits, cache = self.fns["chunk"](params, cache, toks, pos,
                                           self.cfg, self.par,
                                           block_table=table_rows)
         last = jnp.take_along_axis(
             logits, last_idx[:, None, None], axis=1)[:, 0]
-        keys = row_keys(seeds, jnp.zeros_like(seeds, jnp.int32), SALT_SAMPLE)
+        keys = prefill_keys(seeds, counters)
         return cache, sample_rows(last, keys, temps, tks, tps)
 
     def _draft_prefill_impl(self, draft_params, tokens, lengths):
@@ -635,11 +722,24 @@ class ModelRunner:
         return cache, draft_cache, packed
 
     # -- host-facing ops -------------------------------------------------
+    def _maybe_inject_transfer(self, site: str) -> None:
+        """Deterministic fault hook at every device-to-host transfer
+        point, fired AFTER the device work of the step was issued (like a
+        real dead copy): the engine un-does no device state, it simply
+        retries — the retry recomputes identical bytes into identical
+        positions, so the fault is bitwise-transparent."""
+        if self.faults is not None and self.faults.take_transfer():
+            raise TransferFault(
+                f"injected device-to-host transfer failure at {site} "
+                f"(op {self.faults.transfer_calls - 1})")
+
     def prefill(self, prompts: Sequence[Sequence[int]], bucket: int,
                 slots: Sequence[int], seeds: Sequence[int],
+                counters: Sequence[int],
                 params_list: Sequence[SampleParams]) -> np.ndarray:
         """Batched prefill of ``prompts`` into cache ``slots``.  One
-        jitted forward per (n, bucket) shape; returns first tokens [n]."""
+        jitted forward per (n, bucket) shape; returns first tokens [n]
+        (each row's draw ``counters[i]``)."""
         n = len(prompts)
         tokens = np.zeros((n, bucket), np.int32)
         lengths = np.empty((n,), np.int32)
@@ -650,6 +750,7 @@ class ModelRunner:
         toks, cache = self._prefill(self.params, jnp.asarray(tokens),
                                     jnp.asarray(lengths),
                                     jnp.asarray(seeds, jnp.uint32),
+                                    jnp.asarray(counters, jnp.int32),
                                     jnp.asarray(temps), jnp.asarray(tks),
                                     jnp.asarray(tps))
         table_rows = (self.kv.table_rows(slots) if self.paged
@@ -658,10 +759,12 @@ class ModelRunner:
                                   jnp.asarray(slots, jnp.int32), table_rows)
         self.prefill_shapes.add((n, bucket))
         self.prefill_calls += 1
+        self._maybe_inject_transfer("prefill")
         return np.asarray(toks)
 
     def chunk(self, toks: np.ndarray, pos: np.ndarray, slots: Sequence[int],
               last_idx: np.ndarray, seeds: Sequence[int],
+              counters: Sequence[int],
               params_list: Sequence[SampleParams]) -> np.ndarray:
         """One chunk step for the currently-prefilling requests."""
         temps, tks, tps = stack_params(params_list)
@@ -669,21 +772,23 @@ class ModelRunner:
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
             self.kv.table_rows(slots), jnp.asarray(last_idx),
             jnp.asarray(seeds, jnp.uint32),
+            jnp.asarray(counters, jnp.int32),
             jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps))
         self.chunk_shapes.add(tuple(toks.shape))
         self.chunk_calls += 1
+        self._maybe_inject_transfer("chunk")
         return np.asarray(cand)
 
     def warm_prefill(self, prompts: Sequence[Sequence[int]],
                      matched: Sequence[int], slots: Sequence[int],
-                     seeds: Sequence[int],
+                     seeds: Sequence[int], counters: Sequence[int],
                      params_list: Sequence[SampleParams]) -> np.ndarray:
         """Prefill only the uncached tails of prefix-matched prompts:
         tokens [matched_i, len_i) run through the chunk program at their
         true positions, attending to the shared cached blocks.  Sampling
-        uses draw 0 of each request's key stream, so the first token is
-        bitwise-identical to a cold full prefill.  Returns first tokens
-        [n]."""
+        uses draw ``counters[i]`` of each request's key stream (0 fresh),
+        so the first token is bitwise-identical to a cold full prefill.
+        Returns first tokens [n]."""
         n = len(prompts)
         tails = [len(p) - m for p, m in zip(prompts, matched)]
         bucket = self.bucket_for(max(tails))
@@ -699,9 +804,11 @@ class ModelRunner:
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
             self.kv.table_rows(slots), jnp.asarray(last_idx),
             jnp.asarray(seeds, jnp.uint32),
+            jnp.asarray(counters, jnp.int32),
             jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps))
         self.chunk_shapes.add((n, bucket))
         self.chunk_calls += 1
+        self._maybe_inject_transfer("warm_prefill")
         return np.asarray(cand)
 
     def copy_blocks(self, pairs: Sequence[Tuple[int, int]]) -> None:
@@ -803,6 +910,7 @@ class ModelRunner:
             jnp.asarray(counts, jnp.int32), jnp.asarray(temps),
             jnp.asarray(tks), jnp.asarray(tps), jnp.asarray(eos),
             jnp.asarray(remaining), max_len=max_len)
+        self._maybe_inject_transfer("decode")
         host = np.asarray(packed)                  # THE transfer
         self.decode_transfers += 1
         return host[0], host[1].astype(bool)
@@ -826,6 +934,7 @@ class ModelRunner:
             jnp.asarray(seeds, jnp.uint32), jnp.asarray(counts, jnp.int32),
             jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps),
             max_len=max_len)
+        self._maybe_inject_transfer("draft_verify")
         host = np.asarray(packed)                  # THE transfer
         self.decode_transfers += 1
         return host[:-1].T, host[-1]
@@ -844,7 +953,11 @@ class Engine:
                  prefill_chunk: int = 0, speculate_k: int = 0,
                  draft_tracks: int = 0, prefix_cache: bool = True,
                  kv_dtype: Optional[str] = None,
-                 weight_dtype: Optional[str] = None):
+                 weight_dtype: Optional[str] = None,
+                 max_queue: Optional[int] = None,
+                 watchdog_patience: int = 25,
+                 max_preemptions: int = 8,
+                 fault_plan: Optional[FaultPlan] = None):
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
@@ -858,12 +971,22 @@ class Engine:
                                   draft_tracks=draft_tracks,
                                   prefix_cache=prefix_cache,
                                   kv_dtype=kv_dtype,
-                                  weight_dtype=weight_dtype)
+                                  weight_dtype=weight_dtype,
+                                  fault_plan=fault_plan)
         self.scheduler = Scheduler(max_slots, self.runner.bucket_for,
                                    max_waiting_prefill_tokens,
                                    charge_fn=self.runner.admission_charge)
         self.metrics = EngineMetrics()
         self.seed = seed               # base for derived per-request seeds
+        # robustness knobs: bounded queue (None = unbounded), stall
+        # watchdog patience (consecutive no-progress steps before it
+        # fires) and the per-request eviction cap (a request preempted
+        # more often than this is REJECTED — termination guarantee)
+        self.max_queue = max_queue
+        self.watchdog_patience = watchdog_patience
+        self.max_preemptions = max_preemptions
+        self.faults = fault_plan
+        self._stalled_steps = 0        # consecutive no-progress steps
         self._next_rid = 0
         self.steps_run = 0
 
@@ -892,30 +1015,206 @@ class Engine:
                eos_id: Optional[int] = None,
                params: SampleParams = SampleParams(),
                on_token: Optional[Callable[[Request, int], None]] = None,
-               seed: Optional[int] = None) -> Request:
+               seed: Optional[int] = None, *, priority: int = 0,
+               deadline_s: Optional[float] = None,
+               on_event: Optional[Callable[[Request, str], None]] = None
+               ) -> Request:
         """``seed`` keys this request's sampling stream; with the same
         seed a request replays bit-identically regardless of what else
         shares its batch.  Defaults to a deterministic function of the
-        engine seed and the submission index."""
+        engine seed and the submission index.
+
+        ``priority`` orders eviction under memory pressure (a higher-
+        priority admission may preempt strictly-lower-priority decoders);
+        ``deadline_s`` bounds submit-to-done time (exceeding it yields
+        TIMED_OUT); ``on_event`` streams terminal transitions.
+
+        Invalid requests (empty/overlong prompt, non-positive token
+        budget, reservation larger than the whole block pool) and
+        overload (bounded queue full) come back as a ``REJECTED`` request
+        with ``finish_reason`` set, delivered through ``on_event`` — an
+        exception never escapes into the caller's serving loop."""
         if seed is None:
             seed = (self.seed * 1_000_003 + self._next_rid) & 0x7FFFFFFF
         req = Request(self._next_rid, list(prompt), max_new_tokens, eos_id,
-                      params, on_token, seed=seed)
-        if not req.prompt:
-            raise ValueError("empty prompt")
-        self.runner.bucket_for(len(req.prompt))    # validates length
-        kv = self.runner.kv
-        if kv is not None and \
-                kv.blocks_for(self._reserve_tokens(req)) > kv.num_blocks - 1:
-            raise ValueError(
-                f"request needs {kv.blocks_for(self._reserve_tokens(req))} "
-                f"KV blocks but the pool holds {kv.num_blocks - 1}")
+                      params, on_token, seed=seed, priority=priority,
+                      deadline_s=deadline_s, on_event=on_event)
         req.t_submit = time.perf_counter()     # monotonic: latency math
         req.t_submit_wall = time.time()        # wall-clock: logs only
         self._next_rid += 1
+        if not req.prompt:
+            return self._reject(req, "empty prompt")
+        if max_new_tokens <= 0:
+            return self._reject(req, "max_new_tokens must be positive, "
+                                     f"got {max_new_tokens}")
+        if len(req.prompt) > self.max_seq_len:
+            return self._reject(req, f"prompt length {len(req.prompt)} "
+                                     "exceeds engine capacity "
+                                     f"{self.max_seq_len}")
+        kv = self.runner.kv
+        if kv is not None and \
+                kv.blocks_for(self._reserve_tokens(req)) > kv.num_blocks - 1:
+            return self._reject(
+                req,
+                f"request needs {kv.blocks_for(self._reserve_tokens(req))} "
+                f"KV blocks but the pool holds {kv.num_blocks - 1}")
+        if self.max_queue is not None \
+                and len(self.scheduler.queue) >= self.max_queue:
+            self.metrics.shed += 1
+            return self._reject(req, f"queue full ({self.max_queue} "
+                                     "waiting): overload shed",
+                                count=False)
         self.metrics.start()
         self.scheduler.submit(req)
         return req
+
+    # -- terminal transitions ------------------------------------------
+    def _event(self, req: Request) -> None:
+        if req.on_event is not None:
+            req.on_event(req, req.finish_reason or req.state.value)
+
+    def _reject(self, req: Request, reason: str, *,
+                count: bool = True) -> Request:
+        req.state = RequestState.REJECTED
+        req.finish_reason = reason
+        req.t_done = time.perf_counter()
+        if count:
+            self.metrics.rejected += 1
+        self._event(req)
+        return req
+
+    def _slot_of(self, req: Request) -> Optional[int]:
+        for s, r in self.scheduler.active_slots():
+            if r is req:
+                return s
+        return None
+
+    def _evict_slot(self, slot: int, req: Request) -> None:
+        """Reclaim a slot whose request leaves mid-flight (preemption /
+        cancel / timeout): commit every position actually written — the
+        blocks park in the refcount-zero LRU, so an identical prompt (or
+        this request's own resume) reuses them — then drop the refs."""
+        self._active[slot] = False
+        if self.runner.paged:
+            kv = self.runner.kv
+            if req.state is RequestState.DECODE:
+                # [0, pos) is written: the prompt plus every emitted
+                # token but the last (chunked-prefill rows committed
+                # their finished chunks already)
+                kv.commit_tokens(slot, req.seq_tokens[:-1])
+            kv.free_slot(slot)
+        self.scheduler.release(slot)
+
+    def cancel(self, req: Request,
+               reason: str = "cancelled by caller") -> bool:
+        """Terminate a request wherever it is: drop it from the queue, or
+        reclaim its slot and KV blocks mid-prefill/decode/spec.  Safe to
+        call from a streaming callback mid-step — the decode loops skip
+        slots whose request is gone.  Returns False when the request is
+        already terminal."""
+        if req.finished:
+            return False
+        if req.state is RequestState.QUEUED:
+            self.scheduler.remove(req)
+        else:
+            slot = self._slot_of(req)
+            if slot is not None:
+                self._evict_slot(slot, req)
+        req.state = RequestState.CANCELLED
+        req.finish_reason = reason
+        req.t_done = time.perf_counter()
+        self.metrics.cancelled += 1
+        self._event(req)
+        return True
+
+    def _time_out(self, req: Request) -> None:
+        if req.state is RequestState.QUEUED:
+            self.scheduler.remove(req)
+        else:
+            slot = self._slot_of(req)
+            if slot is not None:
+                self._evict_slot(slot, req)
+        req.state = RequestState.TIMED_OUT
+        req.finish_reason = f"deadline {req.deadline_s:.3f}s exceeded"
+        req.t_done = time.perf_counter()
+        self.metrics.timed_out += 1
+        self._event(req)
+
+    def _expire_deadlines(self) -> None:
+        now = time.perf_counter()
+        late = [r for r in self.scheduler.queue
+                if r.deadline_s is not None
+                and now - r.t_submit > r.deadline_s]
+        late += [r for _, r in self.scheduler.active_slots()
+                 if r.deadline_s is not None
+                 and now - r.t_submit > r.deadline_s]
+        for req in late:
+            self._time_out(req)
+
+    # -- preemption -----------------------------------------------------
+    def _pick_victim(self, max_priority: int, exclude: Sequence[int] = ()
+                     ) -> Optional[Tuple[int, Request]]:
+        """Eviction victim: the lowest-priority, most-recently-submitted
+        decoding slot with priority <= max_priority.  The strict ordering
+        keeps preemption from ping-ponging — the newest cheapest request
+        always loses first."""
+        cands = [(s, r) for s, r in self.scheduler.active_slots()
+                 if r.state is RequestState.DECODE and s not in exclude
+                 and r.priority <= max_priority]
+        if not cands:
+            return None
+        return min(cands, key=lambda sr: (sr[1].priority, -sr[1].t_submit))
+
+    def _preempt(self, slot: int, req: Request, why: str) -> None:
+        """Evict a decoding request and recycle it through the queue.
+        Its committed blocks park in the refcount-zero LRU, so the
+        recompute on re-admission is mostly a prefix-cache hit, and the
+        resume samples at the same per-request key counters — the
+        finished output is bitwise-identical to an uncontended run.  A
+        request evicted more than ``max_preemptions`` times is REJECTED
+        instead: pressure that persistent means it would never finish,
+        and the cap guarantees the engine terminates."""
+        self._evict_slot(slot, req)
+        if req.preemptions >= self.max_preemptions:
+            req.state = RequestState.REJECTED
+            req.finish_reason = (f"gave up after {req.preemptions} "
+                                 f"preemptions under memory pressure "
+                                 f"({why})")
+            req.t_done = time.perf_counter()
+            self.metrics.rejected += 1
+            self._event(req)
+            return
+        req.preemptions += 1
+        req.state = RequestState.QUEUED
+        req.prefilled = 0
+        req.cached_prefix = 0
+        self.scheduler.queue.append(req)   # back of the line: the victim
+                                           # must never re-block the head
+        self.metrics.preemptions += 1
+        if req.on_event is not None:
+            req.on_event(req, f"preempted ({why})")
+
+    def _preempt_for_admission(self) -> None:
+        """Head-of-line blocked on a slot or on KV blocks: evict
+        strictly-lower-priority decoders until it fits.  Equal priority
+        never preempts — FCFS among peers, so default-priority workloads
+        behave exactly as before this layer existed (the head waits for
+        blocks to free)."""
+        if not self.scheduler.queue:
+            return
+        head = self.scheduler.queue[0]
+        for _ in range(self.max_slots + 1):
+            blocked_slot = not self.scheduler.free_slots()
+            blocked_blocks = (not blocked_slot and self.runner.paged
+                              and not self._make_can_fit()(head))
+            if not (blocked_slot or blocked_blocks):
+                return
+            victim = self._pick_victim(head.priority - 1)
+            if victim is None:
+                return
+            self._preempt(victim[0], victim[1],
+                          "admission of higher-priority request "
+                          f"{head.rid}")
 
     # ------------------------------------------------------------------
     def _emit(self, slot: int, req: Request, tok: int) -> None:
@@ -937,6 +1236,7 @@ class Engine:
             kv.free_slot(slot)                 # refcount drop -> pool
         self.scheduler.release(slot)
         self.metrics.observe(req)
+        self._event(req)
 
     def _make_can_fit(self) -> Callable[[Request], bool]:
         """Block-availability gate for one admission round.  Each True
@@ -955,7 +1255,7 @@ class Engine:
                 # blocks covered by a still-live cached prefix are
                 # shared, not allocated (cached-free matches still cost
                 # a slot of the free pool, so only live ones discount)
-                _, blocks = kv.match_prefix(req.prompt)
+                _, blocks = kv.match_prefix(req.seq_tokens)
                 need -= sum(1 for b in blocks if kv.refcount(b) > 0)
             if planned + need > kv.free_blocks:
                 return False
@@ -966,36 +1266,73 @@ class Engine:
 
     def _start_decode(self, slot: int, req: Request, tok: int,
                       batch_draft: bool = False) -> None:
-        """First token sampled: move the request into the decode batch.
-        ``batch_draft``: the caller (bucketed admission) will run one
-        batched draft prefill for the whole group afterwards."""
-        req.t_first = time.perf_counter()
+        """A (re)prefill sampled its token: move the request into the
+        decode batch.  Handles both a fresh prompt (no output yet) and a
+        preempted request resuming with m tokens already emitted — the
+        decode lane continues at position L+m with key counter m+1, so
+        the remainder of the stream is bitwise what the uncontended run
+        would have produced.  ``batch_draft``: the caller (bucketed
+        admission) runs one batched draft prefill for the whole group
+        afterwards."""
+        if req.t_first == 0.0:
+            req.t_first = time.perf_counter()
         req.state = RequestState.DECODE
         L = len(req.prompt)
+        m = len(req.output)            # tokens emitted before preemption
         # positions L .. L+new-1 must stay inside the cache
         cap = self.max_seq_len - L + 1
         req.truncated = req.max_new_tokens > cap
         self._tok[slot] = tok
-        self._pos[slot] = L
+        self._pos[slot] = L + m
         self._active[slot] = True
-        self._remaining[slot] = min(req.max_new_tokens, cap) - 1
-        self._counts[slot] = 1
+        self._remaining[slot] = min(req.max_new_tokens, cap) - 1 - m
+        self._counts[slot] = m + 1
         self._emit(slot, req, int(tok))
         if (self._remaining[slot] <= 0
                 or (req.eos_id is not None and tok == req.eos_id)):
             self._finish(slot, req)
         elif self.runner.speculate_k and not batch_draft:
             # the drafter joins here: one narrow forward fills its dense
-            # per-slot cache with the prompt's K/V
-            self.runner.draft_prefill([req.prompt],
-                                      self.runner.bucket_for(L), [slot])
+            # per-slot cache with every written position [0, L+m) —
+            # ``seq_tokens[:-1]`` (= the prompt when fresh).  A preempted
+            # drafting slot is thereby rebuilt from scratch: its stale
+            # dense rows are overwritten wholesale
+            seq = req.seq_tokens[:-1]
+            self.runner.draft_prefill([seq],
+                                      self.runner.bucket_for(len(seq)),
+                                      [slot])
 
-    def _admit(self) -> None:
+    def _unadmit(self, rows: List[Tuple[int, Request]]) -> None:
+        """Roll an admission back (allocation fault mid-round, or a
+        transfer fault on the prefill that would have produced the first
+        tokens): blocks freed — nothing was committed, so no later match
+        can see the half-written bytes — and the requests requeued at
+        the FRONT, keeping (rid-ordered) their FCFS turn for the retry."""
+        for slot, req in rows:
+            if self.runner.paged:
+                self.runner.kv.free_slot(slot)     # idempotent rollback
+            self._active[slot] = False
+            self.scheduler.release(slot)
+            req.state = RequestState.QUEUED
+            req.cached_prefix = 0
+            req.prefilled = 0
+        self.scheduler.queue.extendleft(
+            [r for _, r in sorted(rows, key=lambda sr: sr[1].rid,
+                                  reverse=True)])
+
+    def _admit(self) -> int:
+        """Admit queued requests into slots.  Returns the number of
+        requests that made prefill progress this round (admission
+        progress, for the stall watchdog)."""
+        self._preempt_for_admission()
         chunked = self.runner.prefill_chunk > 0
         warm_rows: List[Tuple[int, Request]] = []
+        admitted = 0
         for bucket, group in self.scheduler.plan_admission(
                 self._make_can_fit()):
             if self.runner.paged:
+                kept: List[Tuple[int, Request]] = []
+                bounced: List[Tuple[int, Request]] = []
                 for slot, req in group:
                     # share the longest cached block-aligned prefix; the
                     # matched span's K/V is already in the pool, so only
@@ -1003,17 +1340,32 @@ class Engine:
                     # after commit_tokens, which runs AFTER the prefill
                     # writing it was issued — a same-round match can
                     # only hit blocks whose writes are already in the
-                    # device stream.
-                    req.cached_prefix = self.runner.kv.allocate(
-                        slot, self._reserve_tokens(req),
-                        tokens=req.prompt)
+                    # device stream.  For a preempted request the match
+                    # runs over prompt+output, making its recompute
+                    # mostly a cache hit.  An (injected or real)
+                    # allocation failure un-admits just that request —
+                    # ``allocate`` may have shared prefix blocks before
+                    # faulting, so the rollback frees the slot.
+                    try:
+                        req.cached_prefix = self.runner.kv.allocate(
+                            slot, self._reserve_tokens(req),
+                            tokens=req.seq_tokens)
+                        kept.append((slot, req))
+                    except MemoryError:
+                        bounced.append((slot, req))
+                if bounced:
+                    self._unadmit(bounced)
+                group = kept
+            admitted += len(group)
             for slot, req in group:
+                if req.output:
+                    self.metrics.resumes += 1
                 self._temps[slot] = req.params.temperature
                 self._topks[slot] = req.params.top_k
                 self._topps[slot] = req.params.top_p
                 self._eos[slot] = -1 if req.eos_id is None else req.eos_id
                 self._seeds[slot] = req.seed
-                self._counts[slot] = 0
+                self._counts[slot] = len(req.output)   # resume counter
             if chunked:
                 # chunks run in _prefill_chunks; a cached prefix just
                 # advances the chunk cursor past the matched span
@@ -1033,14 +1385,22 @@ class Engine:
                 continue
             slots = [s for s, _ in cold]
             reqs = [r for _, r in cold]
-            toks = self.runner.prefill([r.prompt for r in reqs], bucket,
-                                       slots, [r.seed for r in reqs],
-                                       [r.params for r in reqs])
+            try:
+                toks = self.runner.prefill(
+                    [r.seq_tokens for r in reqs], bucket, slots,
+                    [r.seed for r in reqs],
+                    [len(r.output) for r in reqs],
+                    [r.params for r in reqs])
+            except TransferFault:
+                self.metrics.transfer_faults += 1
+                self._unadmit(cold)
+                admitted -= len(cold)
+                continue
             if self.runner.paged:
                 for slot, req in cold:
-                    self.runner.kv.commit_tokens(slot, req.prompt)
+                    self.runner.kv.commit_tokens(slot, req.seq_tokens)
             for slot, req, tok in zip(slots, reqs, toks):
-                req.prefilled = len(req.prompt)
+                req.prefilled = len(req.seq_tokens)
                 self._start_decode(slot, req, tok, batch_draft=True)
             if self.runner.speculate_k:
                 # one batched narrow forward fills the drafter's cache
@@ -1049,54 +1409,73 @@ class Engine:
                            if r.state is RequestState.DECODE]
                 if started:
                     self.runner.draft_prefill(
-                        [r.prompt for _, r in started], bucket,
+                        [r.seq_tokens[:-1] for _, r in started], bucket,
                         [s for s, _ in started])
         if warm_rows:
             # warm tails run after every cold prefill of the round, one
             # batched chunk-program call for the whole set
-            toks = self.runner.warm_prefill(
-                [r.prompt for _, r in warm_rows],
-                [r.cached_prefix for _, r in warm_rows],
-                [s for s, _ in warm_rows],
-                [r.seed for _, r in warm_rows],
-                [r.params for _, r in warm_rows])
+            try:
+                toks = self.runner.warm_prefill(
+                    [r.seq_tokens for _, r in warm_rows],
+                    [r.cached_prefix for _, r in warm_rows],
+                    [s for s, _ in warm_rows],
+                    [r.seed for _, r in warm_rows],
+                    [len(r.output) for _, r in warm_rows],
+                    [r.params for _, r in warm_rows])
+            except TransferFault:
+                self.metrics.transfer_faults += 1
+                self._unadmit(warm_rows)
+                return admitted - len(warm_rows)
             for slot, req in warm_rows:
-                self.runner.kv.commit_tokens(slot, req.prompt)
+                self.runner.kv.commit_tokens(slot, req.seq_tokens)
             for (slot, req), tok in zip(warm_rows, toks):
-                req.prefilled = len(req.prompt)
+                req.prefilled = len(req.seq_tokens)
                 self._start_decode(slot, req, tok)   # per-slot draft fill
+        return admitted
 
-    def _prefill_chunks(self) -> None:
+    def _prefill_chunks(self) -> int:
         """Advance every prefilling request by one chunk (one batched
-        call), finishing rows whose prompt is now fully consumed."""
+        call), finishing rows whose (effective) prompt is now fully
+        consumed.  A preempted request's chunks run over prompt+output —
+        the recompute stream.  Returns rows advanced (0 on an injected
+        transfer fault: nothing host-side moves, and the retry next step
+        rewrites the identical chunk bytes)."""
         C = self.runner.prefill_chunk
         rows = [(s, r) for s, r in self.scheduler.active_slots()
                 if r.state is RequestState.PREFILL]
         if not rows:
-            return
+            return 0
         n = len(rows)
         toks = np.zeros((n, C), np.int32)
         pos = np.empty((n,), np.int32)
         last_idx = np.zeros((n,), np.int32)
         for i, (slot, req) in enumerate(rows):
-            chunk = req.prompt[req.prefilled:req.prefilled + C]
+            seq = req.seq_tokens
+            chunk = seq[req.prefilled:req.prefilled + C]
             toks[i, :len(chunk)] = chunk
             pos[i] = req.prefilled
-            last_idx[i] = min(C - 1, len(req.prompt) - 1 - req.prefilled)
-        cand = self.runner.chunk(toks, pos, [s for s, _ in rows], last_idx,
-                                 [r.seed for _, r in rows],
-                                 [r.params for _, r in rows])
+            last_idx[i] = min(C - 1, len(seq) - 1 - req.prefilled)
+        try:
+            cand = self.runner.chunk(toks, pos, [s for s, _ in rows],
+                                     last_idx,
+                                     [r.seed for _, r in rows],
+                                     [len(r.output) for _, r in rows],
+                                     [r.params for _, r in rows])
+        except TransferFault:
+            self.metrics.transfer_faults += 1
+            return 0
         for i, (slot, req) in enumerate(rows):
+            seq = req.seq_tokens
             req.prefilled += C
-            if req.prefilled >= len(req.prompt):
-                req.prefilled = len(req.prompt)
-                self.runner.kv.commit_tokens(slot, req.prompt)
+            if req.prefilled >= len(seq):
+                req.prefilled = len(seq)
+                self.runner.kv.commit_tokens(slot, seq)
                 self._start_decode(slot, req, cand[i])
             else:
                 # the chunk's writes are in the device stream: its full
                 # blocks are now matchable by later admissions
-                self.runner.kv.commit_tokens(
-                    slot, req.prompt[:req.prefilled])
+                self.runner.kv.commit_tokens(slot, seq[:req.prefilled])
+        return n
 
     # ------------------------------------------------------------------
     def fork(self, parent: Request, n: int, *,
@@ -1132,10 +1511,18 @@ class Engine:
         # zeroed fresh blocks for the decode positions written since —
         # they must share the partial block holding that K/V instead.
         kv.commit_tokens(pslot, parent.prompt + parent.output[:-1])
-        if n * kv.fork_cost(pslot) > kv.free_blocks:
-            raise MemoryError(
-                f"fork needs {n * kv.fork_cost(pslot)} blocks, "
-                f"free {kv.free_blocks}")
+        while n * kv.fork_cost(pslot) > kv.free_blocks:
+            # under pressure a fork storm preempts strictly-lower-
+            # priority decoders instead of failing; among equals it
+            # raises — forks never evict peers of their parent
+            victim = self._pick_victim(parent.priority - 1,
+                                       exclude=(pslot,))
+            if victim is None:
+                raise MemoryError(
+                    f"fork needs {n * kv.fork_cost(pslot)} blocks, "
+                    f"free {kv.free_blocks}")
+            self._preempt(victim[0], victim[1],
+                          f"fork of request {parent.rid}")
         child_seeds = (list(seeds) if seeds is not None
                        else fork_seeds(parent.seed, n))
         if len(child_seeds) != n:
@@ -1143,7 +1530,16 @@ class Engine:
         children: List[Request] = []
         for i in range(n):
             slot = free[i]
-            kv.fork(pslot, slot)
+            try:
+                kv.fork(pslot, slot)
+            except MemoryError:
+                # injected fault mid-fork: children already created stay
+                # consistent but the caller sees an exception, so roll
+                # them back before re-raising
+                for c in children:
+                    self.cancel(c, "fork aborted: allocation failure "
+                                   "mid-fork")
+                raise
             child = Request(self._next_rid, list(parent.prompt),
                             parent.max_new_tokens, parent.eos_id,
                             params if params is not None else parent.params,
@@ -1181,13 +1577,41 @@ class Engine:
         """Copy-on-write gate before a decode/verify step: any block a
         slot is about to write while sharing it (fork siblings, live
         prefix-cache readers) is duplicated first, so the other readers
-        keep the original bytes."""
+        keep the original bytes.
+
+        Under block exhaustion (a fork storm about to diverge
+        everywhere) the writer preempts equal-or-lower-priority decoders
+        to free copy targets and retries; with nobody left to evict it
+        preempts ITSELF — its committed prefix parks in the LRU, so the
+        recompute after re-admission is cheap.  ``ensure_writable`` is
+        all-or-nothing, so a failed attempt leaves nothing to unwind.
+        Pairs of a writer that got preempted mid-pass are dropped before
+        the device copy: its swapped-in blocks returned to the pool, and
+        copying into them could race a later writer's reuse."""
         span = self.runner.speculate_k + 1   # verify writes pos..pos+K
-        pairs: List[Tuple[int, int]] = []
+        slot_pairs: List[Tuple[int, Request,
+                               List[Tuple[int, int]]]] = []
         kv = self.runner.kv
-        for slot, _ in active:
+        for slot, req in active:
+            if self.scheduler.slots[slot] is not req:
+                continue                 # preempted by an earlier writer
             lo = int(self._pos[slot])
-            pairs += kv.ensure_writable(slot, lo, lo + span)
+            while True:
+                try:
+                    slot_pairs.append(
+                        (slot, req,
+                         kv.ensure_writable(slot, lo, lo + span)))
+                    break
+                except MemoryError as e:
+                    victim = self._pick_victim(req.priority,
+                                               exclude=(slot,))
+                    if victim is None:
+                        self._preempt(slot, req, f"copy-on-write: {e}")
+                        break
+                    self._preempt(victim[0], victim[1],
+                                  f"copy-on-write by request {req.rid}")
+        pairs = [p for slot, req, ps in slot_pairs
+                 if self.scheduler.slots[slot] is req for p in ps]
         self.runner.copy_blocks(pairs)
 
     # ------------------------------------------------------------------
@@ -1202,6 +1626,9 @@ class Engine:
         acc = prop = 0
         K = self.runner.speculate_k
         for slot, req in active:
+            if self.scheduler.slots[slot] is not req \
+                    or req.state is not RequestState.DECODE:
+                continue           # cancelled/timed out from a callback
             m = int(counts[slot])
             # acceptance accounting charges only proposals the slot
             # could actually use: the remaining-budget cap truncates the
@@ -1230,49 +1657,144 @@ class Engine:
         self.metrics.observe_spec(acc, prop)
 
     def step(self) -> int:
-        """Admit queued requests, advance prefill chunks, and run one
-        decode (or speculative draft+verify) step for all decoding
-        slots.  Returns slots advanced."""
-        self._admit()
+        """Expire deadlines, admit queued requests (preempting if a
+        higher-priority head is starved), advance prefill chunks, and
+        run one decode (or speculative draft+verify) step for all
+        decoding slots.  Returns requests that made forward progress; a
+        zero-progress step with work pending arms the stall watchdog.
+        TransferFaults are absorbed here: the step simply retries next
+        tick (recomputing bitwise-identical bytes), it never corrupts
+        host state or escapes to the caller."""
+        if self.faults is not None:
+            dt = self.faults.take_slow()
+            if dt > 0:
+                time.sleep(dt)         # injected slow step (chaos tests)
+        self._expire_deadlines()
+        progress = self._admit()
         if self.runner.prefill_chunk:
-            self._prefill_chunks()
+            progress += self._prefill_chunks()
         self.metrics.max_active = max(
             self.metrics.max_active, len(self.scheduler.active_slots()))
         active = [(s, r) for s, r in self.scheduler.active_slots()
                   if r.state is RequestState.DECODE]
-        if not active:
-            # chunked prefill may still be in flight with nothing decoding
-            return len([1 for _, r in self.scheduler.active_slots()
-                        if r.state is RequestState.PREFILL])
-        if self.runner.paged:
-            self._cow(active)
-        if self.runner.speculate_k:
-            self._spec_step(active)
-            self.steps_run += 1
-            return len(active)
-        toks, done = self.runner.decode(
-            self._tok, self._pos, self._active, self._seeds, self._counts,
-            self._temps, self._topks, self._topps, self._eos,
-            self._remaining)
-        for slot, req in active:
-            tok = int(toks[slot])
-            self._emit(slot, req, tok)
-            self._tok[slot] = tok
-            self._pos[slot] += 1
-            self._counts[slot] += 1
-            self._remaining[slot] -= 1
-            if done[slot]:
-                self._finish(slot, req)
+        if self.runner.paged and active:
+            self._cow(active)          # may preempt: re-filter below
+            active = [(s, r) for s, r in active
+                      if self.scheduler.slots[s] is r]
+        if active:
+            try:
+                if self.runner.speculate_k:
+                    self._spec_step(active)
+                else:
+                    toks, done = self.runner.decode(
+                        self._tok, self._pos, self._active, self._seeds,
+                        self._counts, self._temps, self._topks,
+                        self._topps, self._eos, self._remaining)
+                    for slot, req in active:
+                        if self.scheduler.slots[slot] is not req \
+                                or req.state is not RequestState.DECODE:
+                            continue   # cancelled from a callback
+                        tok = int(toks[slot])
+                        self._emit(slot, req, tok)
+                        self._tok[slot] = tok
+                        self._pos[slot] += 1
+                        self._counts[slot] += 1
+                        self._remaining[slot] -= 1
+                        if done[slot]:
+                            self._finish(slot, req)
+                progress += len(active)
+            except TransferFault:
+                self.metrics.transfer_faults += 1
         self.steps_run += 1
-        return len(active)
+        if progress > 0 or not self.scheduler.has_work():
+            self._stalled_steps = 0
+        else:
+            self._stalled_steps += 1
+            if self._stalled_steps >= self.watchdog_patience:
+                self._watchdog_fire()
+        return progress
 
-    def run(self, max_steps: int = 10000) -> None:
-        """Drain queue + slots."""
+    def _watchdog_fire(self) -> None:
+        """No forward progress for ``watchdog_patience`` consecutive
+        steps with work pending: break the stall instead of spinning.
+        If the head of the queue is starved of a slot or of KV blocks,
+        preempt a decoder (equal priority allowed — anything beats
+        livelock); with nobody to evict, shed the head with a full
+        diagnostic as the reason.  Every fire either frees resources or
+        permanently removes a request, so repeated fires drain the queue
+        rather than spin."""
+        self.metrics.watchdog_fires += 1
+        self._stalled_steps = 0
+        if not self.scheduler.queue:
+            return      # stall is device-side (e.g. a transfer-fault
+                        # storm): scheduling can free nothing, and run()
+                        # reports the diagnostic when its budget ends
+        head = self.scheduler.queue[0]
+        blocked_slot = not self.scheduler.free_slots()
+        blocked_blocks = (not blocked_slot and self.runner.paged
+                          and not self._make_can_fit()(head))
+        if blocked_slot or blocked_blocks:
+            victim = self._pick_victim(head.priority)
+            if victim is not None:
+                self._preempt(victim[0], victim[1],
+                              "watchdog: head-of-line starved")
+                return
+        self.scheduler.remove(head)
+        head.state = RequestState.REJECTED
+        head.finish_reason = ("watchdog: no forward progress for "
+                              f"{self.watchdog_patience} steps; "
+                              f"{self._stall_summary()}")
+        head.t_done = time.perf_counter()
+        self.metrics.rejected += 1
+        self._event(head)
+
+    def stall_diagnostic(self) -> Dict[str, Any]:
+        """Queued/active/pool snapshot for stall reports."""
+        sched = self.scheduler
+        active = sched.active_slots()
+        diag: Dict[str, Any] = {
+            "steps_run": self.steps_run,
+            "queued": len(sched.queue),
+            "head_rid": sched.queue[0].rid if sched.queue else None,
+            "active_prefill": sum(1 for _, r in active
+                                  if r.state is RequestState.PREFILL),
+            "active_decode": sum(1 for _, r in active
+                                 if r.state is RequestState.DECODE),
+            "preemptions": self.metrics.preemptions,
+            "watchdog_fires": self.metrics.watchdog_fires,
+            "transfer_faults": self.metrics.transfer_faults,
+        }
+        if self.runner.paged:
+            kv = self.runner.kv
+            util = kv.utilization()
+            diag["free_blocks"] = kv.free_blocks
+            diag["block_utilization"] = util["block_utilization"]
+            if sched.queue:
+                diag["head_needs_blocks"] = kv.blocks_for(
+                    self._reserve_tokens(sched.queue[0]))
+        return diag
+
+    def _stall_summary(self) -> str:
+        return ", ".join(f"{k}={v}" for k, v in
+                         self.stall_diagnostic().items())
+
+    def run(self, max_steps: int = 10000, *,
+            allow_incomplete: bool = False) -> None:
+        """Drain queue + slots.  Exhausting ``max_steps`` with work still
+        pending raises :class:`EngineStallError` carrying a queued/
+        active/pool-utilization diagnostic — pass ``allow_incomplete=
+        True`` to return silently instead (engine state stays intact and
+        ``run`` can simply be called again)."""
         for _ in range(max_steps):
             if not self.scheduler.has_work():
                 return
-            if self.step() == 0 and not self.scheduler.queue:
-                return
+            self.step()
+        if self.scheduler.has_work() and not allow_incomplete:
+            raise EngineStallError(
+                f"engine stalled: {max_steps} steps exhausted with "
+                f"{len(self.scheduler.queue)} queued and "
+                f"{len(self.scheduler.active_slots())} active requests "
+                f"({self._stall_summary()})", self.stall_diagnostic())
 
     # ------------------------------------------------------------------
     def generate(self, prompts: List[List[int]], max_new_tokens: int = 32,

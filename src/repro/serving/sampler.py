@@ -90,6 +90,17 @@ def row_keys(seeds: jax.Array, counters: jax.Array, salt: int) -> jax.Array:
                          counters.astype(jnp.int32))
 
 
+def prefill_keys(seeds: jax.Array, counters: jax.Array) -> jax.Array:
+    """Keys for the token sampled at the end of a (re)prefill: draw
+    ``counters[i]`` of each row's stream — 0 for a fresh prompt, m for a
+    request resuming after preemption with m tokens already emitted.
+    Because this is the SAME (seed, counter, salt) triple the decode
+    step would have used at that point, a preempted request's recompute
+    samples the identical continuation: greedy or sampled, the finished
+    output is bitwise-equal to an uncontended run."""
+    return row_keys(seeds, counters, SALT_SAMPLE)
+
+
 def sample(logits: jax.Array, key: jax.Array,
            params: SampleParams = SampleParams()) -> jax.Array:
     """logits: [B, V] -> tokens [B] int32."""

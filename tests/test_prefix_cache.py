@@ -178,6 +178,54 @@ def test_prefix_cache_eviction_under_pressure_stays_correct():
     eng.runner.kv.check_invariants()
 
 
+def test_preempt_resume_matches_uncontended_bitwise():
+    """A request preempted mid-decode by a higher-priority admission and
+    resumed by recompute must finish with output BIT-IDENTICAL to an
+    uncontended run — greedy and sampled (the resume replays the same
+    per-request PRNG counters over prompt+output), plain decode and
+    track-speculative (the drafting slot's dense cache is rebuilt from
+    scratch on resume)."""
+    variants = [
+        ("tinyllama-1.1b", {}, SampleParams()),
+        ("tinyllama-1.1b", {}, SampleParams(temperature=1.0)),
+        ("pt-30b-d8", {"speculate_k": 3, "draft_tracks": 2},
+         SampleParams()),
+    ]
+    for arch, extra, sp in variants:
+        cfg = reduced_config(arch)
+        fns = steps_lib.model_fns(cfg)
+        params = fns["init"](jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(17)
+        prompt = rng.integers(1, cfg.vocab_size, 16).tolist()
+        intruder_prompt = rng.integers(1, cfg.vocab_size, 16).tolist()
+
+        ref_eng = Engine(cfg, params, max_slots=2, max_seq_len=48,
+                         block_size=8, **extra)
+        ref = ref_eng.submit(prompt, 6, params=sp, seed=23)
+        ref_eng.run()
+        assert ref.state is RequestState.DONE
+
+        # 3 usable blocks: exactly one 16-token request fits at a time,
+        # so the priority-1 intruder can only run by evicting the victim
+        eng = Engine(cfg, params, max_slots=2, max_seq_len=48,
+                     block_size=8, num_blocks=4, **extra)
+        victim = eng.submit(prompt, 6, params=sp, seed=23, priority=0)
+        for _ in range(6):
+            eng.step()
+            if len(victim.output) >= 2:
+                break
+        assert victim.state is RequestState.DECODE
+        assert 2 <= len(victim.output) < 6
+        intruder = eng.submit(intruder_prompt, 6, priority=1)
+        eng.run()
+        assert victim.preemptions == 1, (arch, extra)
+        assert victim.state is RequestState.DONE
+        assert intruder.state is RequestState.DONE
+        assert victim.output == ref.output, (arch, extra, sp)
+        eng.runner.kv.check_invariants()
+        assert eng.runner.kv.utilization()["used_blocks"] == 0
+
+
 # ---------------------------------------------------------------------------
 # forking
 # ---------------------------------------------------------------------------

@@ -198,6 +198,69 @@ def test_paged_pool_invariants_under_random_ops(seed):
     assert kv.utilization()["used_blocks"] == 0
 
 
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_engine_chaos_random_ops_keep_invariants_and_terminate(seed):
+    """Engine-level chaos: random interleavings of submit (mixed
+    priorities/deadlines), cancel, fork and step against an
+    oversubscribed block pool with a seeded fault storm (allocation +
+    transfer faults).  After EVERY operation the paged pool invariants
+    hold, and when the dust settles every request — including fork
+    children — is in exactly one terminal state with the pool empty."""
+    from repro.common.types import LayerSpec, ModelConfig
+    from repro.launch import steps as steps_lib
+    from repro.serving.engine import Engine, RequestState
+    from repro.serving.faults import FaultPlan
+    from repro.serving.sampler import SampleParams
+
+    cfg = ModelConfig(
+        name="chaos-prop", family="dense", n_layers=1, d_model=16,
+        n_heads=2, n_kv_heads=1, d_ff=32, vocab_size=64,
+        layer_specs={"full": LayerSpec(mixer="gqa", mlp="swiglu")},
+        pattern_unit=("full",), tie_embeddings=False, dtype="float32")
+    params = steps_lib.model_fns(cfg)["init"](jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_slots=3, max_seq_len=32, block_size=8,
+                 num_blocks=8, max_queue=8, watchdog_patience=6,
+                 max_preemptions=2,
+                 fault_plan=FaultPlan(seed=seed, alloc_p=0.1,
+                                      transfer_p=0.08, max_faults=5))
+    rng = np.random.default_rng(seed)
+    reqs = []
+
+    def check():
+        eng.runner.kv.check_invariants()
+
+    for _ in range(18):
+        choice = rng.random()
+        if choice < 0.4:
+            n = int(rng.integers(1, 14))
+            reqs.append(eng.submit(
+                rng.integers(1, cfg.vocab_size, n).tolist(),
+                int(rng.integers(1, 6)),
+                priority=int(rng.integers(0, 3)),
+                deadline_s=10.0 if rng.random() < 0.2 else None,
+                params=SampleParams(
+                    temperature=float(rng.random() < 0.5))))
+        elif choice < 0.5 and reqs:
+            eng.cancel(reqs[int(rng.integers(len(reqs)))])
+        elif choice < 0.6 and reqs:
+            parents = [r for r in reqs
+                       if r.state is RequestState.DECODE]
+            if parents:
+                try:
+                    reqs += eng.fork(parents[0], 1)
+                except (ValueError, MemoryError):
+                    pass               # no slots / pool exhausted: fine
+        else:
+            eng.step()
+        check()
+    eng.run(max_steps=1000, allow_incomplete=True)
+    check()
+    assert all(r.finished for r in reqs), \
+        [(r.rid, r.state) for r in reqs if not r.finished]
+    assert eng.runner.kv.utilization()["used_blocks"] == 0
+
+
 @given(st.integers(2, 6), st.integers(6, 30))
 def test_windowed_ring_cache_decode_matches_full(w, s):
     """Decode with a ring-buffer cache == decode with a full cache for

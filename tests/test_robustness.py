@@ -1,0 +1,325 @@
+"""Serving robustness layer: preempt-and-recompute under block
+exhaustion, request priorities / deadlines / cancellation, terminal-state
+delivery through callbacks (REJECTED / CANCELLED / TIMED_OUT), bounded-
+queue overload shedding, the stall watchdog, and the deterministic
+fault-injection harness (allocation faults, transfer faults, slow
+steps)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.common.types import LayerSpec, ModelConfig
+from repro.configs import reduced_config
+from repro.launch import steps as steps_lib
+from repro.models.decoder import init_lm
+from repro.serving.engine import Engine, EngineStallError, RequestState
+from repro.serving.faults import FaultPlan, TransferFault
+from repro.serving.sampler import SampleParams
+
+
+def _tinyllama():
+    cfg = reduced_config("tinyllama-1.1b")
+    return cfg, init_lm(jax.random.PRNGKey(0), cfg)
+
+
+def _tiny_cfg():
+    """One-layer toy model: cheap compiles for engine-level chaos."""
+    return ModelConfig(
+        name="robust-test", family="dense", n_layers=1, d_model=16,
+        n_heads=2, n_kv_heads=1, d_ff=32, vocab_size=64,
+        layer_specs={"full": LayerSpec(mixer="gqa", mlp="swiglu")},
+        pattern_unit=("full",), tie_embeddings=False, dtype="float32")
+
+
+def _tiny_engine(**kw):
+    cfg = _tiny_cfg()
+    params = steps_lib.model_fns(cfg)["init"](jax.random.PRNGKey(0), cfg)
+    return cfg, Engine(cfg, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# validation + overload shedding: REJECTED via callback, never an exception
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_invalid_requests_without_raising():
+    cfg, eng = _tiny_engine(max_slots=2, max_seq_len=32, block_size=8)
+    events = []
+    cb = lambda r, why: events.append((r.rid, why))
+    bad = [eng.submit([], 4, on_event=cb),
+           eng.submit([1, 2, 3], 0, on_event=cb),
+           eng.submit([1] * 40, 4, on_event=cb)]
+    for req in bad:
+        assert req.state is RequestState.REJECTED
+        assert req.finished and req.finish_reason
+    assert "empty prompt" in bad[0].finish_reason
+    assert "max_new_tokens" in bad[1].finish_reason
+    assert "exceeds engine capacity" in bad[2].finish_reason
+    assert [rid for rid, _ in events] == [r.rid for r in bad]
+    assert not eng.scheduler.has_work()
+    eng.run()                          # nothing queued, returns at once
+    assert eng.metrics.summary()["rejected"] == 3
+
+
+def test_bounded_queue_sheds_overload():
+    cfg, eng = _tiny_engine(max_slots=1, max_seq_len=32, block_size=8,
+                            max_queue=2)
+    reqs = [eng.submit([1, 2, 3, 4], 4) for _ in range(4)]
+    shed = [r for r in reqs if r.state is RequestState.REJECTED]
+    assert len(shed) == 2 and all("overload shed" in r.finish_reason
+                                  for r in shed)
+    m = eng.metrics.summary()
+    assert m["shed"] == 2
+    assert m["rejected"] == 0          # shed is counted separately
+    eng.run()
+    assert all(r.state is RequestState.DONE for r in reqs[:2])
+
+
+# ---------------------------------------------------------------------------
+# cancellation + deadlines
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_and_decoding_reclaims_blocks():
+    cfg, eng = _tiny_engine(max_slots=1, max_seq_len=32, block_size=8)
+    a = eng.submit([1, 2, 3, 4, 5], 8)
+    b = eng.submit([6, 7, 8, 9], 8)
+    eng.step()                         # a decoding, b queued behind it
+    assert a.state is RequestState.DECODE
+    assert b.state is RequestState.QUEUED
+    assert eng.cancel(b) and b.state is RequestState.CANCELLED
+    assert eng.cancel(a) and a.state is RequestState.CANCELLED
+    assert not eng.cancel(a)           # already terminal
+    eng.runner.kv.check_invariants()
+    assert eng.runner.kv.utilization()["used_blocks"] == 0
+    assert not eng.scheduler.has_work()
+    assert eng.metrics.summary()["cancelled"] == 2
+
+
+def test_cancel_from_streaming_callback_mid_step():
+    cfg, eng = _tiny_engine(max_slots=2, max_seq_len=32, block_size=8)
+
+    def stop_after_two(req, tok):
+        if len(req.output) >= 2:
+            eng.cancel(req, "client disconnected")
+
+    a = eng.submit([1, 2, 3], 16, on_token=stop_after_two)
+    b = eng.submit([4, 5, 6], 4)
+    eng.run()
+    assert a.state is RequestState.CANCELLED
+    assert a.finish_reason == "client disconnected"
+    assert len(a.output) == 2
+    assert b.state is RequestState.DONE and len(b.output) == 4
+    eng.runner.kv.check_invariants()
+    assert eng.runner.kv.utilization()["used_blocks"] == 0
+
+
+def test_deadline_times_out_queued_and_active_requests():
+    cfg, eng = _tiny_engine(max_slots=1, max_seq_len=32, block_size=8)
+    events = []
+    late = eng.submit([1, 2, 3], 8, deadline_s=0.0,
+                      on_event=lambda r, why: events.append(why))
+    live = eng.submit([4, 5, 6], 8)
+    eng.step()                         # expires `late` before admission
+    assert late.state is RequestState.TIMED_OUT
+    assert "deadline" in late.finish_reason and "deadline" in events[0]
+    assert live.state is RequestState.DECODE
+    live.deadline_s = 1e-9             # now expire a decoding request
+    eng.step()
+    assert live.state is RequestState.TIMED_OUT
+    eng.runner.kv.check_invariants()
+    assert eng.runner.kv.utilization()["used_blocks"] == 0
+    assert eng.metrics.summary()["timed_out"] == 2
+
+
+# ---------------------------------------------------------------------------
+# preempt-and-recompute
+# ---------------------------------------------------------------------------
+
+def test_admission_preempts_lower_priority_and_both_finish():
+    """Pool holds one request at a time: a higher-priority submission
+    must evict the decoding request, which resumes by recompute after
+    the intruder finishes — both complete, blocks fully reclaimed."""
+    cfg, params = _tinyllama()
+    rng = np.random.default_rng(3)
+    eng = Engine(cfg, params, max_slots=2, max_seq_len=48, block_size=8,
+                 num_blocks=4)         # 3 usable: one request at a time
+    events = []
+    victim = eng.submit(rng.integers(1, cfg.vocab_size, 16).tolist(), 6,
+                        priority=0,
+                        on_event=lambda r, why: events.append(why))
+    for _ in range(3):
+        eng.step()                     # victim decodes a few tokens
+    assert victim.state is RequestState.DECODE
+    emitted_before = len(victim.output)
+    assert emitted_before >= 1
+    intruder = eng.submit(rng.integers(1, cfg.vocab_size, 16).tolist(), 6,
+                          priority=1)
+    eng.run()
+    assert victim.state is RequestState.DONE
+    assert intruder.state is RequestState.DONE
+    assert victim.preemptions == 1
+    assert any("preempted" in why for why in events)
+    m = eng.metrics.summary()
+    assert m["preemptions"] == 1 and m["resumes"] >= 1
+    assert len(victim.output) == 6 and len(intruder.output) == 6
+    eng.runner.kv.check_invariants()
+    assert eng.runner.kv.utilization()["used_blocks"] == 0
+
+
+def test_equal_priority_never_preempted_on_admission():
+    cfg, eng = _tiny_engine(max_slots=2, max_seq_len=32, block_size=8,
+                            num_blocks=3)  # 2 usable
+    a = eng.submit([1, 2, 3, 4, 5, 6], 8)  # 2 blocks: fills the pool
+    eng.step()
+    assert a.state is RequestState.DECODE
+    b = eng.submit([7, 8, 9], 8)           # same priority: waits
+    eng.run()
+    assert eng.metrics.summary()["preemptions"] == 0
+    assert a.state is RequestState.DONE and b.state is RequestState.DONE
+
+
+def test_preemption_cap_rejects_instead_of_livelock():
+    cfg, eng = _tiny_engine(max_slots=2, max_seq_len=32, block_size=8,
+                            num_blocks=3, max_preemptions=0)
+    victim = eng.submit([1, 2, 3, 4, 5, 6], 8, priority=0)
+    eng.step()
+    assert victim.state is RequestState.DECODE
+    eng.submit([7, 8, 9, 10, 11, 12], 8, priority=1)
+    eng.run()
+    assert victim.state is RequestState.REJECTED
+    assert "gave up" in victim.finish_reason
+    eng.runner.kv.check_invariants()
+    assert eng.runner.kv.utilization()["used_blocks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# stall watchdog + run() diagnostics
+# ---------------------------------------------------------------------------
+
+def test_watchdog_rejects_head_with_diagnostic_under_alloc_faults():
+    """Every allocation faulting means admission never progresses; the
+    watchdog must shed the head with a diagnostic instead of spinning."""
+    cfg, eng = _tiny_engine(max_slots=2, max_seq_len=32, block_size=8,
+                            watchdog_patience=3,
+                            fault_plan=FaultPlan(alloc_p=1.0))
+    req = eng.submit([1, 2, 3, 4], 4)
+    eng.run(max_steps=50)              # drains: the head is shed
+    assert req.state is RequestState.REJECTED
+    assert "watchdog" in req.finish_reason
+    assert "queued=" in req.finish_reason     # the stall summary
+    assert eng.metrics.summary()["watchdog_fires"] >= 1
+    assert not eng.scheduler.has_work()
+
+
+def test_run_raises_stall_error_with_diagnostic():
+    """A transfer-fault storm the watchdog cannot fix (device-side, no
+    schedulable cause) must surface as EngineStallError from run() —
+    with the queued/active/pool snapshot attached — unless the caller
+    opts into allow_incomplete."""
+    cfg, eng = _tiny_engine(max_slots=1, max_seq_len=32, block_size=8,
+                            watchdog_patience=10_000,
+                            fault_plan=FaultPlan(transfer_p=1.0))
+    req = eng.submit([1, 2, 3], 4)
+    with pytest.raises(EngineStallError) as ei:
+        eng.run(max_steps=20)
+    diag = ei.value.diagnostic
+    assert diag["queued"] + diag["active_prefill"] >= 1
+    assert diag["transfer_faults"] > 0
+    assert "free_blocks" in diag
+    assert not req.finished            # intact: retry is still possible
+    eng.run(max_steps=20, allow_incomplete=True)   # silent variant
+    assert eng.metrics.summary()["transfer_faults"] > 0
+
+
+# ---------------------------------------------------------------------------
+# fault injection: determinism + bitwise transparency
+# ---------------------------------------------------------------------------
+
+def test_transfer_faults_are_bitwise_transparent():
+    """Injected transfer faults on prefill and mid-decode retry the step
+    next tick; the greedy output must be identical to a fault-free run."""
+    cfg, params = _tinyllama()
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(1, cfg.vocab_size, 12).tolist()
+
+    def run(plan):
+        eng = Engine(cfg, params, max_slots=2, max_seq_len=32,
+                     block_size=8, fault_plan=plan)
+        req = eng.submit(prompt, 8)
+        eng.run()
+        return req, eng
+
+    ref, _ = run(None)
+    assert ref.state is RequestState.DONE
+    # op 0 is the prefill transfer; later ops are decode steps
+    plan = FaultPlan(transfer_ops=frozenset({0, 2, 5}))
+    faulted, eng = run(plan)
+    assert faulted.state is RequestState.DONE
+    assert faulted.output == ref.output
+    assert eng.metrics.summary()["transfer_faults"] == 3
+    assert [s for s, _ in plan.events] == ["transfer"] * 3
+    eng.runner.kv.check_invariants()
+
+
+def test_fault_plan_schedule_is_deterministic():
+    def drive(seed):
+        plan = FaultPlan(seed=seed, alloc_p=0.3, transfer_p=0.3,
+                         slow_p=0.3, slow_s=0.0)
+        for _ in range(30):
+            plan.take_alloc()
+            plan.take_transfer()
+            plan.take_slow()
+        return list(plan.events)
+
+    assert drive(7) == drive(7)
+    assert drive(7) != drive(8)
+    plan = FaultPlan(seed=7, alloc_p=1.0, max_faults=2)
+    assert [plan.take_alloc() for _ in range(5)] == [True, True, False,
+                                                     False, False]
+    assert plan.summary()["injected"] == 2
+    assert plan.summary()["alloc_calls"] == 5
+
+
+def test_slow_step_injection_drives_deadlines():
+    cfg, eng = _tiny_engine(max_slots=1, max_seq_len=32, block_size=8,
+                            fault_plan=FaultPlan(slow_p=1.0, slow_s=0.02))
+    req = eng.submit([1, 2, 3], 16, deadline_s=0.01)
+    eng.run()
+    assert req.state is RequestState.TIMED_OUT
+    assert eng.faults.slow_calls > 0
+
+
+# ---------------------------------------------------------------------------
+# chaos: block exhaustion + mixed faults, everything still terminates
+# ---------------------------------------------------------------------------
+
+def test_every_request_terminates_under_block_exhaustion_chaos():
+    """Oversubscribed pool, mixed priorities, a bounded fault storm and
+    mid-flight cancels: every request must end in exactly one terminal
+    state, with zero invariant violations and an empty pool."""
+    cfg, eng = _tiny_engine(
+        max_slots=3, max_seq_len=32, block_size=8, num_blocks=8,
+        max_queue=16, watchdog_patience=8, max_preemptions=2,
+        fault_plan=FaultPlan(seed=5, alloc_p=0.15, transfer_p=0.1,
+                             max_faults=6))
+    rng = np.random.default_rng(5)
+    reqs = []
+    for i in range(10):
+        reqs.append(eng.submit(
+            rng.integers(1, cfg.vocab_size,
+                         int(rng.integers(2, 14))).tolist(),
+            int(rng.integers(1, 8)), priority=int(rng.integers(0, 3)),
+            deadline_s=None if i % 4 else 5.0))
+        if i == 6:
+            eng.cancel(reqs[2])
+        eng.step()
+        eng.runner.kv.check_invariants()
+    eng.run(max_steps=2000, allow_incomplete=True)
+    assert all(r.finished for r in reqs), \
+        [(r.rid, r.state) for r in reqs if not r.finished]
+    eng.runner.kv.check_invariants()
+    assert eng.runner.kv.utilization()["used_blocks"] == 0
+    m = eng.metrics.summary()
+    done = sum(r.state is RequestState.DONE for r in reqs)
+    assert done == m["requests"]
+    assert (done + m["rejected"] + m["shed"] + m["cancelled"]
+            + m["timed_out"]) == len(reqs)

@@ -455,11 +455,21 @@ def test_paged_admission_waits_for_blocks_fcfs():
 
 
 def test_oversized_request_rejected_at_submit():
+    """A reservation larger than the whole pool can never run: submit
+    returns a terminal REJECTED request (reason via the event callback)
+    instead of raising out of the caller's serving loop."""
     cfg, params = _tinyllama()
     eng = Engine(cfg, params, max_slots=2, max_seq_len=64, paged=True,
                  block_size=8, num_blocks=3)   # 24-token pool
-    with pytest.raises(ValueError, match="KV blocks"):
-        eng.submit([1] * 40, max_new_tokens=4)
+    events = []
+    req = eng.submit([1] * 40, max_new_tokens=4,
+                     on_event=lambda r, why: events.append(why))
+    assert req.state is RequestState.REJECTED
+    assert "KV blocks" in req.finish_reason
+    assert events and "KV blocks" in events[0]
+    assert not eng.scheduler.has_work()          # never queued
+    eng.run()                                    # still serviceable
+    assert eng.metrics.summary()["rejected"] == 1
 
 
 def test_paged_windowed_arch_keeps_rings_dense():

@@ -16,6 +16,9 @@ adding a new smoke never breaks the first CI run that records it):
   quantized.slots_gain_at_fixed_hbm   higher is better
   quantized.int8.tpot_mean_ms         lower is better
   speculate.tpot_speedup              higher is better
+  overload.completed                  higher is better
+  overload.all_terminal               higher is better (boolean: every
+                                      request reached a terminal state)
 
 Usage:
   python tools/bench_check.py BENCH_serving.json [--baseline-ref HEAD]
@@ -38,6 +41,8 @@ METRICS: Tuple[Tuple[str, bool], ...] = (
     ("quantized.slots_gain_at_fixed_hbm", True),
     ("quantized.int8.tpot_mean_ms", False),
     ("speculate.tpot_speedup", True),
+    ("overload.completed", True),
+    ("overload.all_terminal", True),
 )
 
 
