@@ -30,6 +30,11 @@ gain and the mean-TPOT delta under ``quantized``.
 a bounded queue through the robustness layer (preempt-and-recompute,
 overload shedding), recording completion / preemption / shed counts
 under ``overload``.
+
+``--arch {mla,window,ssm}`` serves one reduced non-GQA architecture
+(MLA latents / sliding-window rings / SSM state) through the layout-
+polymorphic paged engine, recording TTFT and peak blocks-in-use under
+``arch_<kind>`` — the architecture-zoo serving trajectory per commit.
 """
 from __future__ import annotations
 
@@ -538,6 +543,77 @@ def bench_overload(json_path: str | None = None) -> dict:
     return out
 
 
+ARCH_SMOKES = {
+    "mla": "deepseek-v2-236b",     # MLA latents paged through 3-D pools
+    "window": "gemma2-2b",         # paged full layers + dense ring leaves
+    "ssm": "falcon-mamba-7b",      # all-state stack, virtual block metering
+}
+
+
+def bench_arch(kind: str, json_path: str | None = None) -> dict:
+    """Architecture-zoo smoke: drive one reduced non-GQA config (MLA /
+    sliding-window / SSM) through the layout-polymorphic paged engine
+    and record TTFT and peak blocks-in-use under ``arch_<kind>``, so the
+    serving-perf trajectory of every cache layout — not just the GQA
+    path — is visible per commit.  Chunked prefill is enabled wherever
+    the capability table allows it (everywhere but MoE)."""
+    import jax
+    import numpy as np
+    from repro.configs import reduced_config
+    from repro.launch import steps as steps_lib
+    from repro.serving.engine import Engine, arch_capabilities
+
+    name = ARCH_SMOKES[kind]
+    cfg = reduced_config(name)
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    caps = arch_capabilities(cfg)
+    chunk = 8 if caps["chunked_prefill"].supported else 0
+    S, bs = 64, 8
+    eng = Engine(cfg, params, max_slots=4, max_seq_len=S, block_size=bs,
+                 prefill_chunk=chunk)
+    rng = np.random.default_rng(0)
+    # compile warm-up on the workload shapes, then the timed run
+    for _ in range(2):
+        eng.submit(rng.integers(1, cfg.vocab_size, 24).tolist(), 8)
+    eng.run()
+    eng.metrics = type(eng.metrics)()
+    reqs = [eng.submit(rng.integers(1, cfg.vocab_size, 24).tolist(), 8)
+            for _ in range(8)]
+    peak_blocks = 0
+    for _ in range(10_000):
+        if not eng.scheduler.has_work():
+            break
+        eng.step()
+        peak_blocks = max(peak_blocks,
+                          eng.runner.kv.utilization()["used_blocks"])
+    m = eng.metrics.summary()
+    u = eng.runner.kv.utilization()
+    assert all(r.finished for r in reqs)
+    out = {
+        "arch": name,
+        "kind": kind,
+        "leaf_kinds": u["leaf_kinds"],
+        "prefill_chunk": eng.runner.prefill_chunk,
+        "chunked_reason": caps["chunked_prefill"].reason,
+        "ttft_p50_ms": m["ttft_ms"]["p50"],
+        "ttft_p99_ms": m["ttft_ms"]["p99"],
+        "tpot_mean_ms": m["tpot_ms"]["mean"],
+        "throughput_tok_s": m["throughput_tok_s"],
+        "peak_blocks_in_use": peak_blocks,
+        "num_blocks": u["num_blocks"],
+        "completed": sum(len(r.output) > 0 for r in reqs),
+    }
+    print(f"arch,{kind},{name},layout {u['leaf_kinds']},"
+          f"chunk {out['prefill_chunk']},"
+          f"ttft_p50 {out['ttft_p50_ms']:.1f} ms,"
+          f"peak_blocks {peak_blocks}/{u['num_blocks']},"
+          f"{out['throughput_tok_s']:.1f} tok/s")
+    if json_path:
+        _merge_json(json_path, f"arch_{kind}", out)
+    return out
+
+
 def main(quick: bool = False) -> dict:
     print("# TTFT (ms), analytical roofline model, batch=1, 8 chips")
     t1 = ttft_table()
@@ -572,6 +648,10 @@ if __name__ == "__main__":
     ap.add_argument("--overload", action="store_true",
                     help="toy smoke, oversubscribed pool + mixed "
                     "priorities: preemption/resume/shed accounting")
+    ap.add_argument("--arch", default=None, choices=sorted(ARCH_SMOKES),
+                    help="architecture-zoo smoke: serve one reduced "
+                    "MLA / sliding-window / SSM config through the "
+                    "layout-polymorphic paged engine")
     ap.add_argument("--n-forks", type=int, default=3,
                     help="children per fork for --fork")
     ap.add_argument("--speculate-k", type=int, default=4,
@@ -582,7 +662,7 @@ if __name__ == "__main__":
                     help="merge smoke results into this JSON file")
     args = ap.parse_args()
     if (args.paged or args.contiguous or args.speculate or args.prefix
-            or args.fork or args.quantized or args.overload):
+            or args.fork or args.quantized or args.overload or args.arch):
         if args.paged:
             bench_smoke(True, args.json)
         if args.contiguous:
@@ -597,6 +677,8 @@ if __name__ == "__main__":
             bench_quantized(args.json)
         if args.overload:
             bench_overload(args.json)
+        if args.arch:
+            bench_arch(args.arch, args.json)
     else:
         if args.metric in ("ttft", "both"):
             ttft_table()

@@ -1,4 +1,5 @@
-"""Paged KV-cache leaf marker + block-table address arithmetic.
+"""Paged KV-cache layout policy: leaf kinds, leaf marker, block-table
+address arithmetic.
 
 A paged engine cache replaces every full-length KV leaf with a block
 pool ``[..., num_blocks, block_size, ...]`` shared by all slots and
@@ -7,14 +8,62 @@ same cache pytree the dense engine uses, wrapped in ``PagedLeaf`` — a
 registered pytree node — so ``scan`` / ``vmap`` / ``jit`` thread it
 transparently and the attention decode path can tell a block pool from
 a dense ring buffer *structurally* instead of by shape heuristics.
-Ring buffers and O(1) recurrent states stay plain arrays.
+
+Every cache leaf is classified into one **layout kind** (`LeafLayout`):
+
+  ``paged``  sequence-axis leaf that grows to the full context length —
+             GQA K/V *and* MLA compressed latents — stored as a block
+             pool and addressed through the block table;
+  ``ring``   sliding-window leaf clamped at the window size — stays a
+             dense per-slot ring buffer (slot = pos % window) and gets
+             a chunked-append path via an in-chunk side buffer;
+  ``state``  O(1) recurrent state (SSM conv window / hidden state,
+             RG-LRU state) — dense per-slot rows that ride the same
+             block-table admission/reclamation machinery.
+
+Ring and state leaves are per-slot (not content-addressable), which is
+why prefix sharing and copy-on-write are capability-gated to configs
+whose leaves are all ``paged`` — see ``serving.engine.arch_capabilities``.
 """
 from __future__ import annotations
 
-from typing import Any
+from dataclasses import dataclass
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class LeafLayout:
+    """Layout policy of one cache leaf (see module docstring).
+
+    ``batch_axis`` is the per-slot axis of the dense layout; ``seq_axis``
+    is the sequence axis for ``paged``/``ring`` kinds (None for
+    ``state``).  For ``paged`` leaves the pool replaces (batch, seq)
+    with (num_blocks, block_size)."""
+
+    kind: str                        # 'paged' | 'ring' | 'state'
+    batch_axis: int
+    seq_axis: Optional[int] = None
+
+    @property
+    def pageable(self) -> bool:
+        return self.kind == "paged"
+
+
+def classify_leaf(shape, batch_axis: int, seq_axis: Optional[int],
+                  max_seq_len: int) -> LeafLayout:
+    """Classify a dense cache leaf into its layout kind.
+
+    ``seq_axis`` is the probed sequence axis (None when the shape does
+    not respond to the requested sequence length — O(1) state, or a
+    window smaller than every probe length, which serves identically)."""
+    if seq_axis is None:
+        return LeafLayout("state", batch_axis)
+    if shape[seq_axis] == max_seq_len:
+        return LeafLayout("paged", batch_axis, seq_axis)
+    return LeafLayout("ring", batch_axis, seq_axis)
 
 
 @jax.tree_util.register_pytree_node_class

@@ -195,15 +195,17 @@ def _spread(x: jax.Array, cfg: ModelConfig, par: Parallelism) -> jax.Array:
 
 def _track_layers(params_block, h, *, cfg, spec, mode, positions, pos,
                   caches, par, lengths=None, block_table=None,
-                  kv_max_len=None):
+                  kv_max_len=None, slots=None, chunk_lens=None, active=None):
     """Apply one layer per track (vmapped).  params leaves [n, ...];
-    h [n, B, S, d]; caches leaves [n, ...] or None.  ``block_table`` is
+    h [n, B, S, d]; caches leaves [n, ...] or None.  ``block_table``
+    (and the serving extras ``slots``/``chunk_lens``/``active``) are
     closure-captured, i.e. shared (broadcast) across tracks."""
     def one(p, x, c):
         return layer_apply(p, x, cfg=cfg, spec=spec, mode=mode,
                            positions=positions, pos=pos, cache=c, par=par,
                            lengths=lengths, block_table=block_table,
-                           kv_max_len=kv_max_len)
+                           kv_max_len=kv_max_len, slots=slots,
+                           chunk_lens=chunk_lens, active=active)
 
     if caches is None:
         out, cache, aux = jax.vmap(lambda p, x: one(p, x, None))(
@@ -279,7 +281,8 @@ def pt_forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
 
 
 def _pt_step(params, cache, x, pos, cfg: ModelConfig, par: Parallelism,
-             mode: str, block_table, kv_max_len=None):
+             mode: str, block_table, kv_max_len=None, slots=None,
+             chunk_lens=None, active=None):
     """Shared decode/chunk drive: track-block scan + ragged tail."""
     pt = _pt(cfg)
     spec = cfg.spec(cfg.pattern_unit[0])
@@ -299,7 +302,9 @@ def _pt_step(params, cache, x, pos, cfg: ModelConfig, par: Parallelism,
                                          mode=mode, positions=None,
                                          pos=pos, caches=cj, par=par,
                                          block_table=block_table,
-                                         kv_max_len=kv_max_len)
+                                         kv_max_len=kv_max_len, slots=slots,
+                                         chunk_lens=chunk_lens,
+                                         active=active)
                 cs.append(c)
             hf = _fuse(hh, cfg, par)
             return hf, jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *cs)
@@ -317,7 +322,8 @@ def _pt_step(params, cache, x, pos, cfg: ModelConfig, par: Parallelism,
                                      mode=mode, positions=None,
                                      pos=pos, caches=ci, par=par,
                                      block_table=block_table,
-                                     kv_max_len=kv_max_len)
+                                     kv_max_len=kv_max_len, slots=slots,
+                                     chunk_lens=chunk_lens, active=active)
             new_tail.append(c)
         h = _fuse(ht, cfg, par) if pt.fuse_final else jnp.mean(ht, axis=0)
     return h, {"blocks": new_blocks, "tail": tuple(new_tail)}
@@ -325,26 +331,31 @@ def _pt_step(params, cache, x, pos, cfg: ModelConfig, par: Parallelism,
 
 def pt_decode_step(params, cache, tokens: jax.Array, pos: jax.Array,
                    cfg: ModelConfig, par: Parallelism = NO_PARALLEL,
-                   block_table=None, kv_max_len=None):
+                   block_table=None, kv_max_len=None, active=None):
     x = _embed(params, tokens[:, None], cfg, pos[:, None], par)
     h, new_cache = _pt_step(params, cache, x, pos, cfg, par, "decode",
-                            block_table, kv_max_len)
+                            block_table, kv_max_len, active=active)
     logits = _head(params, h[:, 0], cfg, par)
     return logits, new_cache
 
 
 def pt_chunk_step(params, cache, tokens: jax.Array, pos: jax.Array,
                   cfg: ModelConfig, par: Parallelism = NO_PARALLEL,
-                  block_table=None, kv_max_len=None):
+                  block_table=None, kv_max_len=None, slots=None,
+                  chunk_lens=None):
     """Chunked-prefill / K-token verify step: tokens [B, C] appended at
-    positions pos[:, None] + arange(C) against a paged cache.  Returns
+    positions pos[:, None] + arange(C) against the cache.  Returns
     (logits [B, C, V], updated cache).  ``kv_max_len`` (static) bounds
     the paged gather to the live cache prefix — the speculative verify
-    path scores K+1 draft tokens per slot in one such forward."""
+    path scores K+1 draft tokens per slot in one such forward.  With a
+    dense cache (``block_table`` None; rows pre-gathered by the caller)
+    the same program fills the track-subset drafter's cache
+    chunk-by-chunk."""
     positions = pos[:, None] + jnp.arange(tokens.shape[1], dtype=jnp.int32)[None]
     x = _embed(params, tokens, cfg, positions, par)
     h, new_cache = _pt_step(params, cache, x, pos, cfg, par, "chunk",
-                            block_table, kv_max_len)
+                            block_table, kv_max_len, slots=slots,
+                            chunk_lens=chunk_lens)
     logits = _head(params, h, cfg, par)
     return logits, new_cache
 
@@ -392,7 +403,8 @@ def pt_draft_params(params, cfg: ModelConfig, draft_tracks: int):
 
 
 def pt_draft_step(draft_params, cache, tokens: jax.Array, pos: jax.Array,
-                  cfg_draft: ModelConfig, par: Parallelism = NO_PARALLEL):
+                  cfg_draft: ModelConfig, par: Parallelism = NO_PARALLEL,
+                  active=None):
     """One decode step of the track-subset drafter — ZERO sync points.
 
     ``cfg_draft`` is ``pt_draft_config(cfg, d)`` and ``draft_params`` the
@@ -403,7 +415,7 @@ def pt_draft_step(draft_params, cache, tokens: jax.Array, pos: jax.Array,
     K tokens costs K × (narrow forward) and no communication.
     """
     return pt_decode_step(draft_params, cache, tokens, pos, cfg_draft,
-                          par.without_axis("track"))
+                          par.without_axis("track"), active=active)
 
 
 def pt_init_cache(cfg: ModelConfig, batch: int, seq_len: int):

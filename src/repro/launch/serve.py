@@ -133,11 +133,24 @@ def main() -> None:
                  watchdog_patience=args.watchdog_patience,
                  max_preemptions=args.max_preemptions,
                  fault_plan=plan)
+    # capabilities report: one line per feature, with the gating reason
+    # whenever a feature this architecture can't serve (or a requested
+    # knob the engine had to drop) — quantization fallbacks included
+    caps = eng.capabilities()
+    if eng.runner.paged:
+        kinds = eng.runner.kv.leaf_kinds()
+        layout = ", ".join(f"{v} {k}" for k, v in sorted(kinds.items()))
+        print(f"[serve] cache layout: {layout or 'no cache leaves'}")
+    for name, c in caps.items():
+        state = ("on" if c["active"] else
+                 "off" if c["supported"] else "unsupported")
+        line = f"[serve] capability {name}: {state}"
+        if c["reason"] and (not c["supported"] or not c["active"]):
+            line += f" ({c['reason']})"
+        print(line)
     if args.speculate_k and not eng.runner.speculate_k:
-        print("[serve] --speculate-k ignored: needs a PT config with a "
-              "paged cache (full attention, no MoE/recurrent layers)")
-    for reason in eng.runner.quant_fallbacks:
-        print(f"[serve] quantization fallback: {reason}")
+        print("[serve] --speculate-k ignored: "
+              f"{caps['speculative']['reason'] or 'engine is not paged'}")
     if eng.runner.kv_dtype or eng.runner.weight_dtype:
         st = eng.runner.cache_stats()
         extra = (f", pool {st['pool_bytes'] / 1e6:.1f} MB "

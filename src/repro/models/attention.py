@@ -282,7 +282,8 @@ def attention_decode(params, x: jax.Array, cache: Tuple[jax.Array, jax.Array],
                      *, spec: LayerSpec, cfg: ModelConfig,
                      pos: jax.Array, par: Parallelism = NO_PARALLEL,
                      block_table: Optional[jax.Array] = None,
-                     kv_max_len: Optional[int] = None):
+                     kv_max_len: Optional[int] = None,
+                     active: Optional[jax.Array] = None):
     """x: [B, 1, d]; cache k/v: [B, S_cache, KH, hd] dense, or ``PagedLeaf``
     block pools [N, bs, KH, hd] addressed through ``block_table``; pos: [B]
     int32 (index of the new token).  ``kv_max_len`` (static, host-known
@@ -292,6 +293,12 @@ def attention_decode(params, x: jax.Array, cache: Tuple[jax.Array, jax.Array],
     For windowed layers the cache is a ring buffer (S_cache == window) and
     the new k/v is written at slot pos % W; otherwise at slot pos (for a
     paged cache, at the pool row the block table maps pos to).
+
+    ``active`` [B] bool (optional) freezes dense-leaf writes for inactive
+    lanes: paged leaves route inactive lanes to the trash block via the
+    masked block table, but ring/state leaves are per-slot arrays with no
+    trash row, and a slot mid-chunked-prefill must not have its ring
+    mutated by decode steps of the surrounding batch.
     """
     B = x.shape[0]
     positions = pos[:, None]                          # [B,1]
@@ -311,8 +318,8 @@ def attention_decode(params, x: jax.Array, cache: Tuple[jax.Array, jax.Array],
     G = H // KH
     ring = spec.window is not None and S_cache <= spec.window
     slot = (pos % S_cache) if ring else pos
-    k_cache = _scatter_cache(k_cache, k_new[:, 0], slot, par)
-    v_cache = _scatter_cache(v_cache, v_new[:, 0], slot, par)
+    k_cache = _scatter_cache(k_cache, k_new[:, 0], slot, par, active)
+    v_cache = _scatter_cache(v_cache, v_new[:, 0], slot, par, active)
 
     # grouped GQA einsum: the cache is contracted directly per KV head —
     # no G-fold expansion is materialized, and preferred_element_type
@@ -345,10 +352,15 @@ def attention_decode(params, x: jax.Array, cache: Tuple[jax.Array, jax.Array],
 
 
 def _scatter_cache(cache: jax.Array, new: jax.Array, slot: jax.Array,
-                   par: Parallelism) -> jax.Array:
-    """Write new [B,KH,hd] into cache [B,S,KH,hd] at per-row slot [B]."""
-    upd = cache.at[jnp.arange(cache.shape[0]), slot].set(
-        new.astype(cache.dtype))
+                   par: Parallelism,
+                   active: Optional[jax.Array] = None) -> jax.Array:
+    """Write new [B,KH,hd] into cache [B,S,KH,hd] at per-row slot [B].
+    Inactive lanes (``active`` false) keep their old row."""
+    b = jnp.arange(cache.shape[0])
+    new = new.astype(cache.dtype)
+    if active is not None:
+        new = jnp.where(active[:, None, None], new, cache[b, slot])
+    upd = cache.at[b, slot].set(new)
     return par.cs(upd, "batch", "kv_seq", "kv_heads", None)
 
 
@@ -356,28 +368,34 @@ def _scatter_cache(cache: jax.Array, new: jax.Array, slot: jax.Array,
 # paged decode / chunked prefill (block-pool caches)
 # ---------------------------------------------------------------------------
 
-def _paged_write(k_leaf: PagedLeaf, v_leaf: PagedLeaf, k_new: jax.Array,
-                 v_new: jax.Array, w_idx: jax.Array):
-    """Scatter new K/V rows into pool leaves at pool rows ``w_idx``.
-    k_new/v_new: [..., KH, hd] fp with leading dims matching w_idx.  An
-    int8 leaf (``scale is not None``) quantizes each row per token per
-    head and scatters payload + scale through the same indices.  Returns
-    the updated (k_leaf, v_leaf)."""
+def pool_write(leaf: PagedLeaf, rows: jax.Array,
+               w_idx: jax.Array) -> PagedLeaf:
+    """Scatter new rows into one pool leaf at flat pool rows ``w_idx``.
+
+    ``rows`` has leading dims matching ``w_idx`` and trailing dims equal
+    to ``leaf.pool.shape[2:]`` — [KH, hd] for K/V pools, [rank] for MLA
+    latent pools.  An int8 leaf (``scale is not None``) quantizes each
+    row over its last axis and scatters payload + scale through the same
+    indices.  Layout-polymorphic: any pageable leaf kind goes through
+    here."""
     idx = w_idx.reshape(-1)
 
-    def put(pool, rows):
+    def put(pool, r):
         flat = pool.reshape((-1,) + pool.shape[2:])
         flat = flat.at[idx].set(
-            rows.astype(flat.dtype).reshape((-1,) + rows.shape[-2:]))
+            r.astype(flat.dtype).reshape((-1,) + pool.shape[2:]))
         return flat.reshape(pool.shape)
 
-    if k_leaf.scale is not None:
-        qk, sk = quantize_rows(k_new.astype(jnp.float32))
-        qv, sv = quantize_rows(v_new.astype(jnp.float32))
-        return (PagedLeaf(put(k_leaf.pool, qk), put(k_leaf.scale, sk)),
-                PagedLeaf(put(v_leaf.pool, qv), put(v_leaf.scale, sv)))
-    return (PagedLeaf(put(k_leaf.pool, k_new)),
-            PagedLeaf(put(v_leaf.pool, v_new)))
+    if leaf.scale is not None:
+        qr, sr = quantize_rows(rows.astype(jnp.float32))
+        return PagedLeaf(put(leaf.pool, qr), put(leaf.scale, sr))
+    return PagedLeaf(put(leaf.pool, rows))
+
+
+def _paged_write(k_leaf: PagedLeaf, v_leaf: PagedLeaf, k_new: jax.Array,
+                 v_new: jax.Array, w_idx: jax.Array):
+    """Scatter new K/V rows into pool leaves at pool rows ``w_idx``."""
+    return pool_write(k_leaf, k_new, w_idx), pool_write(v_leaf, v_new, w_idx)
 
 
 def _paged_gather(pool: jax.Array, block_table: jax.Array, bs: int,
@@ -391,6 +409,24 @@ def _paged_gather(pool: jax.Array, block_table: jax.Array, bs: int,
     idx = token_to_pool(block_table, jnp.broadcast_to(j[None], (B, j.size)),
                         bs)
     return par.cs(flat[idx], "batch", "kv_seq", "kv_heads", None)
+
+
+def pool_read(leaf: PagedLeaf, block_table: jax.Array, bs: int) -> jax.Array:
+    """Gather the contiguous per-slot view [B, S_cap, ...] of one pool
+    leaf through the block table, dequantizing int8 leaves.  Trailing
+    dims follow the pool ([KH, hd] for K/V, [rank] for MLA latents)."""
+    def gather(pool):
+        flat = pool.reshape((-1,) + pool.shape[2:])
+        B, nmax = block_table.shape
+        j = jnp.arange(nmax * bs, dtype=jnp.int32)
+        idx = token_to_pool(block_table,
+                            jnp.broadcast_to(j[None], (B, j.size)), bs)
+        return flat[idx]
+
+    g = gather(leaf.pool)
+    if leaf.scale is not None:
+        g = g.astype(jnp.float32) * gather(leaf.scale)
+    return g
 
 
 def _paged_read(k_leaf: PagedLeaf, v_leaf: PagedLeaf,
@@ -468,34 +504,47 @@ def attention_chunk(params, x: jax.Array, cache, *, spec: LayerSpec,
                     cfg: ModelConfig, pos: jax.Array,
                     par: Parallelism = NO_PARALLEL,
                     block_table: Optional[jax.Array] = None,
-                    kv_max_len: Optional[int] = None):
-    """Chunked-prefill / multi-token verify step: C new tokens per row
-    against a paged cache.
+                    kv_max_len: Optional[int] = None,
+                    slots: Optional[jax.Array] = None,
+                    chunk_lens: Optional[jax.Array] = None):
+    """Chunked-prefill / multi-token verify step: C new tokens per row.
 
-    x: [B, C, d]; cache: (PagedLeaf, PagedLeaf) pools; pos: [B] absolute
-    position of each row's first chunk token.  Writes the chunk's K/V
-    through the block table, then attends every chunk row causally against
-    the full paged cache (which now contains the chunk itself) — the C=1
-    decode step generalized to a block of queries.  Two callers: chunked
-    prefill (a long prompt fed ``prefill_chunk`` tokens at a time between
-    decode steps) and speculative verify (K draft tokens + the carry token
-    scored in one forward, per-position logits).
+    x: [B, C, d]; pos: [B] absolute position of each row's first chunk
+    token.  Three cache layouts, dispatched structurally:
+
+    * **paged** — cache: (PagedLeaf, PagedLeaf) pools.  Writes the
+      chunk's K/V through the block table, then attends every chunk row
+      causally against the full paged cache (which now contains the
+      chunk itself) — the C=1 decode step generalized to a block of
+      queries.  Two callers: chunked prefill (a long prompt fed
+      ``prefill_chunk`` tokens at a time between decode steps) and
+      speculative verify (K draft tokens + the carry token scored in one
+      forward, per-position logits).
+    * **ring** (sliding-window) — cache: dense per-slot ring buffers
+      [n_slots, W, KH, hd].  The chunk attends to the gathered ring
+      content *plus an in-chunk K/V side buffer* (the chunk's own keys),
+      so no ring unroll to full length is ever materialized; then the
+      last in-window *valid* token per ring slot is written back
+      (``chunk_lens`` [B] gives per-row valid token counts so a padded
+      final chunk never evicts real window entries).  ``slots`` [B] maps
+      chunk rows to engine slots.
+    * **dense full** — cache: [B, S_max, KH, hd] rows aligned with x
+      (no ``slots``).  Scatters the chunk at its absolute positions and
+      attends causally — the multi-token append path that fills the
+      speculative drafter's dense cache chunk-by-chunk.
 
     ``kv_max_len`` (static, host-known bound on pos + C) truncates the
-    gathered cache view to the live prefix — bitwise-neutral (the dropped
+    paged gather to the live prefix — bitwise-neutral (the dropped
     columns are causally masked, and masked columns contribute exact
     zeros to the online softmax) but skips dead-block bandwidth.  Writes
     always go through the full table so out-of-range positions land in
     the trash block.
 
-    Full-attention (non-ring) layers only: chunked prefill is gated off
-    for windowed/recurrent/MoE architectures by the engine.  Rows past a
-    prompt's true length write to already-owned or trash blocks and their
-    key positions exceed every real query position, so padding in the
-    final chunk is invisible — exactly the bucketed-prefill argument.
+    Rows past a prompt's true length write to already-owned or trash
+    blocks (paged) or are dropped (ring/dense), and their key positions
+    exceed every real query position, so padding in the final chunk is
+    invisible — exactly the bucketed-prefill argument.
     """
-    if block_table is None:
-        raise ValueError("attention_chunk requires a block_table")
     B, C, _ = x.shape
     positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None]  # [B,C]
     rope_positions = positions
@@ -503,7 +552,20 @@ def attention_chunk(params, x: jax.Array, cache, *, spec: LayerSpec,
         rope_positions = jnp.broadcast_to(positions[None], (3, B, C))
     q, k_new, v_new = _project_qkv(params, x, spec, cfg, rope_positions, par)
     H = q.shape[2]
-    k_leaf, v_leaf = cache
+    k_cache, v_cache = cache
+    if not is_paged(k_cache):
+        ring = spec.window is not None and k_cache.shape[1] <= spec.window
+        f = _ring_chunk if ring else _dense_chunk
+        ctx, new_cache = f(q, k_new, v_new, k_cache, v_cache, spec=spec,
+                           pos=pos, positions=positions, slots=slots,
+                           chunk_lens=chunk_lens)
+        out = jnp.einsum("bchk,hkd->bcd", ctx.astype(x.dtype),
+                         dq(params["wo"]))
+        return par.cs(out, "batch", None, "d_model"), new_cache
+    if block_table is None:
+        raise ValueError("attention_chunk on a paged cache requires a "
+                         "block_table")
+    k_leaf, v_leaf = k_cache, v_cache
     bs = k_leaf.pool.shape[1]
     KH = k_leaf.pool.shape[2]
     G = H // KH
@@ -522,6 +584,8 @@ def attention_chunk(params, x: jax.Array, cache, *, spec: LayerSpec,
     s = _softcap(s, spec.attn_logit_softcap)
     j = jnp.arange(S_cap, dtype=jnp.int32)
     mask = j[None, None, :] <= positions[:, :, None]             # [B,C,S]
+    if spec.window is not None:
+        mask &= j[None, None, :] > positions[:, :, None] - spec.window
     s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
     s = par.cs(s, "batch", None, None, None, "kv_seq")
     m = jnp.max(s, axis=-1, keepdims=True)
@@ -533,6 +597,93 @@ def attention_chunk(params, x: jax.Array, cache, *, spec: LayerSpec,
     out = jnp.einsum("bchk,hkd->bcd", ctx, dq(params["wo"]))
     out = par.cs(out, "batch", None, "d_model")
     return out, new_cache
+
+
+def _grouped_softmax_ctx(q, k_src, v_src, mask, softcap):
+    """Masked grouped-GQA attention for side-buffer chunk paths.
+    q: [B,C,H,hd]; k_src/v_src: [B,S,KH,hd]; mask: [B,C,S].
+    Returns ctx [B,C,H,dv] fp32."""
+    B, C, H, hd = q.shape
+    KH = k_src.shape[2]
+    G = H // KH
+    scale = hd ** -0.5
+    qg = (q * scale).astype(jnp.float32).reshape(B, C, KH, G, hd)
+    s = jnp.einsum("bcngd,bsnd->bcngs", qg, k_src.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    ctx = jnp.einsum("bcngs,bsnd->bcngd", p / l,
+                     v_src.astype(jnp.float32))
+    return ctx.reshape(B, C, H, -1)
+
+
+def _ring_chunk(q, k_new, v_new, k_cache, v_cache, *, spec, pos, positions,
+                slots, chunk_lens):
+    """Chunked append against a sliding-window ring buffer.
+
+    The chunk's queries attend to (gathered ring content ⊕ the chunk's
+    own K/V as an in-chunk side buffer); afterwards, for each ring slot
+    j, the latest *valid* chunk token with position % W == j replaces
+    the old entry.  Padded tail tokens (index >= chunk_lens[b]) are
+    causally invisible to real queries and never written."""
+    if chunk_lens is None:
+        chunk_lens = jnp.full(pos.shape, positions.shape[1], jnp.int32)
+    k_rows = k_cache if slots is None else k_cache[slots]    # [B,W,KH,hd]
+    v_rows = v_cache if slots is None else v_cache[slots]
+    B, C = positions.shape
+    W = k_rows.shape[1]
+    j = jnp.arange(W, dtype=jnp.int32)[None, :]
+    # absolute position held by ring slot j before this chunk
+    last_old = pos[:, None] - 1                              # [B,1]
+    p_j = last_old - ((last_old - j) % W)                    # [B,W]
+    src_pos = jnp.concatenate([p_j, positions], axis=1)      # [B,W+C]
+    src_ok = jnp.concatenate(
+        [p_j >= 0, jnp.ones((B, C), bool)], axis=1)
+    k_src = jnp.concatenate([k_rows, k_new.astype(k_rows.dtype)], axis=1)
+    v_src = jnp.concatenate([v_rows, v_new.astype(v_rows.dtype)], axis=1)
+    mask = (src_ok[:, None, :]
+            & (src_pos[:, None, :] <= positions[:, :, None])
+            & (src_pos[:, None, :] > positions[:, :, None] - spec.window))
+    ctx = _grouped_softmax_ctx(q, k_src, v_src, mask,
+                               spec.attn_logit_softcap)
+    # --- write back: latest valid position per ring slot
+    last = pos[:, None] + chunk_lens[:, None] - 1            # [B,1]
+    q_new = last - ((last - j) % W)                          # [B,W]
+    from_chunk = q_new >= pos[:, None]
+    idx = jnp.clip(q_new - pos[:, None], 0, C - 1)[..., None, None]
+    k_upd = jnp.take_along_axis(k_new.astype(k_rows.dtype), idx, axis=1)
+    v_upd = jnp.take_along_axis(v_new.astype(v_rows.dtype), idx, axis=1)
+    sel = from_chunk[..., None, None]
+    k_rows = jnp.where(sel, k_upd, k_rows)
+    v_rows = jnp.where(sel, v_upd, v_rows)
+    if slots is None:
+        return ctx, (k_rows, v_rows)
+    return ctx, (k_cache.at[slots].set(k_rows),
+                 v_cache.at[slots].set(v_rows))
+
+
+def _dense_chunk(q, k_new, v_new, k_cache, v_cache, *, spec, pos, positions,
+                 slots, chunk_lens):
+    """Multi-token append against a dense full-attention cache whose rows
+    align with the chunk batch (the speculative drafter's cache, gathered
+    per request).  Out-of-range padded positions are dropped."""
+    del chunk_lens, slots             # rows are pre-gathered by the caller
+    B, C = positions.shape
+    bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    k_cache = k_cache.at[bidx, positions].set(
+        k_new.astype(k_cache.dtype), mode="drop")
+    v_cache = v_cache.at[bidx, positions].set(
+        v_new.astype(v_cache.dtype), mode="drop")
+    S = k_cache.shape[1]
+    jj = jnp.arange(S, dtype=jnp.int32)
+    mask = jj[None, None, :] <= positions[:, :, None]
+    if spec.window is not None:
+        mask &= jj[None, None, :] > positions[:, :, None] - spec.window
+    ctx = _grouped_softmax_ctx(q, k_cache, v_cache, mask,
+                               spec.attn_logit_softcap)
+    return ctx, (k_cache, v_cache)
 
 
 # ---------------------------------------------------------------------------

@@ -238,7 +238,8 @@ def lm_forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 
 def _step_layers(params, cache, h, pos, cfg: ModelConfig, par: Parallelism,
-                 mode: str, block_table, kv_max_len=None):
+                 mode: str, block_table, kv_max_len=None, slots=None,
+                 chunk_lens=None, active=None):
     """Run the (prefix, unit-scan, suffix) stack in decode or chunk mode."""
     new_prefix = []
     for i, nm in enumerate(cfg.pattern_prefix):
@@ -246,7 +247,8 @@ def _step_layers(params, cache, h, pos, cfg: ModelConfig, par: Parallelism,
                               spec=cfg.spec(nm), mode=mode, pos=pos,
                               cache=cache["prefix"][i], par=par,
                               block_table=block_table,
-                              kv_max_len=kv_max_len)
+                              kv_max_len=kv_max_len, slots=slots,
+                              chunk_lens=chunk_lens, active=active)
         new_prefix.append(c)
 
     new_unit = cache["unit"]
@@ -259,7 +261,8 @@ def _step_layers(params, cache, h, pos, cfg: ModelConfig, par: Parallelism,
                                       mode=mode, pos=pos,
                                       cache=cs_in[j], par=par,
                                       block_table=block_table,
-                                      kv_max_len=kv_max_len)
+                                      kv_max_len=kv_max_len, slots=slots,
+                                      chunk_lens=chunk_lens, active=active)
                 cs_out.append(c)
             return x, tuple(cs_out)
 
@@ -271,7 +274,8 @@ def _step_layers(params, cache, h, pos, cfg: ModelConfig, par: Parallelism,
                               spec=cfg.spec(nm), mode=mode, pos=pos,
                               cache=cache["suffix"][i], par=par,
                               block_table=block_table,
-                              kv_max_len=kv_max_len)
+                              kv_max_len=kv_max_len, slots=slots,
+                              chunk_lens=chunk_lens, active=active)
         new_suffix.append(c)
     return h, {"prefix": tuple(new_prefix), "unit": new_unit,
                "suffix": tuple(new_suffix)}
@@ -280,14 +284,17 @@ def _step_layers(params, cache, h, pos, cfg: ModelConfig, par: Parallelism,
 def lm_decode_step(params, cache, tokens: jax.Array, pos: jax.Array,
                    cfg: ModelConfig, par: Parallelism = NO_PARALLEL,
                    block_table: Optional[jax.Array] = None,
-                   kv_max_len: Optional[int] = None):
+                   kv_max_len: Optional[int] = None,
+                   active: Optional[jax.Array] = None):
     """tokens: [B] int32; pos: [B] int32 (cache write index).
     ``block_table`` [B, max_blocks_per_seq] addresses paged cache leaves;
-    ``kv_max_len`` (static) bounds the paged kernel's block sweep.
+    ``kv_max_len`` (static) bounds the paged kernel's block sweep;
+    ``active`` [B] bool freezes dense ring/state leaf writes of inactive
+    lanes (paged leaves already route them to the trash block).
     Returns (logits [B, V], updated cache)."""
     h = _embed(params, tokens[:, None], cfg, pos[:, None], par)
     h, new_cache = _step_layers(params, cache, h, pos, cfg, par, "decode",
-                                block_table, kv_max_len)
+                                block_table, kv_max_len, active=active)
     logits = _head(params, h[:, 0], cfg, par)
     return logits, new_cache
 
@@ -295,20 +302,28 @@ def lm_decode_step(params, cache, tokens: jax.Array, pos: jax.Array,
 def lm_chunk_step(params, cache, tokens: jax.Array, pos: jax.Array,
                   cfg: ModelConfig, par: Parallelism = NO_PARALLEL,
                   block_table: Optional[jax.Array] = None,
-                  kv_max_len: Optional[int] = None):
+                  kv_max_len: Optional[int] = None,
+                  slots: Optional[jax.Array] = None,
+                  chunk_lens: Optional[jax.Array] = None):
     """Chunked-prefill / K-token verify step: tokens [B, C] appended at
-    positions pos[:, None] + arange(C) against a paged cache.  Returns
-    (logits [B, C, V], updated cache) — per-position logits, so the same
-    program scores a speculative draft (C = K+1) or streams a prompt
-    chunk.  ``kv_max_len`` (static) bounds the paged gather to the live
-    cache prefix.  Full-attention archs only (the engine gates
-    recurrent/MoE/windowed configs to whole-prompt prefill).
+    positions pos[:, None] + arange(C) against the serving cache.
+    Returns (logits [B, C, V], updated cache) — per-position logits, so
+    the same program scores a speculative draft (C = K+1) or streams a
+    prompt chunk.
+
+    Layout-polymorphic: paged leaves (GQA K/V, MLA latents) write through
+    ``block_table``; ring leaves (sliding-window K/V) and state leaves
+    (SSM / RG-LRU) advance their per-slot rows at ``slots`` by
+    ``chunk_lens`` valid tokens (padded tails of a final chunk do
+    identity updates).  ``kv_max_len`` (static) bounds the paged gather
+    to the live cache prefix.
     """
     B, C = tokens.shape
     positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
     h = _embed(params, tokens, cfg, positions, par)
     h, new_cache = _step_layers(params, cache, h, pos, cfg, par, "chunk",
-                                block_table, kv_max_len)
+                                block_table, kv_max_len, slots=slots,
+                                chunk_lens=chunk_lens)
     logits = _head(params, h, cfg, par)
     return logits, new_cache
 

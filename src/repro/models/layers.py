@@ -63,42 +63,86 @@ def _norm(cfg, params, name, x):
     return apply_norm(cfg.norm, params[name], x, eps=cfg.norm_eps)
 
 
+def _gathered_rows(cache, slots):
+    """Per-slot state leaves -> chunk-batch rows (identity when slots is
+    None, i.e. rows already align with the batch)."""
+    if slots is None:
+        return cache
+    return jax.tree_util.tree_map(lambda l: l[slots], cache)
+
+
+def _scattered_rows(cache, new_rows, slots):
+    """Write updated chunk-batch state rows back at their slots."""
+    if slots is None:
+        return new_rows
+    return jax.tree_util.tree_map(
+        lambda l, r: l.at[slots].set(r.astype(l.dtype)), cache, new_rows)
+
+
 def _mixer(params, h, *, cfg, spec, mode, positions, pos, cache, par,
-           lengths=None, block_table=None, kv_max_len=None):
-    """Dispatch the sequence mixer. Returns (out, new_cache)."""
+           lengths=None, block_table=None, kv_max_len=None,
+           slots=None, chunk_lens=None, active=None):
+    """Dispatch the sequence mixer. Returns (out, new_cache).
+
+    'chunk' mode is layout-polymorphic: paged leaves (GQA K/V, MLA
+    latents) write through the block table; ring leaves (sliding-window
+    K/V) and state leaves (SSM / RG-LRU) are per-slot dense rows, so the
+    chunk batch gathers its rows at ``slots``, advances them by
+    ``chunk_lens`` valid tokens, and scatters them back.  'decode' mode
+    threads ``active`` so lanes mid-chunked-prefill keep their dense
+    rows frozen."""
     if spec.mixer == "gqa":
         if mode == "decode":
             return attn.attention_decode(params, h, cache, spec=spec,
                                          cfg=cfg, pos=pos, par=par,
                                          block_table=block_table,
-                                         kv_max_len=kv_max_len)
+                                         kv_max_len=kv_max_len,
+                                         active=active)
         if mode == "chunk":
             return attn.attention_chunk(params, h, cache, spec=spec,
                                         cfg=cfg, pos=pos, par=par,
                                         block_table=block_table,
-                                        kv_max_len=kv_max_len)
+                                        kv_max_len=kv_max_len,
+                                        slots=slots, chunk_lens=chunk_lens)
         return attn.attention_apply(params, h, spec=spec, cfg=cfg,
                                     positions=positions, par=par,
                                     return_cache=(mode == "prefill"),
                                     lengths=lengths)
-    if mode == "chunk":
-        raise ValueError(f"chunked prefill unsupported for mixer "
-                         f"{spec.mixer!r}")
     if spec.mixer == "mla":
         if mode == "decode":
             return mla_lib.mla_decode(params, h, cache, spec=spec, cfg=cfg,
-                                      pos=pos, par=par)
+                                      pos=pos, par=par,
+                                      block_table=block_table,
+                                      kv_max_len=kv_max_len)
+        if mode == "chunk":
+            return mla_lib.mla_chunk(params, h, cache, spec=spec, cfg=cfg,
+                                     pos=pos, par=par,
+                                     block_table=block_table,
+                                     kv_max_len=kv_max_len)
         return mla_lib.mla_apply(params, h, spec=spec, cfg=cfg,
                                  positions=positions, par=par,
                                  return_cache=(mode == "prefill"))
     if spec.mixer == "mamba":
         if mode == "decode":
-            return ssm_lib.ssm_decode(params, h, cache, cfg=cfg, par=par)
+            return ssm_lib.ssm_decode(params, h, cache, cfg=cfg, par=par,
+                                      active=active)
+        if mode == "chunk":
+            rows = _gathered_rows(cache, slots)
+            out, new_rows = ssm_lib.ssm_chunk(params, h, rows, cfg=cfg,
+                                              par=par, chunk_lens=chunk_lens)
+            return out, _scattered_rows(cache, new_rows, slots)
         return ssm_lib.ssm_apply(params, h, cfg=cfg, par=par,
                                  return_cache=(mode == "prefill"))
     if spec.mixer == "rglru":
         if mode == "decode":
-            return rglru_lib.rglru_decode(params, h, cache, cfg=cfg, par=par)
+            return rglru_lib.rglru_decode(params, h, cache, cfg=cfg, par=par,
+                                          active=active)
+        if mode == "chunk":
+            rows = _gathered_rows(cache, slots)
+            out, new_rows = rglru_lib.rglru_chunk(params, h, rows, cfg=cfg,
+                                                  par=par,
+                                                  chunk_lens=chunk_lens)
+            return out, _scattered_rows(cache, new_rows, slots)
         return rglru_lib.rglru_apply(params, h, cfg=cfg, par=par,
                                      return_cache=(mode == "prefill"))
     raise ValueError(f"unknown mixer {spec.mixer!r}")
@@ -113,7 +157,10 @@ def layer_apply(params, x: jax.Array, *, cfg: ModelConfig, spec: LayerSpec,
                 par: Parallelism = NO_PARALLEL,
                 lengths: Optional[jax.Array] = None,
                 block_table: Optional[jax.Array] = None,
-                kv_max_len: Optional[int] = None):
+                kv_max_len: Optional[int] = None,
+                slots: Optional[jax.Array] = None,
+                chunk_lens: Optional[jax.Array] = None,
+                active: Optional[jax.Array] = None):
     """One transformer layer. Returns (x, cache, aux).
 
     For cross-attention layers the cache is (self_cache, enc_kv): the
@@ -125,7 +172,10 @@ def layer_apply(params, x: jax.Array, *, cfg: ModelConfig, spec: LayerSpec,
     batch (bucketed serving); only ring-buffer cache construction uses it.
     ``block_table`` [B, max_blocks_per_seq] addresses paged cache leaves
     in decode/chunk mode (mode 'chunk' = multi-token chunked prefill
-    against the cache; gqa layers only).
+    against the cache — any mixer).  ``slots`` [B] maps chunk rows to
+    engine slots for per-slot ring/state leaves; ``chunk_lens`` [B]
+    gives valid token counts of a padded final chunk; ``active`` [B]
+    bool freezes dense-leaf writes of inactive decode lanes.
     """
     aux = jnp.zeros((), jnp.float32)
     self_cache, enc_kv = (cache if (spec.cross_attn and cache is not None)
@@ -135,7 +185,8 @@ def layer_apply(params, x: jax.Array, *, cfg: ModelConfig, spec: LayerSpec,
     h, new_cache = _mixer(params["mixer"], h, cfg=cfg, spec=spec, mode=mode,
                           positions=positions, pos=pos, cache=self_cache,
                           par=par, lengths=lengths, block_table=block_table,
-                          kv_max_len=kv_max_len)
+                          kv_max_len=kv_max_len, slots=slots,
+                          chunk_lens=chunk_lens, active=active)
     if cfg.post_norm:
         h = _norm(cfg, params, "ln1_post", h)
     x = x + h

@@ -4,17 +4,27 @@ Train/prefill: decompress the latent KV and run standard chunked attention.
 Decode: "absorbed" form — scores and context are computed directly against
 the compressed cache (c_kv, k_rope), so the per-token cache is just
 kv_lora_rank + qk_rope_head_dim floats (no per-head KV).
+
+The compressed cache is layout-polymorphic: dense per-slot arrays
+(c_kv [B, S, r], k_rope [B, S, rr]) or **paged latent pools**
+([N, block_size, r] ``PagedLeaf`` leaves addressed through the engine's
+block table) — one compressed latent pool per layer instead of K/V
+pairs, so a paged MLA block costs (r + rr) floats per token against
+2·KH·hd for GQA.  The absorbed decode/chunk read gathers the per-slot
+latent view through the table and contracts it directly.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.common.paged import PagedLeaf, is_paged, token_to_pool
 from repro.common.types import LayerSpec, ModelConfig
 from repro.models import rope as rope_lib
-from repro.models.attention import NEG_INF, _softcap, blockwise_attention
+from repro.models.attention import (NEG_INF, _softcap, blockwise_attention,
+                                    pool_read, pool_write)
 from repro.models.norms import rmsnorm, rmsnorm_init
 from repro.runtime.parallel import Parallelism, NO_PARALLEL
 
@@ -111,8 +121,12 @@ def mla_apply(params, x: jax.Array, *, spec: LayerSpec, cfg: ModelConfig,
 
 def mla_decode(params, x: jax.Array, cache: Tuple[jax.Array, jax.Array], *,
                spec: LayerSpec, cfg: ModelConfig, pos: jax.Array,
-               par: Parallelism = NO_PARALLEL):
-    """Absorbed MLA decode. x: [B,1,d]; cache (c_kv [B,S,r], k_rope [B,S,rr]).
+               par: Parallelism = NO_PARALLEL,
+               block_table: Optional[jax.Array] = None,
+               kv_max_len: Optional[int] = None):
+    """Absorbed MLA decode. x: [B,1,d]; cache (c_kv [B,S,r], k_rope [B,S,rr])
+    dense, or ``PagedLeaf`` latent pools ([N,bs,r], [N,bs,rr]) addressed
+    through ``block_table``.
 
     q̃ = q_nope·W_uk lives in latent space; scores/context contract against
     the compressed cache directly (flash-decode over the 'model'-sharded
@@ -124,6 +138,12 @@ def mla_decode(params, x: jax.Array, cache: Tuple[jax.Array, jax.Array], *,
     q_nope, q_rope = _q_proj(params, x, cfg, positions, par)   # [B,1,H,*]
     c_new, kr_new = _kv_latent(params, x, cfg, positions, par)
     c_cache, kr_cache = cache
+    if is_paged(c_cache):
+        return _mla_paged(params, q_nope, q_rope, c_new, kr_new,
+                          c_cache, kr_cache, spec=spec, cfg=cfg,
+                          positions=positions, par=par,
+                          block_table=block_table, kv_max_len=kv_max_len,
+                          out_dtype=x.dtype, single=True)
     S = c_cache.shape[1]
     bidx = jnp.arange(B)
     c_cache = c_cache.at[bidx, pos].set(c_new[:, 0].astype(c_cache.dtype))
@@ -157,3 +177,100 @@ def mla_decode(params, x: jax.Array, cache: Tuple[jax.Array, jax.Array], *,
     out = jnp.einsum("bhv,hvd->bd", v_heads, params["wo"])[:, None]
     out = par.cs(out, "batch", None, "d_model")
     return out, (c_cache, kr_cache)
+
+
+def mla_chunk(params, x: jax.Array, cache, *, spec: LayerSpec,
+              cfg: ModelConfig, pos: jax.Array,
+              par: Parallelism = NO_PARALLEL,
+              block_table: Optional[jax.Array] = None,
+              kv_max_len: Optional[int] = None):
+    """Chunked-prefill / multi-token verify step against paged latent
+    pools: C new tokens per row written through the block table, scored
+    in the absorbed form against the gathered latent view."""
+    B, C, _ = x.shape
+    positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None]  # [B,C]
+    q_nope, q_rope = _q_proj(params, x, cfg, positions, par)
+    c_new, kr_new = _kv_latent(params, x, cfg, positions, par)
+    c_cache, kr_cache = cache
+    if not is_paged(c_cache):
+        raise ValueError("mla_chunk requires paged latent pools")
+    return _mla_paged(params, q_nope, q_rope, c_new, kr_new,
+                      c_cache, kr_cache, spec=spec, cfg=cfg,
+                      positions=positions, par=par, block_table=block_table,
+                      kv_max_len=kv_max_len, out_dtype=x.dtype, single=False)
+
+
+def _mla_paged(params, q_nope, q_rope, c_new, kr_new, c_leaf: PagedLeaf,
+               kr_leaf: PagedLeaf, *, spec: LayerSpec, cfg: ModelConfig,
+               positions: jax.Array, par: Parallelism,
+               block_table: Optional[jax.Array],
+               kv_max_len: Optional[int], out_dtype, single: bool):
+    """Absorbed MLA read against paged latent pools.
+
+    positions: [B, C] absolute positions of the new tokens (C == 1 for
+    decode).  Writes the new latents through the block table, gathers the
+    per-slot [B, S_cap, r] view (dequantizing int8 latent pools), and
+    runs the same absorbed-form contractions as the dense decode path —
+    the extra gathered columns beyond the live prefix are causally
+    masked and contribute exact zeros, so paged and dense decode agree
+    bitwise."""
+    if block_table is None:
+        raise ValueError("paged MLA cache requires a block_table")
+    m = cfg.mla
+    bs = c_leaf.pool.shape[1]
+    w_idx = token_to_pool(block_table, positions, bs)            # [B,C]
+    c_leaf = pool_write(c_leaf, c_new, w_idx)
+    kr_leaf = pool_write(kr_leaf, kr_new, w_idx)
+    new_cache = (c_leaf, kr_leaf)
+    read_table = block_table
+    if kv_max_len is not None:
+        read_table = block_table[:, :-(-kv_max_len // bs)]
+    c_g = pool_read(c_leaf, read_table, bs)                      # [B,S,r]
+    kr_g = pool_read(kr_leaf, read_table, bs)
+    c_g = par.cs(c_g, "batch", "kv_seq", None)
+    kr_g = par.cs(kr_g, "batch", "kv_seq", None)
+    S = c_g.shape[1]
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    j = jnp.arange(S, dtype=jnp.int32)
+    if single:
+        pos = positions[:, 0]
+        q_abs = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], params["w_uk"],
+                           preferred_element_type=jnp.float32)
+        s = (jnp.einsum("bhr,bsr->bhs", q_abs.astype(c_g.dtype), c_g,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bhk,bsk->bhs", q_rope[:, 0].astype(kr_g.dtype),
+                          kr_g, preferred_element_type=jnp.float32)) * scale
+        s = _softcap(s, spec.attn_logit_softcap)
+        s = jnp.where((j[None, :] <= pos[:, None])[:, None, :], s, NEG_INF)
+        s = par.cs(s, "batch", None, "kv_seq")
+        mx = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - mx)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        ctx_c = jnp.einsum("bhs,bsr->bhr", (p / l).astype(c_g.dtype), c_g,
+                           preferred_element_type=jnp.float32)
+        v_heads = jnp.einsum("bhr,rhv->bhv", ctx_c.astype(out_dtype),
+                             params["w_uv"],
+                             preferred_element_type=jnp.float32
+                             ).astype(out_dtype)
+        out = jnp.einsum("bhv,hvd->bd", v_heads, params["wo"])[:, None]
+        return par.cs(out, "batch", None, "d_model"), new_cache
+    q_abs = jnp.einsum("bchk,rhk->bchr", q_nope, params["w_uk"],
+                       preferred_element_type=jnp.float32)
+    s = (jnp.einsum("bchr,bsr->bchs", q_abs.astype(c_g.dtype), c_g,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bchk,bsk->bchs", q_rope.astype(kr_g.dtype), kr_g,
+                      preferred_element_type=jnp.float32)) * scale
+    s = _softcap(s, spec.attn_logit_softcap)
+    mask = j[None, None, :] <= positions[:, :, None]             # [B,C,S]
+    s = jnp.where(mask[:, :, None, :], s, NEG_INF)
+    s = par.cs(s, "batch", None, None, "kv_seq")
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - mx)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    ctx_c = jnp.einsum("bchs,bsr->bchr", (p / l).astype(c_g.dtype), c_g,
+                       preferred_element_type=jnp.float32)
+    v_heads = jnp.einsum("bchr,rhv->bchv", ctx_c.astype(out_dtype),
+                         params["w_uv"],
+                         preferred_element_type=jnp.float32).astype(out_dtype)
+    out = jnp.einsum("bchv,hvd->bcd", v_heads, params["wo"])
+    return par.cs(out, "batch", None, "d_model"), new_cache

@@ -97,9 +97,48 @@ def rglru_apply(params, x: jax.Array, *, cfg: ModelConfig,
     return out, cache
 
 
+def rglru_chunk(params, x: jax.Array, cache, *, cfg: ModelConfig,
+                par: Parallelism = NO_PARALLEL, chunk_lens=None):
+    """Chunked-prefill step: C tokens appended to carried RG-LRU state.
+
+    x: [B, C, d]; cache = (conv_state [B, dc-1, di], h [B, di]) rows for
+    the chunk batch.  Same contract as ``ssm_chunk``: the conv carry
+    seeds the depthwise conv, h seeds the scan, and padded tail
+    positions (index >= ``chunk_lens[b]``) do identity updates and stay
+    out of the conv carry."""
+    r = cfg.rglru
+    B, C, _ = x.shape
+    conv_state, h0 = cache
+    u = x @ params["w_rec"]
+    u = par.cs(u, "batch", None, "d_inner")
+    gate = jax.nn.gelu((x @ params["w_gate"]).astype(jnp.float32),
+                       approximate=True).astype(x.dtype)
+    gate = par.cs(gate, "batch", None, "d_inner")
+    dc = params["conv_w"].shape[0]
+    w = params["conv_w"]
+    ufull = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    y = sum(ufull[:, i:i + C] * w[i][None, None, :] for i in range(dc))
+    xc = (y + params["conv_b"][None, None, :]).astype(x.dtype)
+    a, mult, inp = _gates(params, xc, cfg)
+    b = mult * (inp * xc.astype(jnp.float32))
+    if chunk_lens is not None:
+        valid = jnp.arange(C, dtype=jnp.int32)[None] < chunk_lens[:, None]
+        a = jnp.where(valid[..., None], a, 1.0)
+        b = jnp.where(valid[..., None], b, 0.0)
+    h, h_last = _chunked_linear_scan(a, b, h0.astype(jnp.float32), r.chunk)
+    out = (h.astype(x.dtype) * gate) @ params["w_out"]
+    out = par.cs(out, "batch", None, "d_model")
+    lens = (jnp.full((B,), C, jnp.int32) if chunk_lens is None
+            else chunk_lens.astype(jnp.int32))
+    idx = lens[:, None] + jnp.arange(dc - 1, dtype=jnp.int32)[None, :]
+    conv_new = jnp.take_along_axis(ufull, idx[..., None], axis=1)
+    return out, (conv_new.astype(conv_state.dtype), h_last)
+
+
 def rglru_decode(params, x: jax.Array, cache, *, cfg: ModelConfig,
-                 par: Parallelism = NO_PARALLEL):
-    """x: [B,1,d]; cache=(conv_state, h [B,di])."""
+                 par: Parallelism = NO_PARALLEL, active=None):
+    """x: [B,1,d]; cache=(conv_state, h [B,di]).  ``active`` [B] bool
+    (optional) freezes the state of inactive lanes."""
     conv_state, h = cache
     u = x[:, 0] @ params["w_rec"]
     u = par.cs(u, "batch", "d_inner")
@@ -109,7 +148,11 @@ def rglru_decode(params, x: jax.Array, cache, *, cfg: ModelConfig,
     xc = (jnp.einsum("bci,ci->bi", window.astype(jnp.float32),
                      params["conv_w"]) + params["conv_b"]).astype(x.dtype)
     a, mult, inp = _gates(params, xc, cfg)
-    h = a * h + mult * (inp * xc.astype(jnp.float32))
-    out = ((h.astype(x.dtype) * gate) @ params["w_out"])[:, None]
+    h_new = a * h + mult * (inp * xc.astype(jnp.float32))
+    out = ((h_new.astype(x.dtype) * gate) @ params["w_out"])[:, None]
     out = par.cs(out, "batch", None, "d_model")
-    return out, (window[:, 1:], h)
+    win_new = window[:, 1:]
+    if active is not None:
+        h_new = jnp.where(active[:, None], h_new, h)
+        win_new = jnp.where(active[:, None, None], win_new, conv_state)
+    return out, (win_new, h_new)

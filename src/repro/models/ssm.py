@@ -124,9 +124,74 @@ def ssm_apply(params, x: jax.Array, *, cfg: ModelConfig,
     return out, cache
 
 
+def ssm_chunk(params, x: jax.Array, cache, *, cfg: ModelConfig,
+              par: Parallelism = NO_PARALLEL, chunk_lens=None):
+    """Chunked-prefill step: C tokens appended to carried recurrent state.
+
+    x: [B, C, d]; cache = (conv_state [B, dc-1, di], h [B, di, ds]) rows
+    for the chunk batch (gathered per slot by the caller).  The carry
+    replaces the zero left-pad of the whole-prompt conv with the previous
+    chunk's last dc-1 inputs, and h seeds the scan, so consecutive chunks
+    compose to the full-prompt recurrence.
+
+    ``chunk_lens`` [B] gives per-row valid token counts: padded tail
+    positions of a final chunk perform *identity* state updates
+    (a=1, b=0) and never enter the conv carry, so right-padding cannot
+    corrupt the recurrent state — the chunked analogue of exact-length
+    prefill.
+    """
+    s = cfg.ssm
+    B, C, _ = x.shape
+    di, ds = s.d_inner, s.d_state
+    conv_state, h0 = cache
+    xz = x @ params["in_proj"]
+    xz = par.cs(xz, "batch", None, "d_inner")
+    xr, z = xz[..., :di], xz[..., di:]
+    dc = params["conv_w"].shape[0]
+    w = params["conv_w"]
+    xfull = jnp.concatenate([conv_state.astype(xr.dtype), xr], axis=1)
+    y = sum(xfull[:, i:i + C] * w[i][None, None, :] for i in range(dc))
+    xc = jax.nn.silu(y + params["conv_b"][None, None, :])
+
+    dtr = params["dt_w"].shape[0]
+    x_dbl = xc @ params["x_proj"]
+    dt_in, Bt, Ct = (x_dbl[..., :dtr], x_dbl[..., dtr:dtr + ds],
+                     x_dbl[..., dtr + ds:])
+    dt = jax.nn.softplus(
+        (dt_in @ params["dt_w"]).astype(jnp.float32) + params["dt_bias"])
+    dt = par.cs(dt, "batch", None, "d_inner")
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt[..., None] * A[None, None])               # [B,C,di,ds]
+    b = (dt * xc.astype(jnp.float32))[..., None] * Bt.astype(jnp.float32)[:, :, None, :]
+    if chunk_lens is not None:
+        valid = jnp.arange(C, dtype=jnp.int32)[None] < chunk_lens[:, None]
+        a = jnp.where(valid[..., None, None], a, 1.0)
+        b = jnp.where(valid[..., None, None], b, 0.0)
+    h0 = h0.astype(jnp.float32)
+    if cfg.use_pallas and par.mesh is None and C % min(s.chunk, C) == 0:
+        from repro.kernels.ssm_scan import ssm_scan
+        h, h_last = ssm_scan(a, b, h0, chunk=s.chunk)
+    else:
+        h, h_last = _chunked_linear_scan(a, b, h0, s.chunk)
+    y = jnp.einsum("bsiz,bsz->bsi", h, Ct.astype(jnp.float32))
+    y = (y + params["D"][None, None] * xc.astype(jnp.float32)).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"]
+    out = par.cs(out, "batch", None, "d_model")
+    lens = (jnp.full((B,), C, jnp.int32) if chunk_lens is None
+            else chunk_lens.astype(jnp.int32))
+    # conv carry = last dc-1 *valid* inputs: xfull rows lens .. lens+dc-2
+    idx = lens[:, None] + jnp.arange(dc - 1, dtype=jnp.int32)[None, :]
+    conv_new = jnp.take_along_axis(xfull, idx[..., None], axis=1)
+    return out, (conv_new.astype(conv_state.dtype), h_last)
+
+
 def ssm_decode(params, x: jax.Array, cache, *, cfg: ModelConfig,
-               par: Parallelism = NO_PARALLEL):
-    """Single-token step. x: [B,1,d]; cache=(conv_state, h)."""
+               par: Parallelism = NO_PARALLEL, active=None):
+    """Single-token step. x: [B,1,d]; cache=(conv_state, h).
+
+    ``active`` [B] bool (optional) freezes the state of inactive lanes —
+    slots mid-chunked-prefill must not have their recurrent state mutated
+    by decode steps of the surrounding batch."""
     s = cfg.ssm
     di, ds = s.d_inner, s.d_state
     conv_state, h = cache
@@ -146,9 +211,13 @@ def ssm_decode(params, x: jax.Array, cache, *, cfg: ModelConfig,
     A = -jnp.exp(params["A_log"])
     a = jnp.exp(dt[..., None] * A[None])                      # [B,di,ds]
     b = (dt * xc.astype(jnp.float32))[..., None] * Bt.astype(jnp.float32)[:, None, :]
-    h = a * h + b
-    y = jnp.einsum("biz,bz->bi", h, Ct.astype(jnp.float32))
+    h_new = a * h + b
+    y = jnp.einsum("biz,bz->bi", h_new, Ct.astype(jnp.float32))
     y = (y + params["D"][None] * xc.astype(jnp.float32)).astype(x.dtype)
     out = ((y * jax.nn.silu(z)) @ params["out_proj"])[:, None]
     out = par.cs(out, "batch", None, "d_model")
-    return out, (window[:, 1:], h)
+    win_new = window[:, 1:]
+    if active is not None:
+        h_new = jnp.where(active[:, None, None], h_new, h)
+        win_new = jnp.where(active[:, None, None], win_new, conv_state)
+    return out, (win_new, h_new)

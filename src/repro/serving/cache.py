@@ -44,7 +44,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.paged import PagedLeaf, is_paged, token_to_pool
+from repro.common.paged import (LeafLayout, PagedLeaf, classify_leaf,
+                                is_paged, token_to_pool)
 from repro.common.quant import quantize_rows
 from repro.common.types import LayerSpec, ModelConfig
 from repro.serving.faults import FaultPlan
@@ -302,12 +303,16 @@ class PagedKVCache:
         self.seq = seq_axes(init_cache_fn, cfg)
         full = jax.eval_shape(
             lambda: init_cache_fn(cfg, max_slots, max_seq_len))
-        # pageable: the leaf's sequence axis grows all the way to engine
-        # capacity (rings clamp at their window; O(1) states have none)
+        # layout policy per leaf: 'paged' (seq axis grows to engine
+        # capacity — GQA K/V, MLA latents), 'ring' (clamped at a window),
+        # 'state' (no seq axis — SSM / RG-LRU state)
+        self.layouts = jax.tree_util.tree_map(
+            lambda leaf, bax, sax: classify_leaf(leaf.shape, bax, sax,
+                                                 max_seq_len),
+            full, self.axes, self.seq, is_leaf=lambda l: l is None)
         self.pageable = jax.tree_util.tree_map(
-            lambda leaf, sax: sax is not None
-            and leaf.shape[sax] == max_seq_len,
-            full, self.seq, is_leaf=lambda l: l is None)
+            lambda lay: lay.pageable, self.layouts,
+            is_leaf=lambda l: isinstance(l, LeafLayout))
 
         def _quantized(leaf, pg):
             return (pg and kv_dtype == "int8"
@@ -342,9 +347,10 @@ class PagedKVCache:
         self.scales = (jax.tree_util.tree_map(
             build_scale, full, self.axes, self.seq, self.pageable,
             is_leaf=lambda l: l is None) if kv_dtype == "int8" else None)
-        if not any(jax.tree_util.tree_leaves(self.pageable)):
-            raise ValueError(f"{cfg.name}: no pageable cache leaves "
-                             "(every layer is a ring or O(1) state)")
+        # A config may have ZERO pageable leaves (every layer a ring or
+        # O(1) state — e.g. an all-SSM stack).  The block table still
+        # exists and admission/reclamation still meters virtual blocks,
+        # so scheduling is uniform; the pools are just empty.
 
         # host-side block accounting
         self.faults = fault_plan
@@ -370,6 +376,27 @@ class PagedKVCache:
         self.version = 0          # bumped on any table change (allocate/
                                   # append/fork/cow/free) so device copies
                                   # can cache
+
+    # -- layout queries -------------------------------------------------
+    @property
+    def all_pageable(self) -> bool:
+        """True when every cache leaf is a block-pool leaf — the
+        precondition for content-addressed prefix sharing and
+        copy-on-write forking (ring/state leaves are per-slot, not
+        content-addressable)."""
+        return all(jax.tree_util.tree_leaves(self.pageable))
+
+    @property
+    def any_pageable(self) -> bool:
+        return any(jax.tree_util.tree_leaves(self.pageable))
+
+    def leaf_kinds(self) -> Dict[str, int]:
+        """Histogram of leaf layout kinds, e.g. {'paged': 8, 'state': 4}."""
+        out: Dict[str, int] = {}
+        for lay in jax.tree_util.tree_leaves(
+                self.layouts, is_leaf=lambda l: isinstance(l, LeafLayout)):
+            out[lay.kind] = out.get(lay.kind, 0) + 1
+        return out
 
     # -- block accounting ----------------------------------------------
     def _maybe_inject_alloc(self) -> None:
@@ -728,6 +755,7 @@ class PagedKVCache:
         bpb = self.bytes_per_block()
         return {
             "num_blocks": self.num_blocks - 1,
+            "leaf_kinds": self.leaf_kinds(),
             "used_blocks": used,
             "cached_free_blocks": len(self._cached_free),
             "block_utilization": used / max(1, self.num_blocks - 1),

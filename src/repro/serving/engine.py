@@ -15,22 +15,30 @@ The engine is split along the line every production serving stack draws
 
 Memory + latency structure (this PR's point):
 
-  * Paged KV cache: full-length KV leaves live in a shared block pool
-    ([num_blocks, block_size, ...] per layer, discovered by the cache
-    shape probe — the PT [R, D, n_tracks, ...] stacking pages like any
-    other layout) addressed through per-slot block tables.  A request
-    holds ceil(tokens/block_size) blocks instead of a max_seq_len
-    reservation, so short and long requests share HBM and the decode
-    batch is bounded by actual token usage.  Ring buffers and O(1)
-    recurrent state stay dense per-slot; architectures with non-GQA
-    mixers fall back to the contiguous cache automatically.  Finished
-    slots return their blocks to the pool the moment the packed
-    (token, done) transfer lands (``sampler.sample_step``).
-  * Chunked prefill: with ``prefill_chunk=C`` set (full-attention,
-    non-MoE archs), prompts are fed C tokens per engine step through the
-    paged cache and interleaved with decode — a 32k prompt no longer
-    stalls every decoding request, and TTFT of short queued requests
-    stays flat while long prefills are in flight.
+  * Paged KV cache, layout-polymorphic: every cache leaf is classified
+    by a per-leaf layout policy (``common.paged.classify_leaf``) —
+    'paged' leaves (GQA K/V, MLA compressed latents, the PT
+    [R, D, n_tracks, ...] stacking included) live in a shared block pool
+    ([num_blocks, block_size, ...]) addressed through per-slot block
+    tables; 'ring' leaves (sliding-window K/V) and 'state' leaves
+    (SSM / RG-LRU recurrences) stay dense per-slot and ride along under
+    the same block-table admission/reclamation accounting (an all-state
+    stack still meters virtual blocks, so scheduling is uniform).  A
+    request holds ceil(tokens/block_size) blocks instead of a
+    max_seq_len reservation, so short and long requests share HBM and
+    the decode batch is bounded by actual token usage.  Finished slots
+    return their blocks to the pool the moment the packed (token, done)
+    transfer lands (``sampler.sample_step``).  Per-feature support is a
+    capability query (``arch_capabilities`` / ``Engine.capabilities``),
+    never an ad-hoc architecture allowlist.
+  * Chunked prefill: with ``prefill_chunk=C`` set (any non-MoE decoder
+    arch), prompts are fed C tokens per engine step through the cache
+    and interleaved with decode — a 32k prompt no longer stalls every
+    decoding request, and TTFT of short queued requests stays flat
+    while long prefills are in flight.  Paged leaves append through the
+    block table, ring leaves through an in-chunk side buffer, recurrent
+    state through masked chunk updates (padded final-chunk tokens do
+    identity state updates).
   * Bucketed prefill (the default path, and the fallback for
     length-sensitive archs): prompts right-padded to power-of-two
     buckets, O(log max_len) compile variants, same-bucket admissions
@@ -141,6 +149,9 @@ class Request:
     truncated: bool = False            # max_new_tokens clamped to capacity
     prefilled: int = 0                 # seq tokens consumed (chunked)
     cached_prefix: int = 0             # seq tokens served from cache
+    draft_filled: int = 0              # drafter cache tokens (chunked+spec)
+    pending_first: Optional[int] = None  # first token parked until the
+                                       # drafter catches up (chunked+spec)
     finish_reason: Optional[str] = None  # set on abnormal termination
     preemptions: int = 0               # times evicted + requeued
     # monotonic (perf_counter) latency marks — immune to clock steps
@@ -365,14 +376,69 @@ class Scheduler:
 # model runner
 # ---------------------------------------------------------------------------
 
-def pageable_arch(cfg: ModelConfig) -> bool:
-    """Paged caching is implemented for pure-GQA decoder stacks (the
-    attention decode path); MLA/recurrent mixers and cross-attention fall
-    back to the contiguous cache."""
-    return (cfg.encdec is None
-            and all(cfg.spec(nm).mixer == "gqa"
-                    and not cfg.spec(nm).cross_attn
-                    for nm in cfg.layer_names))
+@dataclasses.dataclass(frozen=True)
+class Capability:
+    """One serving feature's static support verdict for an architecture:
+    ``supported`` plus a human-readable ``reason`` when it is not."""
+    supported: bool
+    reason: Optional[str] = None
+
+
+def arch_capabilities(cfg: ModelConfig) -> Dict[str, Capability]:
+    """Per-feature serving capabilities of an architecture, with recorded
+    reasons for every gate.  This is the single source of truth the
+    runner's feature gates, the serve launcher's startup report and the
+    README support matrix all derive from — replacing the old ad-hoc
+    ``pageable_arch`` / chunk-ok / spec-ok allowlists.
+
+    Features:
+      paged           — serve through the block-table cache (all decoder
+                        archs; ring/state leaves stay dense per-slot
+                        under the same block accounting)
+      chunked_prefill — feed prompts chunk-by-chunk through the cache
+      speculative     — track-speculative draft/verify decoding
+      prefix_cache    — content-addressed block sharing across prompts
+      int8_kv         — int8 block pools with fused dequant
+      fork            — n-way copy-on-write request cloning
+    """
+    specs = [cfg.spec(nm) for nm in cfg.layer_names]
+    has_moe = any(s.mlp == "moe" for s in specs)
+    has_window = any(s.window is not None for s in specs)
+    has_recurrent = any(s.mixer in RECURRENT_MIXERS for s in specs)
+    has_mla = any(s.mixer == "mla" for s in specs)
+    # every leaf a block-pool leaf: no per-slot ring/state rows at all
+    all_paged = not (has_window or has_recurrent)
+
+    def cap(ok: bool, why: Optional[str]) -> Capability:
+        return Capability(ok, None if ok else why)
+
+    paged = cap(cfg.encdec is None,
+                "encoder-decoder cross-attention caches are per-request "
+                "dense; served through the contiguous cache")
+    chunked = cap(paged.supported and not has_moe,
+                  paged.reason if not paged.supported else
+                  "capacity-based MoE routing is batch-global: a padded "
+                  "chunk row would steal expert capacity from real tokens")
+    dense_reason = ("sliding-window ring leaves are per-slot rows, not "
+                    "content-addressable blocks" if has_window else
+                    "recurrent state is a per-slot row, not a "
+                    "content-addressable block" if has_recurrent else None)
+    prefix = cap(chunked.supported and all_paged,
+                 dense_reason or chunked.reason)
+    speculative = cap(cfg.pt is not None and chunked.supported and all_paged,
+                      "track-speculative decoding needs the PT track "
+                      "structure to slice a drafter from"
+                      if cfg.pt is None else
+                      dense_reason and (dense_reason + "; rejected draft "
+                                        "tokens could not be rolled back")
+                      or chunked.reason)
+    int8_kv = cap(chunked.supported and all_paged and not has_mla,
+                  dense_reason or chunked.reason or
+                  "int8 quantization of MLA latent pools is unvalidated")
+    fork = cap(paged.supported, paged.reason)
+    return {"paged": paged, "chunked_prefill": chunked,
+            "speculative": speculative, "prefix_cache": prefix,
+            "int8_kv": int8_kv, "fork": fork}
 
 
 class ModelRunner:
@@ -416,37 +482,33 @@ class ModelRunner:
             cfg.spec(nm).mixer in RECURRENT_MIXERS
             or cfg.spec(nm).mlp == "moe" for nm in cfg.layer_names)
 
+        # every feature gate below reads the per-arch capability table
+        # (one source of truth, with recorded reasons) instead of its own
+        # allowlist
+        self.capabilities = arch_capabilities(cfg)
+        caps = self.capabilities
         self.kv: Optional[PagedKVCache] = None
-        self.paged = paged and pageable_arch(cfg)
+        self.paged = paged and caps["paged"].supported
         # int8 KV shares the chunked-prefill gate: every cold prefill is
         # funneled through the chunk program so cold and warm requests
         # attend to identical quantized pool bytes (warm == cold parity).
-        # Length-sensitive archs and sliding windows fall back to fp.
-        full_attn = all(cfg.spec(nm).window is None
-                        for nm in cfg.layer_names)
         want_int8_kv = kv_dtype == "int8"
-        int8_kv_ok = (self.paged and not self.exact_prefill and full_attn)
+        int8_kv_ok = self.paged and caps["int8_kv"].supported
         if want_int8_kv and not int8_kv_ok:
             self.quant_fallbacks.append(
-                "kv_dtype=int8 needs the paged cache, full attention and "
-                "no length-sensitive layers; serving fp KV")
+                "kv_dtype=int8: "
+                + (caps["int8_kv"].reason if self.paged and
+                   caps["int8_kv"].reason else "needs the paged cache")
+                + "; serving fp KV")
         eff_kv = "int8" if (want_int8_kv and int8_kv_ok) else None
         if self.paged:
-            try:
-                self.kv = PagedKVCache(self.fns["init_cache"], cfg,
-                                       max_slots=max_slots,
-                                       max_seq_len=max_seq_len,
-                                       block_size=block_size,
-                                       num_blocks=num_blocks,
-                                       kv_dtype=eff_kv,
-                                       fault_plan=fault_plan)
-            except ValueError:             # every layer is a ring: dense
-                self.paged = False
-                if eff_kv:
-                    self.quant_fallbacks.append(
-                        "kv_dtype=int8: no pageable leaves; serving fp KV")
-                eff_kv = None
-        if self.paged:
+            self.kv = PagedKVCache(self.fns["init_cache"], cfg,
+                                   max_slots=max_slots,
+                                   max_seq_len=max_seq_len,
+                                   block_size=block_size,
+                                   num_blocks=num_blocks,
+                                   kv_dtype=eff_kv,
+                                   fault_plan=fault_plan)
             self.kv_dtype = eff_kv
             self.cache = wrap_paged(self.kv.data, self.kv.pageable,
                                     self.kv.scales)
@@ -455,30 +517,30 @@ class ModelRunner:
         else:
             self.cache = self.fns["init_cache"](cfg, max_slots, max_seq_len)
             self._axes = batch_axes(self.fns["init_cache"], cfg)
+        # dense (ring/state) leaves riding inside the paged cache need
+        # explicit row lifecycle ops: zeroing on chunked re-admission
+        # (stale rows from the slot's previous tenant) and physical row
+        # copies on fork (the block table shares only pool leaves)
+        self.has_dense_leaves = self.paged and not self.kv.all_pageable
 
-        # chunked prefill feeds the prompt through the paged cache with
-        # multi-token decode-style steps: needs every layer paged (full
-        # attention, no rings) and no length-sensitive state.  The warm
-        # tail prefill behind prefix-cache hits is the same program, so
-        # prefix caching shares the gate.
-        chunk_ok = (self.paged and not self.exact_prefill
-                    and all(cfg.spec(nm).window is None
-                            for nm in cfg.layer_names))
+        # chunked prefill feeds the prompt through the cache with
+        # multi-token decode-style steps; paged leaves append through the
+        # block table, rings through the in-chunk side buffer, recurrent
+        # state through masked chunk updates.  The warm tail prefill
+        # behind prefix-cache hits is the same program.
+        chunk_ok = self.paged and caps["chunked_prefill"].supported
         self.prefill_chunk = prefill_chunk if chunk_ok else 0
-        self.prefix_cache = prefix_cache and chunk_ok
+        self.prefix_cache = (prefix_cache and self.paged
+                             and caps["prefix_cache"].supported)
         if self.kv is not None:
             self.kv.prefix_cache = self.prefix_cache
 
-        # track-speculative decoding: needs the PT fusion structure (the
-        # drafter is a track slice), the paged cache (the verify forward
-        # is the chunk path) and full attention everywhere; anything else
-        # falls back to plain decode
+        # track-speculative decoding: the drafter is a track slice with a
+        # dense per-slot cache; the verify forward is the chunk path
         self.speculate_k = 0
         self.draft_tracks = 0
-        spec_ok = (speculate_k > 0 and cfg.pt is not None and self.paged
-                   and not self.exact_prefill
-                   and all(cfg.spec(nm).window is None
-                           for nm in cfg.layer_names))
+        spec_ok = (speculate_k > 0 and self.paged
+                   and caps["speculative"].supported)
         if spec_ok:
             self.speculate_k = speculate_k
             d = draft_tracks or max(1, cfg.pt.n_tracks // 2)
@@ -496,9 +558,12 @@ class ModelRunner:
             self._draft_prefill = jax.jit(self._draft_prefill_impl)
             self._draft_insert = jax.jit(self._draft_insert_impl,
                                          donate_argnums=(0,))
+            self._draft_chunk = jax.jit(self._draft_chunk_impl,
+                                        donate_argnums=(1,))
             self._spec = jax.jit(self._spec_impl, donate_argnums=(2, 3),
                                  static_argnames=("max_len",))
             self.draft_prefill_shapes: set = set()
+            self.draft_chunk_shapes: set = set()
 
         # int8 weights: quantize AFTER the draft-track slice so the
         # drafter is cut from fp params and quantized independently
@@ -530,6 +595,11 @@ class ModelRunner:
         self._chunk = jax.jit(self._chunk_impl, donate_argnums=(1,))
         self._copy_blocks = jax.jit(self._copy_blocks_impl,
                                     donate_argnums=(0,))
+        if self.has_dense_leaves:
+            self._reset_slots = jax.jit(self._reset_slots_impl,
+                                        donate_argnums=(0,))
+            self._dense_fork = jax.jit(self._dense_fork_impl,
+                                       donate_argnums=(0,))
         if self.speculate_k:
             self._draft_fork = jax.jit(self._draft_fork_impl,
                                        donate_argnums=(0,))
@@ -610,30 +680,43 @@ class ModelRunner:
     def _decode_impl(self, params, cache, toks, pos, active, table, seeds,
                      counts, temps, tks, tps, eos, remaining, max_len=None):
         """One decode step for all slots + sampling + done flags, all on
-        device.  Returns (cache, packed [2, slots] int32 = (token, done))."""
+        device.  Returns (cache, packed [2, slots] int32 = (token, done)).
+        ``active`` threads into the model so dense (ring/state) rows of
+        lanes that are idle or mid-chunked-prefill stay frozen — paged
+        leaves are protected by the zeroed table rows instead."""
         if self.paged:
             logits, cache = self.fns["decode"](params, cache, toks, pos,
                                                self.cfg, self.par,
                                                block_table=table,
-                                               kv_max_len=max_len)
+                                               kv_max_len=max_len,
+                                               active=active)
         else:
             logits, cache = self.fns["decode"](params, cache, toks, pos,
-                                               self.cfg, self.par)
+                                               self.cfg, self.par,
+                                               active=active)
         keys = row_keys(seeds, counts, SALT_SAMPLE)
         return cache, sample_step(logits, keys, temps, tks, tps, active,
                                   eos, remaining)
 
-    def _chunk_impl(self, params, cache, toks, pos, table_rows, last_idx,
-                    seeds, counters, temps, tks, tps):
+    def _chunk_impl(self, params, cache, toks, pos, table_rows, slots,
+                    last_idx, seeds, counters, temps, tks, tps):
         """One prefill chunk for n requests: toks [n, C] appended at
         positions pos[:, None] + arange(C).  Returns (cache, candidate
         first token [n] sampled at each row's last real prompt row —
         meaningful only for rows whose final chunk this is).  The draw
         uses ``counters[i]`` of each row's key stream (0 fresh, m for a
-        preempted resume) — see ``_prefill_impl``."""
+        preempted resume) — see ``_prefill_impl``.
+
+        ``slots`` maps chunk rows to engine slots so per-slot dense
+        (ring/state) leaves gather/scatter their rows; ``last_idx + 1``
+        is each row's valid token count, so a padded final chunk does
+        identity updates on recurrent state past it.  Both are dead code
+        (DCE'd) for all-paged architectures."""
         logits, cache = self.fns["chunk"](params, cache, toks, pos,
                                           self.cfg, self.par,
-                                          block_table=table_rows)
+                                          block_table=table_rows,
+                                          slots=slots,
+                                          chunk_lens=last_idx + 1)
         last = jnp.take_along_axis(
             logits, last_idx[:, None, None], axis=1)[:, 0]
         keys = prefill_keys(seeds, counters)
@@ -686,6 +769,55 @@ class ModelRunner:
         return jax.tree_util.tree_map(cp, cache, self._draft_axes,
                                       is_leaf=lambda l: l is None)
 
+    def _reset_slots_impl(self, cache, slots):
+        """Zero the dense (ring/state) rows of ``slots``: a chunked
+        admission appends to these rows incrementally, so the previous
+        tenant's bytes must not seed the new request's recurrent state or
+        ring window.  Paged leaves are untouched — the block table
+        already isolates them."""
+        def zero(leaf, bax, pg):
+            if pg:
+                return leaf
+            moved = jnp.moveaxis(leaf, bax, 0)
+            moved = moved.at[slots].set(
+                jnp.zeros((), leaf.dtype))
+            return jnp.moveaxis(moved, 0, bax)
+        return jax.tree_util.tree_map(
+            zero, cache, self._axes, self._pageable,
+            is_leaf=lambda l: l is None or is_paged(l))
+
+    def _dense_fork_impl(self, cache, srcs, dsts):
+        """Physically copy the dense (ring/state) rows of the MAIN cache
+        on fork: the block table shares only pool leaves, so children of
+        a windowed/recurrent parent need their own copy of its per-slot
+        rows (padded entries are src-to-src identity copies)."""
+        def cp(leaf, bax, pg):
+            if pg:
+                return leaf
+            moved = jnp.moveaxis(leaf, bax, 0)
+            moved = moved.at[dsts].set(moved[srcs])
+            return jnp.moveaxis(moved, 0, bax)
+        return jax.tree_util.tree_map(
+            cp, cache, self._axes, self._pageable,
+            is_leaf=lambda l: l is None or is_paged(l))
+
+    def _draft_chunk_impl(self, draft_params, draft_cache, toks, pos,
+                          slots):
+        """Advance the drafter's dense cache by one chunk per row: rows
+        gathered at ``slots``, run through the PT chunk program with no
+        block table (the dense multi-token append path), scattered back.
+        Logits are discarded — only the K/V matters; positions past a
+        row's valid tokens write pad K/V that decode's causal mask never
+        reads before it is overwritten."""
+        def take(leaf, bax):
+            return jnp.moveaxis(jnp.moveaxis(leaf, bax, 0)[slots], 0, bax)
+        rows = jax.tree_util.tree_map(take, draft_cache, self._draft_axes,
+                                      is_leaf=lambda l: l is None)
+        _, rows = pt_lib.pt_chunk_step(draft_params, rows, toks, pos,
+                                       self.draft_cfg,
+                                       self.par.without_axis("track"))
+        return insert_rows(draft_cache, rows, self._draft_axes, slots)
+
     def _spec_impl(self, params, draft_params, cache, draft_cache, toks,
                    pos, active, table, seeds, counts, temps, tks, tps,
                    max_len=None):
@@ -696,10 +828,15 @@ class ModelRunner:
         K = self.speculate_k
         tok = toks
         d_toks, d_logits = [], []
+        # ``active`` freezes the drafter's dense rows of inactive lanes:
+        # a slot mid-chunked-prefill is having its draft cache filled by
+        # draft_chunk, and a stale-position write from the spec step of
+        # OTHER slots would corrupt it (the paged target cache is
+        # protected by zeroed table rows instead).
         for j in range(K):
             logits, draft_cache = pt_lib.pt_draft_step(
                 draft_params, draft_cache, tok, pos + j, self.draft_cfg,
-                self.par)
+                self.par, active=active)
             keys = row_keys(seeds, counts + j, SALT_DRAFT)
             tok = sample_rows(logits, keys, temps, tks, tps)
             d_toks.append(tok)
@@ -710,7 +847,7 @@ class ModelRunner:
         # tail is simply overwritten next step).  Logits are discarded.
         _, draft_cache = pt_lib.pt_draft_step(
             draft_params, draft_cache, tok, pos + K, self.draft_cfg,
-            self.par)
+            self.par, active=active)
         seq = jnp.concatenate([toks[:, None]] + [t[:, None] for t in d_toks],
                               axis=1)                       # [B, K+1]
         tgt, cache = self.fns["verify"](params, cache, seq, pos, self.cfg,
@@ -770,7 +907,8 @@ class ModelRunner:
         temps, tks, tps = stack_params(params_list)
         self.cache, cand = self._chunk(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
-            self.kv.table_rows(slots), jnp.asarray(last_idx),
+            self.kv.table_rows(slots), jnp.asarray(slots, jnp.int32),
+            jnp.asarray(last_idx),
             jnp.asarray(seeds, jnp.uint32),
             jnp.asarray(counters, jnp.int32),
             jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps))
@@ -802,7 +940,8 @@ class ModelRunner:
         temps, tks, tps = stack_params(params_list)
         self.cache, cand = self._chunk(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
-            self.kv.table_rows(slots), jnp.asarray(last_idx),
+            self.kv.table_rows(slots), jnp.asarray(slots, jnp.int32),
+            jnp.asarray(last_idx),
             jnp.asarray(seeds, jnp.uint32),
             jnp.asarray(counters, jnp.int32),
             jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps))
@@ -842,13 +981,10 @@ class ModelRunner:
     def draft_prefill(self, prompts: Sequence[Sequence[int]], bucket: int,
                       slots: Sequence[int]) -> None:
         """Populate the drafter's dense cache for newly-started requests
-        (one batched narrow forward; the drafter is d of n tracks).
-
-        Known limit: this is a whole-prompt forward even when the target
-        prefill was chunked, so a very long prompt briefly stalls the
-        step loop at decode start (bounded: the drafter is narrow).
-        Chunked draft fill is a ROADMAP item — it needs a dense
-        multi-token cache-append path."""
+        (one batched narrow forward; the drafter is d of n tracks).  The
+        bucketed-admission path; chunked admissions use ``draft_chunk``
+        instead, so a long prompt never stalls the step loop at decode
+        start."""
         n = len(prompts)
         tokens = np.zeros((n, bucket), np.int32)
         lengths = np.empty((n,), np.int32)
@@ -860,6 +996,44 @@ class ModelRunner:
         self.draft_cache = self._draft_insert(
             self.draft_cache, cache, jnp.asarray(slots, jnp.int32))
         self.draft_prefill_shapes.add((n, bucket))
+
+    def draft_chunk(self, toks: np.ndarray, pos: np.ndarray,
+                    slots: Sequence[int]) -> None:
+        """Advance the drafter's dense cache one chunk per prefilling
+        row (``toks`` [n, C] at positions ``pos[:, None] + arange(C)``)
+        — the chunked counterpart of ``draft_prefill``, interleaved with
+        decode so the drafter is warm the step the target finishes."""
+        self.draft_cache = self._draft_chunk(
+            self.draft_params, self.draft_cache, jnp.asarray(toks),
+            jnp.asarray(pos), jnp.asarray(slots, jnp.int32))
+        self.draft_chunk_shapes.add(tuple(toks.shape))
+
+    def reset_slots(self, slots: Sequence[int]) -> None:
+        """Zero the dense (ring/state) rows of freshly-admitted chunked
+        slots (no-op for all-paged architectures).  The slot list pads to
+        a power of two with duplicates so compile variants stay
+        O(log slots)."""
+        if not self.has_dense_leaves or not slots:
+            return
+        n = 1
+        while n < len(slots):
+            n *= 2
+        pad = list(slots) + [slots[0]] * (n - len(slots))
+        self.cache = self._reset_slots(self.cache,
+                                       jnp.asarray(pad, jnp.int32))
+
+    def dense_fork(self, src: int, dsts: Sequence[int]) -> None:
+        """Copy the main cache's dense (ring/state) rows of ``src`` into
+        ``dsts`` on fork (no-op for all-paged architectures)."""
+        if not self.has_dense_leaves:
+            return
+        n = 1
+        while n < len(dsts):
+            n *= 2
+        pad = list(dsts) + [src] * (n - len(dsts))   # src->src no-ops
+        self.cache = self._dense_fork(
+            self.cache, jnp.asarray([src] * n, jnp.int32),
+            jnp.asarray(pad, jnp.int32))
 
     def _masked_table(self, active) -> Any:
         """Device block table with inactive lanes zeroed (their writes
@@ -987,6 +1161,8 @@ class Engine:
         self.max_preemptions = max_preemptions
         self.faults = fault_plan
         self._stalled_steps = 0        # consecutive no-progress steps
+        self._step_ema = None          # EMA of wall-clock step time (s),
+                                       # feeds SLO admission estimates
         self._next_rid = 0
         self.steps_run = 0
 
@@ -1003,6 +1179,36 @@ class Engine:
         self._seeds = np.zeros((B,), np.uint32)    # per-request PRNG seed
         self._counts = np.zeros((B,), np.int32)    # tokens emitted so far
 
+    def capabilities(self) -> Dict[str, Dict[str, Any]]:
+        """Unified feature report for this (architecture, engine-config)
+        pair: per feature, whether the architecture *supports* it (with
+        the gating reason when not), and whether this engine instance has
+        it *active* (a supported feature stays inactive when the caller
+        didn't ask for it).  Quantization fallbacks fold in here — this
+        is the single table the serve launcher prints and the README
+        support matrix is generated from."""
+        r = self.runner
+        live = {"paged": r.paged,
+                "chunked_prefill": r.prefill_chunk > 0,
+                "speculative": r.speculate_k > 0,
+                "prefix_cache": r.prefix_cache,
+                "int8_kv": r.kv_dtype == "int8",
+                "fork": r.paged}
+        out: Dict[str, Dict[str, Any]] = {}
+        for name, cap in r.capabilities.items():
+            out[name] = {"supported": cap.supported, "reason": cap.reason,
+                         "active": live[name]}
+        wfall = next((f for f in r.quant_fallbacks
+                      if f.startswith("weight_dtype")), None)
+        kfall = next((f for f in r.quant_fallbacks
+                      if f.startswith("kv_dtype")), None)
+        out["int8_weights"] = {"supported": wfall is None, "reason": wfall,
+                               "active": r.weight_dtype == "int8"}
+        if kfall is not None and out["int8_kv"]["reason"] is None:
+            # requested but gated off at runtime (e.g. engine not paged)
+            out["int8_kv"]["reason"] = kfall
+        return out
+
     # ------------------------------------------------------------------
     def _reserve_tokens(self, req: Request) -> int:
         """Cache positions a request occupies over its lifetime: prompt
@@ -1010,6 +1216,27 @@ class Engine:
         L = len(req.prompt)
         cap = self.max_seq_len - L + 1
         return L + min(req.max_new_tokens, cap) - 1
+
+    def _estimate_completion_s(self, req: Request) -> float:
+        """Optimistic submit-to-done estimate at current load, from the
+        step-time EMA: the request's own prefill + decode steps, scaled
+        by how many full queue waves run ahead of it.  Deliberately a
+        LOWER bound (ignores chunk/decode cost asymmetry, preemption,
+        compile stalls) — admission must only reject deadlines that are
+        unmeetable even under ideal scheduling.  0.0 before any step has
+        run: with no evidence, every deadline is admissible."""
+        if self._step_ema is None:
+            return 0.0
+        L = len(req.prompt)
+        C = self.runner.prefill_chunk
+        prefill_steps = -(-L // C) if C else 1
+        cap = self.max_seq_len - L + 1
+        decode_steps = min(req.max_new_tokens, cap)
+        if self.runner.speculate_k:
+            decode_steps = -(-decode_steps // (self.runner.speculate_k + 1))
+        own = (prefill_steps + decode_steps) * self._step_ema
+        waves = len(self.scheduler.queue) // self.max_slots
+        return own * (1 + waves)
 
     def submit(self, prompt: List[int], max_new_tokens: int = 32,
                eos_id: Optional[int] = None,
@@ -1027,7 +1254,11 @@ class Engine:
         ``priority`` orders eviction under memory pressure (a higher-
         priority admission may preempt strictly-lower-priority decoders);
         ``deadline_s`` bounds submit-to-done time (exceeding it yields
-        TIMED_OUT); ``on_event`` streams terminal transitions.
+        TIMED_OUT); a deadline the step-time EMA says is unmeetable at
+        current queue depth is REJECTED on arrival instead
+        (``finish_reason`` starts with ``unmeetable_deadline``), so the
+        caller can retry elsewhere before burning compute; ``on_event``
+        streams terminal transitions.
 
         Invalid requests (empty/overlong prompt, non-positive token
         budget, reservation larger than the whole block pool) and
@@ -1058,6 +1289,18 @@ class Engine:
                 req,
                 f"request needs {kv.blocks_for(self._reserve_tokens(req))} "
                 f"KV blocks but the pool holds {kv.num_blocks - 1}")
+        if deadline_s is not None:
+            # SLO-aware admission: an optimistic completion estimate
+            # already over budget means the request would only burn
+            # compute before timing out — reject on arrival so the
+            # caller can retry elsewhere.  est == 0.0 (no step has run
+            # yet) admits unconditionally: no evidence, no rejection.
+            est = self._estimate_completion_s(req)
+            if est > deadline_s:
+                return self._reject(
+                    req, "unmeetable_deadline: needs "
+                         f"~{est:.3f}s at current load, "
+                         f"budget {deadline_s:.3f}s")
         if self.max_queue is not None \
                 and len(self.scheduler.queue) >= self.max_queue:
             self.metrics.shed += 1
@@ -1188,6 +1431,8 @@ class Engine:
         req.state = RequestState.QUEUED
         req.prefilled = 0
         req.cached_prefix = 0
+        req.draft_filled = 0
+        req.pending_first = None
         self.scheduler.queue.append(req)   # back of the line: the victim
                                            # must never re-block the head
         self.metrics.preemptions += 1
@@ -1316,6 +1561,8 @@ class Engine:
             req.state = RequestState.QUEUED
             req.cached_prefix = 0
             req.prefilled = 0
+            req.draft_filled = 0
+            req.pending_first = None
         self.scheduler.queue.extendleft(
             [r for _, r in sorted(rows, key=lambda sr: sr[1].rid,
                                   reverse=True)])
@@ -1368,9 +1615,18 @@ class Engine:
                 self._counts[slot] = len(req.output)   # resume counter
             if chunked:
                 # chunks run in _prefill_chunks; a cached prefix just
-                # advances the chunk cursor past the matched span
+                # advances the chunk cursor past the matched span.  The
+                # drafter (when speculating) has no prefix cache, so its
+                # chunk cursor always starts at zero.  Dense ring/state
+                # rows are per-slot tenants: zero the incoming slots so a
+                # previous occupant's state can't leak into the chunked
+                # recurrence (paged leaves need no reset — the block
+                # table already isolates them)
                 for slot, req in group:
                     req.prefilled = req.cached_prefix
+                    req.draft_filled = 0
+                    req.pending_first = None
+                self.runner.reset_slots([s for s, _ in group])
                 continue
             if self.runner.kv_dtype == "int8":
                 # int8 KV: cold prompts run through the chunk program too
@@ -1437,45 +1693,90 @@ class Engine:
         """Advance every prefilling request by one chunk (one batched
         call), finishing rows whose (effective) prompt is now fully
         consumed.  A preempted request's chunks run over prompt+output —
-        the recompute stream.  Returns rows advanced (0 on an injected
-        transfer fault: nothing host-side moves, and the retry next step
-        rewrites the identical chunk bytes)."""
+        the recompute stream.  When speculating, the drafter's dense
+        cache fills chunk-by-chunk in lockstep (its own batched call):
+        a target row that finishes first parks its sampled token in
+        ``pending_first`` until the drafter catches up, so decode never
+        pays a whole-prompt draft forward.  Returns rows advanced (0 on
+        an injected transfer fault: nothing host-side moves, and the
+        retry next step rewrites the identical chunk bytes)."""
         C = self.runner.prefill_chunk
         rows = [(s, r) for s, r in self.scheduler.active_slots()
                 if r.state is RequestState.PREFILL]
         if not rows:
             return 0
-        n = len(rows)
-        toks = np.zeros((n, C), np.int32)
-        pos = np.empty((n,), np.int32)
-        last_idx = np.zeros((n,), np.int32)
-        for i, (slot, req) in enumerate(rows):
-            seq = req.seq_tokens
-            chunk = seq[req.prefilled:req.prefilled + C]
-            toks[i, :len(chunk)] = chunk
-            pos[i] = req.prefilled
-            last_idx[i] = min(C - 1, len(seq) - 1 - req.prefilled)
-        try:
-            cand = self.runner.chunk(toks, pos, [s for s, _ in rows],
-                                     last_idx,
-                                     [r.seed for _, r in rows],
-                                     [len(r.output) for _, r in rows],
-                                     [r.params for _, r in rows])
-        except TransferFault:
-            self.metrics.transfer_faults += 1
-            return 0
-        for i, (slot, req) in enumerate(rows):
-            seq = req.seq_tokens
-            req.prefilled += C
-            if req.prefilled >= len(seq):
-                req.prefilled = len(seq)
-                self.runner.kv.commit_tokens(slot, seq)
-                self._start_decode(slot, req, cand[i])
-            else:
-                # the chunk's writes are in the device stream: its full
-                # blocks are now matchable by later admissions
-                self.runner.kv.commit_tokens(slot, seq[:req.prefilled])
-        return n
+        spec = self.runner.speculate_k > 0
+        tgt = [(s, r) for s, r in rows
+               if r.prefilled < len(r.seq_tokens)]
+        if tgt:
+            n = len(tgt)
+            toks = np.zeros((n, C), np.int32)
+            pos = np.empty((n,), np.int32)
+            last_idx = np.zeros((n,), np.int32)
+            for i, (slot, req) in enumerate(tgt):
+                seq = req.seq_tokens
+                chunk = seq[req.prefilled:req.prefilled + C]
+                toks[i, :len(chunk)] = chunk
+                pos[i] = req.prefilled
+                last_idx[i] = min(C - 1, len(seq) - 1 - req.prefilled)
+            try:
+                cand = self.runner.chunk(toks, pos, [s for s, _ in tgt],
+                                         last_idx,
+                                         [r.seed for _, r in tgt],
+                                         [len(r.output) for _, r in tgt],
+                                         [r.params for _, r in tgt])
+            except TransferFault:
+                self.metrics.transfer_faults += 1
+                return 0
+            for i, (slot, req) in enumerate(tgt):
+                seq = req.seq_tokens
+                req.prefilled += C
+                if req.prefilled >= len(seq):
+                    req.prefilled = len(seq)
+                    self.runner.kv.commit_tokens(slot, seq)
+                    if spec:
+                        req.pending_first = int(cand[i])
+                    else:
+                        self._start_decode(slot, req, cand[i])
+                else:
+                    # the chunk's writes are in the device stream: its
+                    # full blocks are now matchable by later admissions
+                    self.runner.kv.commit_tokens(slot, seq[:req.prefilled])
+        advanced = len(tgt)
+        if spec:
+            # the drafter fills [0, N) — it has no prefix cache, so its
+            # cursor can trail a prefix-hit target row; pad positions
+            # past the end are causally masked and later overwritten
+            drows = [(s, r) for s, r in rows
+                     if r.draft_filled < len(r.seq_tokens)]
+            if drows:
+                m = len(drows)
+                dtoks = np.zeros((m, C), np.int32)
+                dpos = np.empty((m,), np.int32)
+                for i, (slot, req) in enumerate(drows):
+                    seq = req.seq_tokens
+                    chunk = seq[req.draft_filled:req.draft_filled + C]
+                    dtoks[i, :len(chunk)] = chunk
+                    dpos[i] = req.draft_filled
+                self.runner.draft_chunk(dtoks, dpos,
+                                        [s for s, _ in drows])
+                for slot, req in drows:
+                    req.draft_filled = min(req.draft_filled + C,
+                                           len(req.seq_tokens))
+                advanced = len({s for s, _ in tgt}
+                               | {s for s, _ in drows})
+            # both cursors caught up: release the parked first token
+            # into the decode batch (batch_draft=True — the drafter is
+            # already warm, skip the whole-prompt fill)
+            for slot, req in rows:
+                if (self.scheduler.slots[slot] is req
+                        and req.pending_first is not None
+                        and req.prefilled >= len(req.seq_tokens)
+                        and req.draft_filled >= len(req.seq_tokens)):
+                    tok = req.pending_first
+                    req.pending_first = None
+                    self._start_decode(slot, req, tok, batch_draft=True)
+        return advanced
 
     # ------------------------------------------------------------------
     def fork(self, parent: Request, n: int, *,
@@ -1564,6 +1865,10 @@ class Engine:
             self._seeds[slot] = child_seeds[i]
             self._counts[slot] = self._counts[pslot]
             children.append(child)
+        # paged leaves are shared through the block table; dense ring/
+        # state leaves of the main cache are per-slot rows and need a
+        # physical copy (no-op for all-paged architectures)
+        self.runner.dense_fork(pslot, [free[i] for i in range(n)])
         if self.runner.speculate_k:
             # the drafter's cache is dense per-slot: children need a
             # physical copy of the parent's row (the paged target cache
@@ -1665,6 +1970,7 @@ class Engine:
         TransferFaults are absorbed here: the step simply retries next
         tick (recomputing bitwise-identical bytes), it never corrupts
         host state or escapes to the caller."""
+        t0 = time.perf_counter()
         if self.faults is not None:
             dt = self.faults.take_slow()
             if dt > 0:
@@ -1706,6 +2012,11 @@ class Engine:
             except TransferFault:
                 self.metrics.transfer_faults += 1
         self.steps_run += 1
+        # step-time EMA for SLO admission estimates; alpha 0.2 forgets a
+        # one-off compile spike within a few steps while tracking load
+        dt = time.perf_counter() - t0
+        self._step_ema = (dt if self._step_ema is None
+                          else 0.8 * self._step_ema + 0.2 * dt)
         if progress > 0 or not self.scheduler.has_work():
             self._stalled_steps = 0
         else:

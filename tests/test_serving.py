@@ -488,11 +488,18 @@ def test_paged_windowed_arch_keeps_rings_dense():
     assert out == _naive_greedy(params, cfg, p, 6)
 
 
-def test_recurrent_arch_falls_back_to_contiguous():
+def test_recurrent_arch_serves_paged_with_state_leaves():
+    """An all-SSM stack has ZERO pageable leaves, but still serves
+    through the paged engine: every cache leaf is a per-slot 'state'
+    row, and admission/reclamation meters virtual blocks so scheduling
+    policy (FCFS, preemption, watchdog) is architecture-independent."""
     cfg = reduced_config("falcon-mamba-7b")
     params = init_lm(jax.random.PRNGKey(2), cfg)
     eng = Engine(cfg, params, max_slots=2, max_seq_len=32, paged=True)
-    assert not eng.runner.paged          # mamba mixer: dense fallback
+    assert eng.runner.paged              # virtual block accounting
+    assert eng.runner.kv.leaf_kinds() == {"state": 2}
+    assert not eng.runner.kv.any_pageable
+    assert eng.runner.has_dense_leaves
     out = eng.generate([[3, 1, 4, 1, 5]], max_new_tokens=4)[0]
     assert out == _naive_greedy(params, cfg, [3, 1, 4, 1, 5], 4)
 
@@ -545,15 +552,35 @@ def test_chunked_prefill_interleaves_with_decode():
         (2, 4) in eng.runner.chunk_shapes
 
 
-def test_chunked_prefill_gated_off_for_length_sensitive_archs():
-    """Recurrent state and sliding-window rings cannot take multi-token
-    cache-append steps; the knob degrades to whole-prompt prefill."""
-    for name in ("falcon-mamba-7b", "gemma2-2b"):
+def test_chunked_prefill_serves_ring_and_state_archs():
+    """Sliding-window rings and recurrent state take multi-token
+    cache-append chunks through the layout-polymorphic chunk program
+    (ring side-buffer / masked state scan) — the knob stays ON and
+    greedy outputs still match the whole-prompt reference, across
+    chunk boundaries (L < C, L == k*C, L % C != 0)."""
+    for name in ("falcon-mamba-7b", "gemma2-2b", "recurrentgemma-9b"):
         cfg = reduced_config(name)
         params = init_lm(jax.random.PRNGKey(0), cfg)
-        eng = Engine(cfg, params, max_slots=1, max_seq_len=32,
+        eng = Engine(cfg, params, max_slots=2, max_seq_len=32,
                      prefill_chunk=4)
-        assert eng.runner.prefill_chunk == 0, name
+        assert eng.runner.prefill_chunk == 4, name
+        for L in (3, 8, 9):
+            p = [(5 * i + 2) % cfg.vocab_size for i in range(L)]
+            out = eng.generate([p], max_new_tokens=5)[0]
+            ref = _naive_greedy(params, cfg, p, 5)
+            assert out == ref, (name, L, out, ref)
+
+
+def test_chunked_prefill_stays_off_for_moe():
+    """Capacity-based MoE routing is batch-global: a padded chunk row
+    would steal expert capacity from real tokens, so MoE configs keep
+    whole-prompt (exact-length) prefill."""
+    cfg = reduced_config("deepseek-v2-236b")
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_slots=1, max_seq_len=32,
+                 prefill_chunk=4)
+    assert eng.runner.prefill_chunk == 0
 
 
 # ---------------------------------------------------------------------------

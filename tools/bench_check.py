@@ -19,6 +19,9 @@ adding a new smoke never breaks the first CI run that records it):
   overload.completed                  higher is better
   overload.all_terminal               higher is better (boolean: every
                                       request reached a terminal state)
+  arch_{mla,window,ssm}.ttft_p50_ms   lower is better (architecture-zoo
+                                      smokes through the paged engine)
+  arch_{mla,window,ssm}.completed     higher is better
 
 Usage:
   python tools/bench_check.py BENCH_serving.json [--baseline-ref HEAD]
@@ -43,6 +46,12 @@ METRICS: Tuple[Tuple[str, bool], ...] = (
     ("speculate.tpot_speedup", True),
     ("overload.completed", True),
     ("overload.all_terminal", True),
+    ("arch_mla.ttft_p50_ms", False),
+    ("arch_mla.completed", True),
+    ("arch_window.ttft_p50_ms", False),
+    ("arch_window.completed", True),
+    ("arch_ssm.ttft_p50_ms", False),
+    ("arch_ssm.completed", True),
 )
 
 

@@ -1,0 +1,80 @@
+"""Generate the README architecture-support matrix from the capability
+table (`repro.serving.engine.arch_capabilities`) — the same single
+source of truth the engine's feature gates and the serve launcher's
+startup report use, so the documented matrix can never drift from the
+code.
+
+  PYTHONPATH=src python tools/support_matrix.py            # markdown
+  PYTHONPATH=src python tools/support_matrix.py --reasons  # + reason list
+
+The row set is every assigned architecture plus one PT config; the
+column set is the engine's feature gates.  Cells are 'yes' or 'fp
+fallback'/'no'; every 'no' has a recorded reason printed by --reasons
+(and by `python -m repro.launch.serve` at startup).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCH_NAMES, reduced_config
+from repro.serving.engine import arch_capabilities
+
+ROWS = ARCH_NAMES + ["pt-30b-d8"]
+COLS = ("paged", "chunked_prefill", "speculative", "prefix_cache",
+        "int8_kv", "fork")
+HEADER = {"paged": "paged", "chunked_prefill": "chunked",
+          "speculative": "speculative", "prefix_cache": "prefix cache",
+          "int8_kv": "int8 KV", "fork": "fork"}
+
+
+def _mixers(cfg) -> str:
+    kinds = []
+    for nm in cfg.layer_names:
+        s = cfg.spec(nm)
+        k = s.mixer + ("-win" if s.window is not None else "")
+        if s.cross_attn:
+            k += "+cross"
+        if k not in kinds:
+            kinds.append(k)
+    mlps = {cfg.spec(nm).mlp for nm in cfg.layer_names} - {"none"}
+    if "moe" in mlps:
+        kinds.append("moe")
+    return "/".join(kinds)
+
+
+def matrix_lines(with_reasons: bool = False) -> list:
+    lines = ["| architecture | mixers | " +
+             " | ".join(HEADER[c] for c in COLS) + " |",
+             "|---|---|" + ":---:|" * len(COLS)]
+    reasons: dict = {}
+    for name in ROWS:
+        cfg = reduced_config(name)
+        caps = arch_capabilities(cfg)
+        cells = []
+        for c in COLS:
+            if caps[c].supported:
+                cells.append("yes")
+            else:
+                cells.append("fp fallback" if c == "int8_kv" else "no")
+                reasons.setdefault(caps[c].reason, []).append(
+                    f"{name}:{c}")
+        lines.append(f"| {name} | {_mixers(cfg)} | " +
+                     " | ".join(cells) + " |")
+    if with_reasons:
+        lines.append("")
+        for why, cells in reasons.items():
+            lines.append(f"- **{', '.join(cells)}** — {why}")
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reasons", action="store_true",
+                    help="append the recorded reason behind every 'no'")
+    args = ap.parse_args()
+    for line in matrix_lines(args.reasons):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()
