@@ -543,6 +543,67 @@ def bench_overload(json_path: str | None = None) -> dict:
     return out
 
 
+def bench_pipelined(json_path: str | None = None) -> dict:
+    """Pipelined-engine smoke on a real reduced model: the same mixed
+    workload through ``pipeline_depth=0`` and ``pipeline_depth=1`` (with
+    pre-planned per-bucket programs), asserting bitwise-identical outputs
+    before recording the pipelined TPOT/TTFT next to the sync numbers.
+    On CPU the jitted step dominates so the wall-clock gain is modest —
+    the host-overhead headroom itself is what scheduler_overhead.py
+    measures — but this smoke keeps the REAL-model pipelined latency and
+    the parity bit on the per-commit record."""
+    import jax
+    import numpy as np
+    from repro.configs import reduced_config
+    from repro.launch import steps as steps_lib
+    from repro.serving.engine import Engine
+
+    cfg = reduced_config("tinyllama-1.1b")
+    fns = steps_lib.model_fns(cfg)
+    params = fns["init"](jax.random.PRNGKey(0), cfg)
+    S, bs = 96, 8
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, int(n)).tolist()
+               for n in rng.integers(4, 24, 8)]
+
+    def run(depth, preplan=False):
+        eng = Engine(cfg, params, max_slots=4, max_seq_len=S,
+                     block_size=bs, prefill_chunk=16,
+                     pipeline_depth=depth, preplan=preplan)
+        for p in prompts:            # compile warm-up on workload shapes
+            eng.submit(p, 8)
+        eng.run()
+        eng.metrics = type(eng.metrics)()
+        reqs = [eng.submit(p, 8) for p in prompts]
+        eng.run()
+        assert not eng._inflight
+        return [r.output for r in reqs], eng.metrics.summary()
+
+    sync_out, sync_m = run(0)
+    piped_out, piped_m = run(1, preplan=True)
+    assert piped_out == sync_out, "pipelined decode diverged from sync"
+    out = {
+        "requests": len(prompts),
+        "bitwise_equal_sync": piped_out == sync_out,
+        "completed": sum(len(o) > 0 for o in piped_out),
+        "tpot_ms": piped_m["tpot_ms"],
+        "ttft_ms": piped_m["ttft_ms"],
+        "sync_tpot_mean_ms": sync_m["tpot_ms"]["mean"],
+        "throughput_tok_s": piped_m["throughput_tok_s"],
+        "sync_throughput_tok_s": sync_m["throughput_tok_s"],
+        "steps_in_flight": piped_m["steps_in_flight"],
+        "dispatch_gap_ms": piped_m["dispatch_gap_ms"],
+    }
+    print(f"pipelined,bitwise_equal {out['bitwise_equal_sync']},"
+          f"tpot {out['sync_tpot_mean_ms']:.2f} -> "
+          f"{out['tpot_ms']['mean']:.2f} ms,"
+          f"inflight_peak {out['steps_in_flight']},"
+          f"dispatch_gap_p50 {out['dispatch_gap_ms']['p50']:.2f} ms")
+    if json_path:
+        _merge_json(json_path, "pipelined", out)
+    return out
+
+
 ARCH_SMOKES = {
     "mla": "deepseek-v2-236b",     # MLA latents paged through 3-D pools
     "window": "gemma2-2b",         # paged full layers + dense ring leaves
@@ -648,6 +709,9 @@ if __name__ == "__main__":
     ap.add_argument("--overload", action="store_true",
                     help="toy smoke, oversubscribed pool + mixed "
                     "priorities: preemption/resume/shed accounting")
+    ap.add_argument("--pipelined", action="store_true",
+                    help="toy smoke, pipelined (depth-1, pre-planned) vs "
+                    "sync engine loop: bitwise parity + pipelined TPOT")
     ap.add_argument("--arch", default=None, choices=sorted(ARCH_SMOKES),
                     help="architecture-zoo smoke: serve one reduced "
                     "MLA / sliding-window / SSM config through the "
@@ -662,7 +726,8 @@ if __name__ == "__main__":
                     help="merge smoke results into this JSON file")
     args = ap.parse_args()
     if (args.paged or args.contiguous or args.speculate or args.prefix
-            or args.fork or args.quantized or args.overload or args.arch):
+            or args.fork or args.quantized or args.overload or args.arch
+            or args.pipelined):
         if args.paged:
             bench_smoke(True, args.json)
         if args.contiguous:
@@ -677,6 +742,8 @@ if __name__ == "__main__":
             bench_quantized(args.json)
         if args.overload:
             bench_overload(args.json)
+        if args.pipelined:
+            bench_pipelined(args.json)
         if args.arch:
             bench_arch(args.arch, args.json)
     else:

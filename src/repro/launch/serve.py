@@ -60,6 +60,14 @@ def main() -> None:
                     help="serving weight dtype: int8 quantizes matmul "
                     "weights rowwise at engine load (norms/embeddings "
                     "stay fp)")
+    ap.add_argument("--pipeline-depth", type=int, default=0,
+                    help="async pipelined stepping: dispatch up to this "
+                    "many engine steps ahead of the packed device-to-"
+                    "host transfer (0 = classic blocking loop)")
+    ap.add_argument("--preplan", action="store_true",
+                    help="AOT-compile the per-bucket decode/verify step "
+                    "programs at engine build so the dispatch path "
+                    "never traces")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable content-addressed prefix caching "
                     "(on by default for paged full-attention configs)")
@@ -132,7 +140,12 @@ def main() -> None:
                  max_queue=args.max_queue,
                  watchdog_patience=args.watchdog_patience,
                  max_preemptions=args.max_preemptions,
-                 fault_plan=plan)
+                 fault_plan=plan,
+                 pipeline_depth=args.pipeline_depth,
+                 preplan=args.preplan)
+    if args.preplan:
+        print(f"[serve] pre-planned {eng.runner.plan_programs()} "
+              f"per-bucket step programs")
     # capabilities report: one line per feature, with the gating reason
     # whenever a feature this architecture can't serve (or a requested
     # knob the engine had to drop) — quantization fallbacks included

@@ -290,3 +290,25 @@ def make_verify_step(cfg: ModelConfig, par: Parallelism):
                              kv_max_len=kv_max_len)
 
     return verify
+
+
+def aot_compile(jitted, *args, **static_kwargs):
+    """Pre-plan one jitted program for a fixed input bucket: lower it
+    against the given example arguments (shapes/dtypes only — nothing
+    executes) and compile the executable ahead of time.  The returned
+    callable replays the ready program with the tracer, shape dispatch
+    and donation analysis all off the hot path; it must be called with
+    arguments of exactly the lowered shapes/dtypes, minus the static
+    kwargs (those are baked into the executable).
+
+    This is the serving engine's per-bucket "capture once, replay"
+    program cache (the CUDA-graph-per-batch-size pattern): the runner
+    plans one decode/spec executable per ``max_len`` bucket at startup
+    and dispatches through the plan, falling back to the ``jax.jit``
+    wrapper for unplanned shapes."""
+    structs = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype)
+        if not hasattr(x, "shape") or not hasattr(x, "dtype")
+        else jax.ShapeDtypeStruct(x.shape, x.dtype),
+        args)
+    return jitted.lower(*structs, **static_kwargs).compile()

@@ -110,9 +110,9 @@ from repro.serving.cache import (PagedKVCache, batch_axes, insert_rows,
                                  paged_insert_rows)
 from repro.serving.faults import FaultPlan, TransferFault
 from repro.serving.sampler import (SALT_DRAFT, SALT_SAMPLE, SampleParams,
-                                   accept_step, fork_seeds, prefill_keys,
-                                   row_keys, sample_rows, sample_step,
-                                   stack_params)
+                                   accept_step, advance_decode, advance_spec,
+                                   fork_seeds, prefill_keys, row_keys,
+                                   sample_rows, sample_step, stack_params)
 
 RECURRENT_MIXERS = ("mamba", "rglru")
 
@@ -211,6 +211,9 @@ class EngineMetrics:
         self.timed_out = 0
         self.watchdog_fires = 0
         self.transfer_faults = 0       # TransferFault steps retried
+        # pipelined stepping
+        self.dispatch_gaps: List[float] = []   # s between step dispatches
+        self.steps_in_flight = 0       # peak dispatched-but-unfetched steps
 
     def start(self) -> None:
         if self.t_start is None:
@@ -274,6 +277,8 @@ class EngineMetrics:
             "timed_out": self.timed_out,
             "watchdog_fires": self.watchdog_fires,
             "transfer_faults": self.transfer_faults,
+            "dispatch_gap_ms": pct(self.dispatch_gaps),
+            "steps_in_flight": self.steps_in_flight,
         }
 
 
@@ -603,6 +608,15 @@ class ModelRunner:
         if self.speculate_k:
             self._draft_fork = jax.jit(self._draft_fork_impl,
                                        donate_argnums=(0,))
+        # pipelined stepping: jitted device-carry composers — step N+1's
+        # (token, pos, counter, remaining) inputs computed from step N's
+        # packed result ON DEVICE, so consecutive steps chain without a
+        # host round-trip — plus the pre-planned (AOT-compiled)
+        # per-bucket step executables keyed by (kind, max_len bucket)
+        self._advance_decode = jax.jit(advance_decode)
+        self._advance_spec = jax.jit(advance_spec)
+        self._planned: Dict[Tuple[str, Optional[int]], Any] = {}
+        self.planned_hits = 0          # dispatches served pre-planned
         self._table_key = None             # (kv.version, active bytes)
         self._table_dev = None             # cached device block table
         self.prefill_shapes: set = set()   # observed (n_reqs, bucket)
@@ -865,7 +879,7 @@ class ModelRunner:
         real dead copy): the engine un-does no device state, it simply
         retries — the retry recomputes identical bytes into identical
         positions, so the fault is bitwise-transparent."""
-        if self.faults is not None and self.faults.take_transfer():
+        if self.faults is not None and self.faults.take_transfer(site):
             raise TransferFault(
                 f"injected device-to-host transfer failure at {site} "
                 f"(op {self.faults.transfer_calls - 1})")
@@ -1060,10 +1074,22 @@ class ModelRunner:
             p2 *= 2
         return min(self.kv.blocks_per_seq, p2) * bs
 
-    def decode(self, toks, pos, active, seeds, counts, temps, tks, tps,
-               eos, remaining) -> Tuple[np.ndarray, np.ndarray]:
-        """One decode step.  Exactly one host transfer: the packed
-        (token, done) array."""
+    # -- decode / speculative steps: dispatch + wait -------------------
+    #
+    # Every step is split into a DISPATCH (enqueue the jitted program,
+    # return immediately with a handle holding the still-on-device
+    # packed result) and a WAIT (the one host transfer).  The sync path
+    # is simply dispatch immediately followed by wait; the pipelined
+    # engine dispatches step N+1 before waiting on step N, composing
+    # N+1's inputs from N's device-resident packed result (``carry``).
+    # ``override`` marks lanes whose inputs must come from the host
+    # arrays instead (newly admitted / forked / re-assigned slots).
+
+    def dispatch_decode(self, toks, pos, active, seeds, counts, temps,
+                        tks, tps, eos, remaining, *, carry=None,
+                        override=None, extra_len: int = 0
+                        ) -> Dict[str, Any]:
+        """Dispatch one decode step; no host transfer happens here."""
         max_len = None
         if self.paged:
             # lanes not actively decoding (idle, or mid-chunked-prefill)
@@ -1073,27 +1099,54 @@ class ModelRunner:
             # the paged kernel sweeps only the live blocks.  Only the
             # Pallas path consumes the bound — the jnp reference path
             # stays a single compile (and bit-identical to the dense
-            # cache)
+            # cache).  ``extra_len`` widens the bound by the tokens
+            # in-flight steps may have advanced past the host mirror.
             if self.cfg.use_pallas:
-                max_len = self._live_max_len(pos, active)
+                max_len = self._live_max_len(pos, active, extra=extra_len)
         else:
             table = jnp.zeros((len(toks), 1), jnp.int32)
-        self.cache, packed = self._decode(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(active), table, jnp.asarray(seeds, jnp.uint32),
-            jnp.asarray(counts, jnp.int32), jnp.asarray(temps),
-            jnp.asarray(tks), jnp.asarray(tps), jnp.asarray(eos),
-            jnp.asarray(remaining), max_len=max_len)
+        tok_d, pos_d = jnp.asarray(toks), jnp.asarray(pos)
+        counts_d = jnp.asarray(counts, jnp.int32)
+        rem_d = jnp.asarray(remaining)
+        if carry is not None:
+            tok_d, pos_d, counts_d, rem_d = self._advance_decode(
+                carry["packed"], carry["tok"], carry["pos"],
+                carry["counts"], carry["remaining"],
+                jnp.asarray(override), tok_d, pos_d, counts_d, rem_d)
+        args = (self.params, self.cache, tok_d, pos_d,
+                jnp.asarray(active), table, jnp.asarray(seeds, jnp.uint32),
+                counts_d, jnp.asarray(temps), jnp.asarray(tks),
+                jnp.asarray(tps), jnp.asarray(eos), rem_d)
+        planned = self._planned.get(("decode", max_len))
+        if planned is not None:
+            self.cache, packed = planned(*args)
+            self.planned_hits += 1
+        else:
+            self.cache, packed = self._decode(*args, max_len=max_len)
+        return {"kind": "decode", "packed": packed, "tok": tok_d,
+                "pos": pos_d, "counts": counts_d, "remaining": rem_d,
+                "active": np.asarray(active, bool).copy()}
+
+    def wait_decode(self, handle: Dict[str, Any]
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """The one host transfer of a dispatched decode step."""
         self._maybe_inject_transfer("decode")
-        host = np.asarray(packed)                  # THE transfer
+        host = np.asarray(handle["packed"])        # THE transfer
         self.decode_transfers += 1
         return host[0], host[1].astype(bool)
 
-    def draft_verify(self, toks, pos, active, seeds, counts, temps, tks,
-                     tps) -> Tuple[np.ndarray, np.ndarray]:
-        """One speculative step for all decoding slots.  Exactly one host
-        transfer: the packed (tokens ‖ emitted-count) array.  Returns
-        (tokens [slots, K+1], counts [slots])."""
+    def decode(self, toks, pos, active, seeds, counts, temps, tks, tps,
+               eos, remaining) -> Tuple[np.ndarray, np.ndarray]:
+        """One synchronous decode step.  Exactly one host transfer: the
+        packed (token, done) array."""
+        return self.wait_decode(self.dispatch_decode(
+            toks, pos, active, seeds, counts, temps, tks, tps, eos,
+            remaining))
+
+    def dispatch_spec(self, toks, pos, active, seeds, counts, temps, tks,
+                      tps, *, carry=None, override=None,
+                      extra_len: int = 0) -> Dict[str, Any]:
+        """Dispatch one speculative (draft+verify) step; no transfer."""
         table = self._masked_table(active)
         # the verify gather bound mirrors the decode-kernel bound; the
         # jnp path skips it so verify logits stay bitwise-identical to
@@ -1101,17 +1154,88 @@ class ModelRunner:
         max_len = None
         if self.cfg.use_pallas:
             max_len = self._live_max_len(pos, active,
-                                         extra=self.speculate_k)
-        self.cache, self.draft_cache, packed = self._spec(
-            self.params, self.draft_params, self.cache, self.draft_cache,
-            jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(active), table,
-            jnp.asarray(seeds, jnp.uint32), jnp.asarray(counts, jnp.int32),
-            jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps),
-            max_len=max_len)
+                                         extra=self.speculate_k + extra_len)
+        tok_d, pos_d = jnp.asarray(toks), jnp.asarray(pos)
+        counts_d = jnp.asarray(counts, jnp.int32)
+        if carry is not None:
+            tok_d, pos_d, counts_d = self._advance_spec(
+                carry["packed"], carry["tok"], carry["pos"],
+                carry["counts"], jnp.asarray(override), tok_d, pos_d,
+                counts_d)
+        args = (self.params, self.draft_params, self.cache,
+                self.draft_cache, tok_d, pos_d, jnp.asarray(active), table,
+                jnp.asarray(seeds, jnp.uint32), counts_d,
+                jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps))
+        planned = self._planned.get(("spec", max_len))
+        if planned is not None:
+            self.cache, self.draft_cache, packed = planned(*args)
+            self.planned_hits += 1
+        else:
+            self.cache, self.draft_cache, packed = self._spec(
+                *args, max_len=max_len)
+        return {"kind": "spec", "packed": packed, "tok": tok_d,
+                "pos": pos_d, "counts": counts_d,
+                "active": np.asarray(active, bool).copy()}
+
+    def wait_spec(self, handle: Dict[str, Any]
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """The one host transfer of a dispatched speculative step."""
         self._maybe_inject_transfer("draft_verify")
-        host = np.asarray(packed)                  # THE transfer
+        host = np.asarray(handle["packed"])        # THE transfer
         self.decode_transfers += 1
         return host[:-1].T, host[-1]
+
+    def draft_verify(self, toks, pos, active, seeds, counts, temps, tks,
+                     tps) -> Tuple[np.ndarray, np.ndarray]:
+        """One synchronous speculative step for all decoding slots.
+        Exactly one host transfer: the packed (tokens ‖ emitted-count)
+        array.  Returns (tokens [slots, K+1], counts [slots])."""
+        return self.wait_spec(self.dispatch_spec(
+            toks, pos, active, seeds, counts, temps, tks, tps))
+
+    def plan_programs(self) -> int:
+        """Pre-plan the steady-state step programs: AOT-lower and
+        compile one decode (and, when speculating, one spec) executable
+        per ``max_len`` bucket, so dispatch replays a ready program with
+        the tracer entirely off the hot path — the CUDA-graph-per-
+        batch-size pattern of flashinfer-style runners.  Dispatch falls
+        back to the ``jax.jit`` wrapper for any unplanned shape.
+        Returns the number of planned executables."""
+        B = self.max_slots
+        toks = jnp.zeros((B,), jnp.int32)
+        pos = jnp.zeros((B,), jnp.int32)
+        active = jnp.zeros((B,), bool)
+        seeds = jnp.zeros((B,), jnp.uint32)
+        counts = jnp.zeros((B,), jnp.int32)
+        temps = jnp.zeros((B,), jnp.float32)
+        tks = jnp.zeros((B,), jnp.int32)
+        tps = jnp.ones((B,), jnp.float32)
+        eos = jnp.full((B,), -1, jnp.int32)
+        rem = jnp.zeros((B,), jnp.int32)
+        if self.paged:
+            table = jnp.zeros_like(jnp.asarray(self.kv.table_np))
+        else:
+            table = jnp.zeros((B, 1), jnp.int32)
+        # one variant per power-of-two live-block bound (pallas), else
+        # the single ``None`` variant the jnp path uses
+        variants: List[Optional[int]] = [None]
+        if self.paged and self.cfg.use_pallas:
+            bs, p2 = self.kv.block_size, 1
+            while p2 <= self.kv.blocks_per_seq:
+                variants.append(p2 * bs)
+                p2 *= 2
+        for max_len in variants:
+            if ("decode", max_len) not in self._planned:
+                self._planned[("decode", max_len)] = steps_lib.aot_compile(
+                    self._decode, self.params, self.cache, toks, pos,
+                    active, table, seeds, counts, temps, tks, tps, eos,
+                    rem, max_len=max_len)
+            if self.speculate_k and ("spec", max_len) not in self._planned:
+                self._planned[("spec", max_len)] = steps_lib.aot_compile(
+                    self._spec, self.params, self.draft_params, self.cache,
+                    self.draft_cache, toks, pos, active, table, seeds,
+                    counts, temps, tks, tps, max_len=max_len)
+        return len(self._planned)
 
 
 # ---------------------------------------------------------------------------
@@ -1131,22 +1255,33 @@ class Engine:
                  max_queue: Optional[int] = None,
                  watchdog_patience: int = 25,
                  max_preemptions: int = 8,
-                 fault_plan: Optional[FaultPlan] = None):
+                 fault_plan: Optional[FaultPlan] = None,
+                 pipeline_depth: int = 0, preplan: bool = False,
+                 runner: Optional[Any] = None):
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
-        self.runner = ModelRunner(cfg, params, max_slots=max_slots,
-                                  max_seq_len=max_seq_len, par=par,
-                                  min_bucket=min_bucket, paged=paged,
-                                  block_size=block_size,
-                                  num_blocks=num_blocks,
-                                  prefill_chunk=prefill_chunk,
-                                  speculate_k=speculate_k,
-                                  draft_tracks=draft_tracks,
-                                  prefix_cache=prefix_cache,
-                                  kv_dtype=kv_dtype,
-                                  weight_dtype=weight_dtype,
-                                  fault_plan=fault_plan)
+        if runner is not None:
+            # injected runner (e.g. the model-free StubRunner): anything
+            # implementing the ModelRunner host-facing surface serves —
+            # scheduler/pipeline semantics are testable in milliseconds
+            # without compiling a single jitted program
+            self.runner = runner
+        else:
+            self.runner = ModelRunner(cfg, params, max_slots=max_slots,
+                                      max_seq_len=max_seq_len, par=par,
+                                      min_bucket=min_bucket, paged=paged,
+                                      block_size=block_size,
+                                      num_blocks=num_blocks,
+                                      prefill_chunk=prefill_chunk,
+                                      speculate_k=speculate_k,
+                                      draft_tracks=draft_tracks,
+                                      prefix_cache=prefix_cache,
+                                      kv_dtype=kv_dtype,
+                                      weight_dtype=weight_dtype,
+                                      fault_plan=fault_plan)
+        if preplan:
+            self.runner.plan_programs()
         self.scheduler = Scheduler(max_slots, self.runner.bucket_for,
                                    max_waiting_prefill_tokens,
                                    charge_fn=self.runner.admission_charge)
@@ -1178,6 +1313,20 @@ class Engine:
         self._remaining = np.zeros((B,), np.int32)
         self._seeds = np.zeros((B,), np.uint32)    # per-request PRNG seed
         self._counts = np.zeros((B,), np.int32)    # tokens emitted so far
+
+        # pipelined stepping (pipeline_depth >= 1): dispatched steps
+        # whose packed transfer has not been waited on yet, oldest first.
+        # ``_host_fresh[slot]`` marks lanes whose host-side inputs are
+        # authoritative for the next dispatch (newly admitted / forked);
+        # carried lanes advance on device from the previous dispatch's
+        # packed result instead.  ``_slot_gen`` counts slot reassignments
+        # so an in-flight emission for a previous tenant (or a preempted-
+        # and-resumed tenant) of the slot is discarded, never applied.
+        self.pipeline_depth = pipeline_depth
+        self._inflight: deque = deque()
+        self._host_fresh = np.ones((B,), bool)
+        self._slot_gen = np.zeros((B,), np.int64)
+        self._last_dispatch_t: Optional[float] = None
 
     def capabilities(self) -> Dict[str, Dict[str, Any]]:
         """Unified feature report for this (architecture, engine-config)
@@ -1346,6 +1495,7 @@ class Engine:
                 # their finished chunks already)
                 kv.commit_tokens(slot, req.seq_tokens[:-1])
             kv.free_slot(slot)
+        self._slot_gen[slot] += 1      # in-flight emissions: discard
         self.scheduler.release(slot)
 
     def cancel(self, req: Request,
@@ -1479,6 +1629,7 @@ class Engine:
             # multi-turn follow-up or duplicate prompt reuses them
             kv.commit_tokens(slot, req.prompt + req.output[:-1])
             kv.free_slot(slot)                 # refcount drop -> pool
+        self._slot_gen[slot] += 1      # in-flight emissions: discard
         self.scheduler.release(slot)
         self.metrics.observe(req)
         self._event(req)
@@ -1532,6 +1683,7 @@ class Engine:
         self._active[slot] = True
         self._remaining[slot] = min(req.max_new_tokens, cap) - 1 - m
         self._counts[slot] = m + 1
+        self._host_fresh[slot] = True  # host lanes authoritative again
         self._emit(slot, req, int(tok))
         if (self._remaining[slot] <= 0
                 or (req.eos_id is not None and tok == req.eos_id)):
@@ -1557,6 +1709,7 @@ class Engine:
             if self.runner.paged:
                 self.runner.kv.free_slot(slot)     # idempotent rollback
             self._active[slot] = False
+            self._slot_gen[slot] += 1
             self.scheduler.release(slot)
             req.state = RequestState.QUEUED
             req.cached_prefix = 0
@@ -1796,6 +1949,11 @@ class Engine:
         cannot cover the children's uncommitted tails."""
         if not self.runner.paged:
             raise ValueError("fork requires the paged KV cache")
+        # fork reads exact host state (parent tokens, positions, block
+        # refcounts): apply every in-flight step first.  k pipelined
+        # steps + drain leave the same host state as k sync steps, so
+        # forked children diverge bitwise-identically in both modes.
+        self._drain_inflight()
         if parent.state is not RequestState.DECODE:
             raise ValueError("fork parent must be actively decoding")
         pslot = next(s for s, r in self.scheduler.active_slots()
@@ -1864,6 +2022,7 @@ class Engine:
             self._remaining[slot] = self._remaining[pslot]
             self._seeds[slot] = child_seeds[i]
             self._counts[slot] = self._counts[pslot]
+            self._host_fresh[slot] = True  # host lanes authoritative
             children.append(child)
         # paged leaves are shared through the block table; dense ring/
         # state leaves of the main cache are per-slot rows and need a
@@ -1878,11 +2037,14 @@ class Engine:
             self.metrics.max_active, len(self.scheduler.active_slots()))
         return children
 
-    def _cow(self, active: List[Tuple[int, Request]]) -> None:
+    def _cow(self, active: List[Tuple[int, Request]],
+             span: Optional[int] = None) -> None:
         """Copy-on-write gate before a decode/verify step: any block a
         slot is about to write while sharing it (fork siblings, live
         prefix-cache readers) is duplicated first, so the other readers
-        keep the original bytes.
+        keep the original bytes.  ``span`` widens the per-slot write
+        window past the host position mirror — the pipelined loop must
+        cover every position its in-flight steps may still write.
 
         Under block exhaustion (a fork storm about to diverge
         everywhere) the writer preempts equal-or-lower-priority decoders
@@ -1893,7 +2055,8 @@ class Engine:
         Pairs of a writer that got preempted mid-pass are dropped before
         the device copy: its swapped-in blocks returned to the pool, and
         copying into them could race a later writer's reuse."""
-        span = self.runner.speculate_k + 1   # verify writes pos..pos+K
+        if span is None:
+            span = self.runner.speculate_k + 1   # verify: pos..pos+K
         slot_pairs: List[Tuple[int, Request,
                                List[Tuple[int, int]]]] = []
         kv = self.runner.kv
@@ -1919,21 +2082,49 @@ class Engine:
                  if self.scheduler.slots[slot] is req for p in ps]
         self.runner.copy_blocks(pairs)
 
-    # ------------------------------------------------------------------
-    def _spec_step(self, active: List[Tuple[int, Request]]) -> None:
-        """One track-speculative step: every decoding slot advances by
-        1..K+1 tokens (per-slot variable acceptance).  EOS and the
-        remaining-budget cap are applied host-side on the packed result,
-        so a slot never advances past its reservation."""
-        toks_mat, counts = self.runner.draft_verify(
-            self._tok, self._pos, self._active, self._seeds, self._counts,
-            self._temps, self._topks, self._topps)
-        acc = prop = 0
-        K = self.runner.speculate_k
-        for slot, req in active:
+    # -- applying step results -----------------------------------------
+    #
+    # The device result of a decode / speculative step is applied to
+    # host state through exactly one routine per kind, shared by the
+    # synchronous and the pipelined loop — parity between the two modes
+    # is by construction, not by keeping two emission loops in sync.
+    # ``rows`` is the (slot, request, slot-generation) snapshot taken at
+    # dispatch: a row whose slot was released since (finish / cancel /
+    # preempt bumps the generation) is discarded, even if the same
+    # request was re-admitted into the same slot in between.
+
+    def _snap_rows(self, active: List[Tuple[int, Request]]
+                   ) -> List[Tuple[int, Request, int]]:
+        return [(s, r, int(self._slot_gen[s])) for s, r in active]
+
+    def _apply_decode(self, rows: List[Tuple[int, Request, int]],
+                      toks, done) -> int:
+        n = 0
+        for slot, req, gen in rows:
             if self.scheduler.slots[slot] is not req \
+                    or gen != self._slot_gen[slot] \
                     or req.state is not RequestState.DECODE:
-                continue           # cancelled/timed out from a callback
+                continue   # cancelled/finished/preempted since dispatch
+            tok = int(toks[slot])
+            self._emit(slot, req, tok)
+            self._tok[slot] = tok
+            self._pos[slot] += 1
+            self._counts[slot] += 1
+            self._remaining[slot] -= 1
+            if done[slot]:
+                self._finish(slot, req)
+            n += 1
+        return n
+
+    def _apply_spec(self, rows: List[Tuple[int, Request, int]],
+                    toks_mat, counts) -> int:
+        acc = prop = n = 0
+        K = self.runner.speculate_k
+        for slot, req, gen in rows:
+            if self.scheduler.slots[slot] is not req \
+                    or gen != self._slot_gen[slot] \
+                    or req.state is not RequestState.DECODE:
+                continue       # cancelled/timed out from a callback
             m = int(counts[slot])
             # acceptance accounting charges only proposals the slot
             # could actually use: the remaining-budget cap truncates the
@@ -1959,7 +2150,21 @@ class Engine:
             prop_eff = min(usable, emitted) if eos_stop else usable
             acc += min(emitted, m - 1, prop_eff)
             prop += prop_eff
+            n += 1
         self.metrics.observe_spec(acc, prop)
+        return n
+
+    # ------------------------------------------------------------------
+    def _spec_step(self, active: List[Tuple[int, Request]]) -> None:
+        """One synchronous track-speculative step: every decoding slot
+        advances by 1..K+1 tokens (per-slot variable acceptance).  EOS
+        and the remaining-budget cap are applied host-side on the packed
+        result, so a slot never advances past its reservation."""
+        rows = self._snap_rows(active)
+        toks_mat, counts = self.runner.draft_verify(
+            self._tok, self._pos, self._active, self._seeds, self._counts,
+            self._temps, self._topks, self._topps)
+        self._apply_spec(rows, toks_mat, counts)
 
     def step(self) -> int:
         """Expire deadlines, admit queued requests (preempting if a
@@ -1969,7 +2174,16 @@ class Engine:
         zero-progress step with work pending arms the stall watchdog.
         TransferFaults are absorbed here: the step simply retries next
         tick (recomputing bitwise-identical bytes), it never corrupts
-        host state or escapes to the caller."""
+        host state or escapes to the caller.
+
+        With ``pipeline_depth > 0`` the loop runs asynchronously: step
+        N+1 is dispatched before step N's host transfer is waited on,
+        and every scheduler decision overlaps device execution."""
+        if self.pipeline_depth > 0:
+            return self._step_pipelined()
+        return self._step_sync()
+
+    def _step_sync(self) -> int:
         t0 = time.perf_counter()
         if self.faults is not None:
             dt = self.faults.take_slow()
@@ -1992,25 +2206,18 @@ class Engine:
                 if self.runner.speculate_k:
                     self._spec_step(active)
                 else:
+                    rows = self._snap_rows(active)
                     toks, done = self.runner.decode(
                         self._tok, self._pos, self._active, self._seeds,
                         self._counts, self._temps, self._topks,
                         self._topps, self._eos, self._remaining)
-                    for slot, req in active:
-                        if self.scheduler.slots[slot] is not req \
-                                or req.state is not RequestState.DECODE:
-                            continue   # cancelled from a callback
-                        tok = int(toks[slot])
-                        self._emit(slot, req, tok)
-                        self._tok[slot] = tok
-                        self._pos[slot] += 1
-                        self._counts[slot] += 1
-                        self._remaining[slot] -= 1
-                        if done[slot]:
-                            self._finish(slot, req)
+                    self._apply_decode(rows, toks, done)
                 progress += len(active)
             except TransferFault:
                 self.metrics.transfer_faults += 1
+        return self._finish_step(t0, progress)
+
+    def _finish_step(self, t0: float, progress: int) -> int:
         self.steps_run += 1
         # step-time EMA for SLO admission estimates; alpha 0.2 forgets a
         # one-off compile spike within a few steps while tracking load
@@ -2024,6 +2231,133 @@ class Engine:
             if self._stalled_steps >= self.watchdog_patience:
                 self._watchdog_fire()
         return progress
+
+    # -- pipelined stepping --------------------------------------------
+
+    def _dispatch(self, active: List[Tuple[int, Request]]) -> None:
+        """Enqueue the next decode/spec program without any host
+        transfer.  When a step is already in flight, this step's inputs
+        are composed ON DEVICE from its still-unfetched packed result
+        (``carry``); lanes the host rewrote out-of-band since the last
+        dispatch (fresh admissions, fork children, preempt-resumes) or
+        that were inactive in the carried step take the host values
+        instead (``override``)."""
+        carry = self._inflight[-1]["handle"] if self._inflight else None
+        override = (None if carry is None
+                    else self._host_fresh | ~carry["active"])
+        rows = self._snap_rows(active)
+        spec = bool(self.runner.speculate_k)
+        # the host position mirror lags the device by the in-flight
+        # depth: widen the kernel's live-length bound to cover it
+        extra = len(self._inflight)
+        if spec:
+            handle = self.runner.dispatch_spec(
+                self._tok, self._pos, self._active, self._seeds,
+                self._counts, self._temps, self._topks, self._topps,
+                carry=carry, override=override,
+                extra_len=(self.runner.speculate_k + 1) * extra)
+        else:
+            handle = self.runner.dispatch_decode(
+                self._tok, self._pos, self._active, self._seeds,
+                self._counts, self._temps, self._topks, self._topps,
+                self._eos, self._remaining, carry=carry,
+                override=override, extra_len=extra)
+        now = time.perf_counter()
+        if self._last_dispatch_t is not None:
+            self.metrics.dispatch_gaps.append(now - self._last_dispatch_t)
+        self._last_dispatch_t = now
+        self._inflight.append({"handle": handle, "rows": rows,
+                               "spec": spec})
+        self.metrics.steps_in_flight = max(self.metrics.steps_in_flight,
+                                           len(self._inflight))
+        for s, _, _ in rows:
+            # from here the device carry chain is the truth for these
+            # lanes; host mirrors catch up when the result is applied
+            self._host_fresh[s] = False
+
+    def _process_oldest(self) -> int:
+        """Wait on the oldest in-flight step's packed transfer and apply
+        it.  A TransferFault leaves the entry at the queue head — the
+        retry next tick re-fetches the SAME device buffers, so the
+        stream stays bitwise-identical, just one step late — and
+        returns -1.  Otherwise returns the number of rows applied."""
+        entry = self._inflight[0]
+        try:
+            if entry["spec"]:
+                toks_mat, counts = self.runner.wait_spec(entry["handle"])
+            else:
+                toks, done = self.runner.wait_decode(entry["handle"])
+        except TransferFault:
+            self.metrics.transfer_faults += 1
+            return -1
+        self._inflight.popleft()
+        if entry["spec"]:
+            return self._apply_spec(entry["rows"], toks_mat, counts)
+        return self._apply_decode(entry["rows"], toks, done)
+
+    def _drain_inflight(self) -> None:
+        """Apply every in-flight step (fork and shutdown paths need
+        exact host state).  Bounded retries keep an injected transfer-
+        fault storm from hanging the drain forever."""
+        for _ in range(1000):
+            if not self._inflight:
+                return
+            self._process_oldest()
+        raise EngineStallError(
+            "pipeline drain: transfer-fault storm outlived its retry "
+            "budget", self.stall_diagnostic())
+
+    def _step_pipelined(self) -> int:
+        """One asynchronous engine step: all scheduler decisions
+        (deadlines, admission, chunked prefill, CoW gating, preemption)
+        run first — overlapping whatever step is still executing on the
+        device — then the next step is DISPATCHED, and only then is the
+        oldest in-flight transfer waited on.  Nothing happens between
+        dispatch and wait, so the device never idles on host work."""
+        t0 = time.perf_counter()
+        if self.faults is not None:
+            dt = self.faults.take_slow()
+            if dt > 0:
+                time.sleep(dt)         # injected slow step (chaos tests)
+        self._expire_deadlines()
+        progress = self._admit()
+        if self.runner.prefill_chunk:
+            progress += self._prefill_chunks()
+        self.metrics.max_active = max(
+            self.metrics.max_active, len(self.scheduler.active_slots()))
+        active = [(s, r) for s, r in self.scheduler.active_slots()
+                  if r.state is RequestState.DECODE]
+        if self.runner.paged and active:
+            # widen the CoW window to every position the in-flight
+            # steps plus this one may write past the host mirror
+            span = ((self.runner.speculate_k + 1)
+                    * (len(self._inflight) + 1))
+            self._cow(active, span=span)
+            active = [(s, r) for s, r in active
+                      if self.scheduler.slots[s] is r]
+        dispatched = False
+        # backpressure: a transfer-fault retry keeps the queue over
+        # depth — don't dispatch on top of it, drain first
+        if active and len(self._inflight) <= self.pipeline_depth:
+            self._dispatch(active)
+            dispatched = True
+            progress += len(active)    # a dispatched step IS forward
+                                       # progress: the watchdog must not
+                                       # fire on work already running
+        processed_any = False
+        while len(self._inflight) > self.pipeline_depth:
+            r = self._process_oldest()
+            if r < 0:
+                break                  # fault: retry next tick
+            processed_any = True
+            if not dispatched:
+                progress += r
+        if not dispatched and not processed_any and self._inflight:
+            # tail drain: no new work to dispatch, finish what's there
+            r = self._process_oldest()
+            if r > 0:
+                progress += r
+        return self._finish_step(t0, progress)
 
     def _watchdog_fire(self) -> None:
         """No forward progress for ``watchdog_patience`` consecutive
@@ -2074,6 +2408,7 @@ class Engine:
             "preemptions": self.metrics.preemptions,
             "watchdog_fires": self.metrics.watchdog_fires,
             "transfer_faults": self.metrics.transfer_faults,
+            "steps_in_flight": len(self._inflight),
         }
         if self.runner.paged:
             kv = self.runner.kv
@@ -2097,10 +2432,11 @@ class Engine:
         True`` to return silently instead (engine state stays intact and
         ``run`` can simply be called again)."""
         for _ in range(max_steps):
-            if not self.scheduler.has_work():
+            if not self.scheduler.has_work() and not self._inflight:
                 return
             self.step()
-        if self.scheduler.has_work() and not allow_incomplete:
+        if ((self.scheduler.has_work() or self._inflight)
+                and not allow_incomplete):
             raise EngineStallError(
                 f"engine stalled: {max_steps} steps exhausted with "
                 f"{len(self.scheduler.queue)} queued and "

@@ -67,6 +67,11 @@ class FaultPlan:
         self.slow_calls = 0
         self.injected = 0
         self.events: List[Tuple[str, int]] = []
+        # labeled transfer-fault sites: (op_index, label) per injected
+        # transfer fault, so tests can assert WHERE a fault surfaced —
+        # in the pipelined engine that is the wait on the *completing*
+        # step (one step after its dispatch), never the dispatch itself
+        self.transfer_sites: List[Tuple[int, str]] = []
 
     # -- internals ------------------------------------------------------
     def _spent(self) -> bool:
@@ -93,14 +98,18 @@ class FaultPlan:
             return self._fire("alloc", op)
         return False
 
-    def take_transfer(self) -> bool:
-        """One host-transfer-site call; True => raise TransferFault."""
+    def take_transfer(self, label: Optional[str] = None) -> bool:
+        """One host-transfer-site call; True => raise TransferFault.
+        ``label`` names the site (e.g. ``"decode"``, ``"decode_wait"``)
+        purely for ``transfer_sites`` — it never affects the schedule,
+        which stays a pure function of seed + call sequence."""
         op = self.transfer_calls
         self.transfer_calls += 1
         roll = self._rng.random() < self.transfer_p
         if self._spent():
             return False
         if op in self.transfer_ops or roll:
+            self.transfer_sites.append((op, label or "transfer"))
             return self._fire("transfer", op)
         return False
 

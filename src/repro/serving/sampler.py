@@ -190,6 +190,58 @@ def sample_step(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# pipelined stepping: device-side carry of the next step's inputs
+# ---------------------------------------------------------------------------
+#
+# When the engine dispatches step N+1 while step N's packed transfer is
+# still in flight, the host does not yet know step N's sampled tokens —
+# but the DEVICE does: they are row 0 of the packed array.  These helpers
+# compute step N+1's inputs from step N's packed result without a host
+# round-trip, so consecutive steps chain device-to-device.  ``override``
+# marks lanes whose host-side values are authoritative instead (newly
+# admitted / forked / re-assigned slots): their inputs come from the
+# h_* arrays, carried lanes advance from the packed result.
+
+
+def advance_decode(packed: jax.Array, tok: jax.Array, pos: jax.Array,
+                   counts: jax.Array, remaining: jax.Array,
+                   override: jax.Array, h_tok: jax.Array, h_pos: jax.Array,
+                   h_counts: jax.Array, h_remaining: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Next plain-decode inputs from the previous step's ``packed``
+    [2, B] result: carried lanes feed packed[0] (the sampled token) back
+    as the next input token and advance pos/counter by one, remaining by
+    minus one — exactly what the host-side emission loop will compute
+    once the transfer lands."""
+    n_tok = jnp.where(override, h_tok, packed[0])
+    n_pos = jnp.where(override, h_pos, pos + 1)
+    n_counts = jnp.where(override, h_counts, counts + 1)
+    n_rem = jnp.where(override, h_remaining, remaining - 1)
+    return n_tok, n_pos, n_counts, n_rem
+
+
+def advance_spec(packed: jax.Array, tok: jax.Array, pos: jax.Array,
+                 counts: jax.Array, override: jax.Array, h_tok: jax.Array,
+                 h_pos: jax.Array, h_counts: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Next speculative-step inputs from the previous step's ``packed``
+    [K+2, B] result (rows 0..K emitted tokens, row K+1 the per-slot
+    emitted count m).  The spec advance is data-dependent — a lane moves
+    1..K+1 tokens — so carried lanes take token packed[m-1] (the last
+    emitted) and advance pos/counter by m; a lane with m == 0 (inactive
+    last step) keeps its previous values."""
+    K1 = packed.shape[0] - 1               # K+1 token rows
+    m = packed[-1]                         # [B] emitted counts
+    idx = jnp.clip(m - 1, 0, K1 - 1)
+    last = jnp.take_along_axis(packed[:-1], idx[None, :], axis=0)[0]
+    c_tok = jnp.where(m > 0, last, tok)
+    n_tok = jnp.where(override, h_tok, c_tok)
+    n_pos = jnp.where(override, h_pos, pos + m)
+    n_counts = jnp.where(override, h_counts, counts + m)
+    return n_tok, n_pos, n_counts
+
+
+# ---------------------------------------------------------------------------
 # speculative decoding: batched accept / resample
 # ---------------------------------------------------------------------------
 

@@ -323,3 +323,92 @@ def test_every_request_terminates_under_block_exhaustion_chaos():
     assert done == m["requests"]
     assert (done + m["rejected"] + m["shed"] + m["cancelled"]
             + m["timed_out"]) == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# in-flight step semantics (pipelined loop)
+# ---------------------------------------------------------------------------
+
+def test_pipelined_transfer_fault_bounces_completing_step():
+    """With steps in flight, an injected transfer fault surfaces at the
+    WAIT on the completing step — one step after its dispatch.  The
+    retry re-fetches the same device buffers, so the stream is bitwise
+    what the fault-free run produces, just one step late."""
+    cfg, params = _tinyllama()
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(1, cfg.vocab_size, 12).tolist()
+
+    def run(plan, depth):
+        eng = Engine(cfg, params, max_slots=2, max_seq_len=32,
+                     block_size=8, fault_plan=plan, pipeline_depth=depth)
+        req = eng.submit(prompt, 8)
+        eng.run()
+        return req, eng
+
+    ref, _ = run(None, 0)
+    assert ref.state is RequestState.DONE
+    plan = FaultPlan(transfer_ops=frozenset({2, 5}))
+    faulted, eng = run(plan, 1)
+    assert faulted.state is RequestState.DONE
+    assert faulted.output == ref.output
+    assert eng.metrics.summary()["transfer_faults"] == 2
+    # both faults fired at the decode WAIT site, never at dispatch
+    assert [lbl for _, lbl in plan.transfer_sites] == ["decode"] * 2
+    eng.runner.kv.check_invariants()
+    assert not eng._inflight
+
+
+def test_cancel_discards_in_flight_emission():
+    """Cancelling a request whose next step is already dispatched must
+    drop that step's emission for it: the output ends where the cancel
+    saw it, and the pool returns to empty."""
+    from tests.stub_runner import stub_engine
+    eng, runner = stub_engine(max_slots=2, num_blocks=32,
+                              pipeline_depth=1)
+    req = eng.submit([1, 2, 3], 16)
+    other = eng.submit([4, 5, 6], 6)
+    for _ in range(3):
+        eng.step()
+    assert req.state is RequestState.DECODE
+    assert len(eng._inflight) == 1      # req's next token is in flight
+    seen = len(req.output)
+    assert eng.cancel(req)
+    eng.run()
+    assert req.state is RequestState.CANCELLED
+    assert len(req.output) == seen      # in-flight emission discarded
+    assert other.state is RequestState.DONE
+    assert len(other.output) == 6       # bystander unaffected
+    runner.kv.check_invariants()
+    assert runner.kv.utilization()["used_blocks"] == 0
+
+
+def test_deadline_expiry_discards_in_flight_emission():
+    import time as _time
+    from tests.stub_runner import stub_engine
+    eng, runner = stub_engine(max_slots=2, num_blocks=32,
+                              pipeline_depth=1)
+    req = eng.submit([1, 2, 3], 32, deadline_s=0.05)
+    for _ in range(3):
+        eng.step()
+    assert req.state is RequestState.DECODE
+    assert len(eng._inflight) == 1
+    seen = len(req.output)
+    _time.sleep(0.06)                  # deadline passes mid-flight
+    eng.run(max_steps=50, allow_incomplete=True)
+    assert req.state is RequestState.TIMED_OUT
+    assert len(req.output) == seen     # in-flight emission discarded
+    runner.kv.check_invariants()
+    assert runner.kv.utilization()["used_blocks"] == 0
+
+
+def test_watchdog_counts_in_flight_steps_as_progress():
+    """A step that only DISPATCHES (pipeline still filling, nothing to
+    apply yet) is forward progress: the watchdog must not fire on work
+    the device is already running — even at patience 1."""
+    from tests.stub_runner import stub_engine
+    eng, _ = stub_engine(max_slots=2, num_blocks=32, pipeline_depth=2,
+                         watchdog_patience=1)
+    reqs = [eng.submit([i + 1] * 3, 6) for i in range(3)]
+    eng.run()
+    assert all(r.state is RequestState.DONE for r in reqs)
+    assert eng.metrics.watchdog_fires == 0

@@ -1,0 +1,124 @@
+"""Pure-scheduling semantics on the model-free StubRunner: admission
+order, preemption victim choice, SLO reject-on-arrival, watchdog firing
+and bounded-queue shedding — none of which need (or compile) a single
+jitted program — plus the pipelined loop's trace-level contract that no
+scheduler decision runs between a dispatch and its transfer-wait."""
+import numpy as np
+import pytest
+
+from repro.serving.engine import RequestState
+from repro.serving.faults import FaultPlan
+
+from tests.stub_runner import stub_engine, stub_token
+
+
+def test_stub_outputs_are_the_deterministic_hash_stream():
+    eng, _ = stub_engine(max_slots=2)
+    req = eng.submit([1, 2, 3], 5, seed=123)
+    eng.run()
+    assert req.state is RequestState.DONE
+    assert req.output == [stub_token(123, i, 64) for i in range(5)]
+
+
+def test_admission_is_fcfs_without_priorities():
+    eng, _ = stub_engine(max_slots=2, num_blocks=64)
+    reqs = [eng.submit([i + 1] * 3, 4) for i in range(6)]
+    eng.run()
+    assert all(r.state is RequestState.DONE for r in reqs)
+    # first-token stamps must be non-decreasing in submission order:
+    # nobody jumps the queue
+    stamps = [r.t_first for r in reqs]
+    assert stamps == sorted(stamps)
+
+
+def test_preemption_picks_lowest_priority_most_recent_victim():
+    eng, _ = stub_engine(max_slots=2, num_blocks=64)
+    old_low = eng.submit([1, 2], 30, priority=0)
+    new_low = eng.submit([3, 4], 30, priority=0)
+    eng.step()                     # both decoding, all slots busy
+    assert old_low.state is RequestState.DECODE
+    assert new_low.state is RequestState.DECODE
+    high = eng.submit([5, 6], 4, priority=2)
+    eng.run()
+    assert high.state is RequestState.DONE
+    # the victim is the most recently submitted of the lowest-priority
+    # decoders — never the older peer
+    assert new_low.preemptions >= 1
+    assert old_low.preemptions == 0
+    assert new_low.state is RequestState.DONE   # resumed and finished
+    assert old_low.state is RequestState.DONE
+
+
+def test_slo_rejects_unmeetable_deadline_on_arrival():
+    eng, _ = stub_engine(max_slots=2, num_blocks=64,
+                         step_time_s=0.002)
+    for _ in range(3):
+        eng.submit([1, 2, 3], 8)
+    for _ in range(5):
+        eng.step()                 # prime the step-time EMA
+    assert eng._step_ema is not None and eng._step_ema > 0
+    late = eng.submit([4, 5, 6], 32, deadline_s=1e-6)
+    assert late.state is RequestState.REJECTED
+    assert late.finish_reason.startswith("unmeetable_deadline")
+
+
+def test_watchdog_sheds_head_under_allocation_fault_storm():
+    plan = FaultPlan(alloc_p=1.0)  # every allocation fails, forever
+    eng, _ = stub_engine(max_slots=2, num_blocks=16, fault_plan=plan,
+                         watchdog_patience=3)
+    req = eng.submit([1, 2, 3], 4)
+    eng.run(max_steps=50, allow_incomplete=True)
+    assert eng.metrics.watchdog_fires >= 1
+    assert req.state is RequestState.REJECTED
+    assert req.finish_reason.startswith("watchdog")
+
+
+def test_bounded_queue_sheds_overload_on_submit():
+    eng, _ = stub_engine(max_slots=1, num_blocks=64, max_queue=2)
+    kept = [eng.submit([1, 2], 3) for _ in range(2)]  # fills the queue
+    shed = eng.submit([3, 4], 3)
+    assert shed.state is RequestState.REJECTED
+    assert "queue full" in shed.finish_reason
+    eng.run()
+    assert all(r.state is RequestState.DONE for r in kept)
+
+
+# ---------------------------------------------------------------------------
+# pipelined dispatch contract
+# ---------------------------------------------------------------------------
+
+def test_no_scheduler_decision_between_dispatch_and_wait():
+    """In the pipelined loop all scheduler work (admission, CoW checks,
+    pool mutations) runs BEFORE the dispatch; the transfer-wait follows
+    the dispatch immediately.  The only dispatch not chased by a wait is
+    the pipeline-filling first one — there is nothing in flight yet to
+    overlap."""
+    eng, runner = stub_engine(max_slots=3, num_blocks=64,
+                              pipeline_depth=1)
+    reqs = [eng.submit([i + 1] * 4, 8) for i in range(5)]
+    eng.run()
+    assert all(r.state is RequestState.DONE for r in reqs)
+    tr = runner.trace
+    dispatches = [i for i, ev in enumerate(tr) if ev[0] == "dispatch"]
+    waits = [i for i, ev in enumerate(tr) if ev[0] == "wait"]
+    assert len(dispatches) >= 3
+    assert len(waits) == len(dispatches)   # every step's transfer lands
+    for i in dispatches[1:]:
+        assert tr[i + 1][0] == "wait", (
+            f"scheduler event {tr[i + 1]} ran between dispatch and "
+            f"transfer-wait at trace index {i}")
+
+
+def test_sync_loop_interleaves_dispatch_and_wait_back_to_back():
+    """Control: with pipeline_depth=0 every dispatch is chased by its
+    own wait (the classic blocking loop), so there is never a step in
+    flight across scheduler work."""
+    eng, runner = stub_engine(max_slots=3, num_blocks=64)
+    [eng.submit([i + 1] * 4, 8) for i in range(5)]
+    eng.run()
+    tr = runner.trace
+    for i, ev in enumerate(tr):
+        if ev[0] == "dispatch":
+            assert tr[i + 1][0] == "wait"
+    assert eng.metrics.steps_in_flight == 0
+    assert not eng._inflight

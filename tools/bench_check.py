@@ -22,6 +22,15 @@ adding a new smoke never breaks the first CI run that records it):
   arch_{mla,window,ssm}.ttft_p50_ms   lower is better (architecture-zoo
                                       smokes through the paged engine)
   arch_{mla,window,ssm}.completed     higher is better
+  scheduler.steps_per_sec             higher is better (stub host loop,
+                                      pipelined)
+  scheduler.pipelined_speedup         higher is better (pipelined vs
+                                      sync stub steps/sec)
+  pipelined.tpot_ms.mean              lower is better (real-model
+                                      pipelined smoke)
+  pipelined.completed                 higher is better
+  pipelined.bitwise_equal_sync        higher is better (boolean: the
+                                      pipelined outputs matched sync)
 
 Usage:
   python tools/bench_check.py BENCH_serving.json [--baseline-ref HEAD]
@@ -52,6 +61,11 @@ METRICS: Tuple[Tuple[str, bool], ...] = (
     ("arch_window.completed", True),
     ("arch_ssm.ttft_p50_ms", False),
     ("arch_ssm.completed", True),
+    ("scheduler.steps_per_sec", True),
+    ("scheduler.pipelined_speedup", True),
+    ("pipelined.tpot_ms.mean", False),
+    ("pipelined.completed", True),
+    ("pipelined.bitwise_equal_sync", True),
 )
 
 
